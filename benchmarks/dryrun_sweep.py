@@ -1,0 +1,90 @@
+"""Sweep driver: run every (arch × shape × mesh) dry-run cell as a
+subprocess (one compile per process keeps XLA state isolated and makes the
+sweep resumable — already-recorded cells are skipped).
+
+    PYTHONPATH=src python -m benchmarks.dryrun_sweep --out dryrun_results.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "qwen3_1_7b", "mamba2_130m", "chatglm3_6b", "starcoder2_7b",
+    "minicpm_2b", "whisper_medium", "mixtral_8x22b", "chameleon_34b",
+    "zamba2_7b", "deepseek_v3_671b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def done_cells(path):
+    done = set()
+    if os.path.exists(path):
+        for line in open(path):
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("status") in ("ok", "skipped"):
+                done.add((r["arch"], r["shape"], r["mesh"],
+                          r.get("extra") or None))
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--only-mesh", default="", choices=["", "single", "multi"])
+    args = ap.parse_args()
+
+    cells = []
+    for multi in (False, True):
+        if args.only_mesh == "single" and multi:
+            continue
+        if args.only_mesh == "multi" and not multi:
+            continue
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape, multi))
+
+    done = done_cells(args.out)
+    todo = [(a, s, m) for (a, s, m) in cells
+            if (a.replace("_", "-"), s, "2x16x16" if m else "16x16", None)
+            not in done and (a, s, "2x16x16" if m else "16x16", None) not in done]
+    print(f"{len(todo)}/{len(cells)} cells to run → {args.out}", flush=True)
+
+    for i, (arch, shape, multi) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", args.out]
+        if multi:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            tail = (p.stdout or "").strip().splitlines()
+            status = "?"
+            if tail:
+                try:
+                    status = json.loads(open(args.out).readlines()[-1]).get("status")
+                except Exception:
+                    status = tail[-1][:120]
+        except subprocess.TimeoutExpired:
+            with open(args.out, "a") as f:
+                f.write(json.dumps({
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if multi else "16x16",
+                    "status": "timeout"}) + "\n")
+            status = "timeout"
+        print(f"[{i+1}/{len(todo)}] {arch} {shape} "
+              f"{'multi' if multi else 'single'} → {status} "
+              f"({time.time()-t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Roofline table builder: reads dryrun_results.jsonl → EXPERIMENTS tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--in dryrun_results.jsonl]
+
+Prints (and returns) the §Roofline table: per (arch × shape × mesh) the
+three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, memory fit,
+and a one-line "what would move the dominant term" recommendation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+HBM_PER_CHIP = 16e9  # TPU v5e
+
+RECOMMENDATION = {
+    ("memory_s", "train"): "flash-attention kernel (keep S² scores in VMEM)",
+    ("memory_s", "prefill"): "flash-attention kernel (keep S² scores in VMEM)",
+    ("memory_s", "decode"): "shard/partition KV cache reads; fuse cache update",
+    ("compute_s", "train"): "reduce remat recompute; MXU-align tile shapes",
+    ("compute_s", "prefill"): "MXU-align attention tiles",
+    ("compute_s", "decode"): "batch more requests per step",
+    ("collective_s", "train"): "sequence-parallel RS/AG instead of TP all-reduce; overlap with compute",
+    ("collective_s", "prefill"): "sequence-parallel RS/AG; overlap",
+    ("collective_s", "decode"): "cache-aligned shardings (avoid repartition gathers)",
+}
+
+
+def load(path: str) -> List[Dict]:
+    out = []
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        out.append(r)
+    # keep last record per cell (sweeps may be re-run)
+    seen = {}
+    for r in out:
+        seen[(r["arch"], r["shape"], r["mesh"], r.get("extra"))] = r
+    return list(seen.values())
+
+
+def kind_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def table(recs: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok" or r["mesh"] != mesh or r.get("extra"):
+            continue
+        t = r["roofline"]
+        m = r["memory"]
+        dom = r["dominant"]
+        total = t["compute_s"] + t["memory_s"] + t["collective_s"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": dom,
+            "bound_frac": t[dom] / max(total, 1e-12),
+            "useful_ratio": r.get("useful_flops_ratio"),
+            "peak_gb": m["peak_bytes"] / 1e9,
+            "tpu_adj_gb": m["tpu_adjusted_bytes"] / 1e9,
+            "fits": m["tpu_adjusted_bytes"] <= HBM_PER_CHIP,
+            "fix": RECOMMENDATION[(dom, kind_of(r["shape"]))],
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="dryrun_results.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = table(load(args.inp), mesh=args.mesh)
+    hdr = (f"{'arch':<18}{'shape':<12}{'comp_s':>8}{'mem_s':>9}{'coll_s':>8}"
+           f"{'dominant':>13}{'useful':>7}{'tpuGB':>7} fit")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:<18}{r['shape']:<12}{r['compute_s']:>8.3f}"
+              f"{r['memory_s']:>9.3f}{r['collective_s']:>8.3f}"
+              f"{r['dominant']:>13}{(r['useful_ratio'] or 0):>7.3f}"
+              f"{r['tpu_adj_gb']:>7.1f} {'OK' if r['fits'] else 'OVER'}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--no-device]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * the paper's five benchmarks (Figs 3–7), host (paper-faithful) and
+    device (TPU-native) implementations, n in [5, N];
+  * roofline summary rows derived from the dry-run artifacts (if
+    dryrun_results.jsonl exists): per-cell dominant-term seconds.
+
+``--full`` extends n to the paper's full 18 (minutes of runtime);
+default stops at 12 to keep the harness fast.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-device", action="store_true")
+    ap.add_argument("--results", default="dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    from benchmarks.paper_benchmarks import run_all
+
+    n_hi = 18 if args.full else 12
+    print("name,us_per_call,derived")
+    rows = run_all(5, n_hi, device=not args.no_device)
+    for r in rows:
+        name = f"{r['bench']}[{r['impl']},n={r['n']}]"
+        us = r["seconds"] * 1e6
+        derived = f"nnz={r['nnz']};ns_per_nnz={1e9 * r['seconds'] / r['nnz']:.1f}"
+        print(f"{name},{us:.1f},{derived}")
+
+    if os.path.exists(args.results):
+        from benchmarks.roofline import load, table
+        for mesh in ("16x16", "2x16x16"):
+            for row in table(load(args.results), mesh=mesh):
+                name = f"roofline[{row['arch']},{row['shape']},{mesh}]"
+                us = row[row["dominant"]] * 1e6
+                derived = (f"dominant={row['dominant']};"
+                           f"useful={row['useful_ratio']:.3f};"
+                           f"tpu_gb={row['tpu_adj_gb']:.1f};"
+                           f"fits={'Y' if row['fits'] else 'N'}")
+                print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Serving example: batched prefill + decode with static caches.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-130m]
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in args):
+        args = ["--arch", "mamba2-130m"] + args
+    args += ["--smoke", "--batch", "4", "--prompt-len", "16", "--gen", "32"]
+    raise SystemExit(serve_main(args))

@@ -1,0 +1,8 @@
+"""repro — D4M (Dynamic Distributed Dimensional Data Model) on JAX/TPU.
+
+Reproduction + TPU-native extension of Jananthan et al., "Python
+Implementation of the Dynamic Distributed Dimensional Data Model"
+(IEEE HPEC 2022).  See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "0.1.0"

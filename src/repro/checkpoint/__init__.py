@@ -1,0 +1,5 @@
+"""repro.checkpoint — async save / restore / elastic reshard."""
+from .checkpoint import (CheckpointManager, restore_checkpoint,
+                         save_checkpoint)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

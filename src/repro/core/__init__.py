@@ -1,0 +1,23 @@
+"""repro.core — the paper's contribution: D4M associative arrays in JAX.
+
+* ``Assoc``        — paper-faithful host implementation (numpy/scipy).
+* ``AssocTensor``  — TPU-native device implementation (padded COO, semirings).
+* ``KeySpace``     — host key dictionaries backing device rank arrays.
+* ``Semiring``     — the value algebras (⊕, ⊗, 0, 1).
+* ``DistAssoc``    — mesh-sharded associative arrays (the Distributed D).
+"""
+from .assoc import Assoc
+from .assoc_tensor import AssocTensor
+from .keyspace import KeySpace
+from .semiring import (AND_OR, MAX_MIN, MAX_PLUS, MAX_TIMES, MIN_PLUS,
+                       PLUS_TIMES, STRING, Semiring, get_semiring)
+from .sorted_ops import (INT_SENTINEL, sorted_intersect,
+                         sorted_intersect_padded, sorted_union,
+                         sorted_union_padded)
+
+__all__ = [
+    "Assoc", "AssocTensor", "KeySpace", "Semiring", "get_semiring",
+    "PLUS_TIMES", "MAX_PLUS", "MIN_PLUS", "MAX_MIN", "MAX_TIMES", "AND_OR",
+    "STRING", "INT_SENTINEL", "sorted_union", "sorted_intersect",
+    "sorted_union_padded", "sorted_intersect_padded",
+]

@@ -1,0 +1,564 @@
+"""Paper-faithful host implementation of D4M associative arrays.
+
+This module reproduces §II of the paper exactly: an associative array ``A``
+is stored via four attributes,
+
+* ``A.row`` — sorted unique row keys with nonempty entries (1-D numpy array),
+* ``A.col`` — sorted unique column keys (1-D numpy array),
+* ``A.val`` — the float ``1.0`` (numeric case) **or** the sorted unique
+  nonempty values (string case),
+* ``A.adj`` — a ``scipy.sparse`` matrix of shape ``(len(row), len(col))``;
+  in the string case entries are **1-based** pointers into ``A.val``
+  (``A[A.row[i], A.col[j]] == A.val[k]  ⟺  A.adj[i, j] == k + 1``).
+
+Algebra follows the paper's approach: element-wise addition re-indexes both
+operands onto the *sorted union* of key sets and defers to
+``scipy.sparse`` addition; element-wise multiplication restricts to the
+*sorted intersection*; array multiplication contracts over
+``A.col ∩ B.row`` with native CSR matmul; ``condense()`` drops empty
+rows/cols via CSR/CSC ``indptr`` diffs; ``logical()`` replaces nonempty
+entries with 1.
+
+This host class is the **reproduction baseline** benchmarked against the
+paper's Figs 3–7; the TPU-native ``AssocTensor`` lives in
+``assoc_tensor.py``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional, Sequence, Tuple, Union
+
+import numpy as np
+import scipy.sparse as sp
+
+from .sorted_ops import sorted_intersect, sorted_union
+
+__all__ = ["Assoc", "is_string_array"]
+
+KeyLike = Union[str, float, int, Sequence, np.ndarray, slice]
+
+# D4M string-list convention: a string whose final character is a separator
+# encodes a list, e.g. "a,b,c," == ["a","b","c"];  "a,:,b," is a range.
+_SEPARATORS = (",", ";", "\t", "|")
+
+
+def _is_str_kind(arr: np.ndarray) -> bool:
+    return arr.dtype.kind in ("U", "S", "O")
+
+
+def is_string_array(arr: np.ndarray) -> bool:
+    return _is_str_kind(np.asarray(arr))
+
+
+def _sanitize_keys(keys) -> np.ndarray:
+    """Coerce a key argument to a 1-D numpy array of str or float."""
+    if isinstance(keys, str):
+        keys = _split_string_list(keys)
+    arr = np.asarray(keys)
+    if arr.ndim == 0:
+        arr = arr.reshape(1)
+    if _is_str_kind(arr):
+        return arr.astype(str)
+    return arr.astype(np.float64)
+
+
+def _split_string_list(s: str):
+    if len(s) > 0 and s[-1] in _SEPARATORS:
+        sep = s[-1]
+        return [p for p in s.split(sep) if p != ""]
+    return [s]
+
+
+def _broadcast(row, col, val):
+    """Broadcast row/col/val to a common length (paper constructor rule)."""
+    n = max(len(row), len(col), len(val))
+    out = []
+    for a in (row, col, val):
+        if len(a) == n:
+            out.append(a)
+        elif len(a) == 1:
+            out.append(np.broadcast_to(a, (n,)).copy())
+        else:
+            raise ValueError(
+                f"cannot broadcast lengths {(len(row), len(col), len(val))}")
+    return out
+
+
+_AGG_UFUNC = {
+    min: np.minimum, max: np.maximum, sum: np.add,
+    "min": np.minimum, "max": np.maximum, "sum": np.add, "add": np.add,
+    "prod": np.multiply,
+}
+
+
+def _aggregate_sorted_runs(sort_idx, run_starts, vals, aggregate):
+    """Aggregate values of duplicate (row,col) runs; vals already sorted."""
+    if aggregate in ("first",):
+        return vals[run_starts]
+    if aggregate in ("last",):
+        ends = np.r_[run_starts[1:], len(vals)] - 1
+        return vals[ends]
+    ufunc = _AGG_UFUNC.get(aggregate)
+    if ufunc is not None and vals.dtype.kind in "fiu":
+        return ufunc.reduceat(vals, run_starts)
+    # generic python-callable aggregator (e.g. string concat)
+    fn: Callable = aggregate if callable(aggregate) else {
+        "min": min, "max": max, "sum": lambda a, b: a + b,
+        "concat": lambda a, b: a + b,
+    }[aggregate]
+    ends = np.r_[run_starts[1:], len(vals)]
+    out = []
+    for s, e in zip(run_starts, ends):
+        acc = vals[s]
+        for t in range(s + 1, e):
+            acc = fn(acc, vals[t])
+        out.append(acc)
+    return np.asarray(out, dtype=vals.dtype if vals.dtype.kind != "U" else object)
+
+
+class Assoc:
+    """D4M associative array (paper-faithful host implementation)."""
+
+    __array_priority__ = 100  # win against numpy binary ops
+
+    # ------------------------------------------------------------------ #
+    # construction                                                       #
+    # ------------------------------------------------------------------ #
+    def __init__(self, row=(), col=(), val=(), aggregate=min, adj=None):
+        if adj is not None:
+            self._init_from_adj(row, col, val, adj)
+            return
+        row = _sanitize_keys(row)
+        col = _sanitize_keys(col)
+        if isinstance(val, (int, float)) and not isinstance(val, bool):
+            val = np.full(1, float(val))
+        val = _sanitize_keys(val) if not isinstance(val, np.ndarray) else val
+        if val.ndim == 0:
+            val = val.reshape(1)
+        if len(row) == 0 or len(col) == 0 or len(val) == 0:
+            self._init_empty()
+            return
+        row, col, val = _broadcast(row, col, val)
+
+        numeric = not _is_str_kind(val)
+        if numeric:
+            val = val.astype(np.float64)
+            keep = val != 0.0
+        else:
+            val = val.astype(str)
+            keep = val != ""
+        row, col, val = row[keep], col[keep], val[keep]
+        if len(row) == 0:
+            self._init_empty()
+            return
+
+        # unique key spaces + integer codes
+        self.row, row_codes = np.unique(row, return_inverse=True)
+        self.col, col_codes = np.unique(col, return_inverse=True)
+
+        # sort by (row_code, col_code) and aggregate duplicate runs
+        order = np.lexsort((col_codes, row_codes))
+        r, c, v = row_codes[order], col_codes[order], val[order]
+        new_run = np.r_[True, (r[1:] != r[:-1]) | (c[1:] != c[:-1])]
+        starts = np.flatnonzero(new_run)
+        r, c = r[starts], c[starts]
+        v = _aggregate_sorted_runs(order, starts, v, aggregate)
+
+        if numeric:
+            self.val = 1.0
+            data = v.astype(np.float64)
+        else:
+            self.val, v_codes = np.unique(v.astype(str), return_inverse=True)
+            data = v_codes.astype(np.float64) + 1.0  # 1-based pointers
+        self.adj = sp.coo_matrix(
+            (data, (r, c)), shape=(len(self.row), len(self.col)))
+        self._drop_zeros_and_condense()
+
+    def _init_from_adj(self, row, col, val, adj):
+        """Paper's second constructor: keys + explicit sparse matrix."""
+        row = np.unique(_sanitize_keys(row))
+        col = np.unique(_sanitize_keys(col))
+        adj = sp.coo_matrix(adj)
+        if adj.shape[0] > len(row) or adj.shape[1] > len(col):
+            raise ValueError("adj larger than provided key sets")
+        self.row = row[: adj.shape[0]]
+        self.col = col[: adj.shape[1]]
+        if isinstance(val, float):
+            self.val = 1.0
+        else:
+            self.val = np.unique(_sanitize_keys(val))
+        self.adj = adj
+        self._drop_zeros_and_condense()
+
+    def _init_empty(self):
+        self.row = np.empty(0, dtype=np.float64)
+        self.col = np.empty(0, dtype=np.float64)
+        self.val = 1.0
+        self.adj = sp.coo_matrix((0, 0))
+
+    @classmethod
+    def _from_parts(cls, row, col, val, adj) -> "Assoc":
+        a = cls.__new__(cls)
+        a.row, a.col, a.val, a.adj = row, col, sp.coo_matrix(adj) if not sp.issparse(adj) else adj, None
+        a.row = np.asarray(row)
+        a.col = np.asarray(col)
+        a.val = val
+        a.adj = adj if sp.issparse(adj) else sp.coo_matrix(adj)
+        return a
+
+    # ------------------------------------------------------------------ #
+    # basic properties                                                   #
+    # ------------------------------------------------------------------ #
+    @property
+    def numeric(self) -> bool:
+        return isinstance(self.val, float)
+
+    def nnz(self) -> int:
+        return int(self.adj.nnz)
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (len(self.row), len(self.col))
+
+    def triples(self):
+        """Return (row_keys, col_keys, values) of the nonempty entries."""
+        coo = self.adj.tocoo()
+        rows = self.row[coo.row] if len(self.row) else self.row
+        cols = self.col[coo.col] if len(self.col) else self.col
+        if self.numeric:
+            vals = coo.data.copy()
+        else:
+            vals = self.val[(coo.data - 1).astype(np.int64)]
+        return rows, cols, vals
+
+    def to_dict(self) -> dict:
+        r, c, v = self.triples()
+        return {(ri, ci): vi for ri, ci, vi in zip(r.tolist(), c.tolist(), v.tolist())}
+
+    def get(self, i, j, default=None):
+        d = self.to_dict()
+        return d.get((i, j), default)
+
+    # ------------------------------------------------------------------ #
+    # cleanup: paper's condense() + explicit-zero elimination            #
+    # ------------------------------------------------------------------ #
+    def _drop_zeros_and_condense(self):
+        adj = self.adj.tocoo()
+        if adj.nnz:
+            keep = adj.data != 0.0
+            if not keep.all():
+                adj = sp.coo_matrix(
+                    (adj.data[keep], (adj.row[keep], adj.col[keep])),
+                    shape=adj.shape)
+        self.adj = adj
+        self.condense()
+
+    def condense(self) -> "Assoc":
+        """Remove empty rows/cols (paper's .condense(), CSR/CSC indptr diff)."""
+        csr = self.adj.tocsr()
+        csc = self.adj.tocsc()
+        csr_rows = csr.indptr
+        csc_cols = csc.indptr
+        good_rows = csr_rows[:-1] < csr_rows[1:]
+        good_cols = csc_cols[:-1] < csc_cols[1:]
+        if good_rows.all() and good_cols.all():
+            self.adj = csr.tocoo()
+            self._remap_vals()
+            return self
+        self.row = self.row[good_rows]
+        self.col = self.col[good_cols]
+        self.adj = csr[good_rows, :][:, good_cols].tocoo()
+        self._remap_vals()
+        return self
+
+    def _remap_vals(self):
+        """Shrink .val to the values actually referenced (string case)."""
+        if self.numeric or self.adj.nnz == 0:
+            if not self.numeric and self.adj.nnz == 0:
+                self.val = 1.0  # empty arrays are stored as-if numeric
+            return
+        codes = (self.adj.data - 1).astype(np.int64)
+        used = np.unique(codes)
+        if len(used) == len(self.val):
+            return
+        remap = np.zeros(len(self.val), dtype=np.int64)
+        remap[used] = np.arange(len(used))
+        self.val = self.val[used]
+        self.adj = sp.coo_matrix(
+            (remap[codes] + 1.0, (self.adj.row, self.adj.col)),
+            shape=self.adj.shape)
+
+    def logical(self) -> "Assoc":
+        """Replace every nonempty entry with 1 (paper's .logical())."""
+        adj = self.adj.tocoo(copy=True)
+        adj.data = np.ones(len(adj.data))
+        return Assoc._from_parts(self.row.copy(), self.col.copy(), 1.0, adj)
+
+    # ------------------------------------------------------------------ #
+    # element-wise addition (paper §II.C.1)                              #
+    # ------------------------------------------------------------------ #
+    def __add__(self, other: "Assoc") -> "Assoc":
+        if not isinstance(other, Assoc):
+            return NotImplemented
+        if self.nnz() == 0:
+            return other.copy()
+        if other.nnz() == 0:
+            return self.copy()
+        if self.numeric and other.numeric:
+            return self._add_numeric(other)
+        if not self.numeric and not other.numeric:
+            return self.combine(other, lambda a, b: a + b)
+        raise TypeError("mixed numeric/string element-wise addition")
+
+    def _add_numeric(self, other: "Assoc") -> "Assoc":
+        row_union, ia, ib = sorted_union(self.row, other.row)
+        col_union, ja, jb = sorted_union(self.col, other.col)
+        a = self._reindexed(ia, ja, (len(row_union), len(col_union)))
+        b = other._reindexed(ib, jb, (len(row_union), len(col_union)))
+        c_adj_pre = a.tocsr() + b.tocsr()
+        out = Assoc._from_parts(row_union, col_union, 1.0, c_adj_pre.tocoo())
+        out._drop_zeros_and_condense()
+        return out
+
+    def _reindexed(self, imap, jmap, shape) -> sp.coo_matrix:
+        coo = self.adj.tocoo()
+        return sp.coo_matrix(
+            (coo.data, (imap[coo.row], jmap[coo.col])), shape=shape)
+
+    def combine(self, other: "Assoc", binop: Callable) -> "Assoc":
+        """Triple-append + aggregate (paper's Assoc.combine; string ⊕ etc.)."""
+        ra, ca, va = self.triples()
+        rb, cb, vb = other.triples()
+        if _is_str_kind(va) != _is_str_kind(vb):
+            raise TypeError("combine requires same value kind")
+        row = np.concatenate([ra.astype(str) if _is_str_kind(ra) else ra,
+                              rb.astype(str) if _is_str_kind(rb) else rb])
+        col = np.concatenate([ca.astype(str) if _is_str_kind(ca) else ca,
+                              cb.astype(str) if _is_str_kind(cb) else cb])
+        val = np.concatenate([va, vb])
+        return Assoc(row, col, val, aggregate=binop)
+
+    def min(self, other: "Assoc") -> "Assoc":
+        return self.combine(other, min)
+
+    def max(self, other: "Assoc") -> "Assoc":
+        return self.combine(other, max)
+
+    def __sub__(self, other: "Assoc") -> "Assoc":
+        if not (self.numeric and other.numeric):
+            raise TypeError("subtraction requires numeric associative arrays")
+        neg = other.copy()
+        adj = neg.adj.tocoo(copy=True)
+        adj.data = -adj.data
+        neg.adj = adj
+        return self + neg
+
+    # ------------------------------------------------------------------ #
+    # element-wise multiplication (paper §II.C.2)                        #
+    # ------------------------------------------------------------------ #
+    def __mul__(self, other: "Assoc") -> "Assoc":
+        if not isinstance(other, Assoc):
+            return NotImplemented
+        if self.numeric and other.numeric:
+            return self._mul_numeric(other)
+        if not self.numeric and other.numeric:
+            # numeric acts as a mask on the string array (paper)
+            return self._mask_by(other)
+        if self.numeric and not other.numeric:
+            # reduced to the numeric case via .logical() (paper)
+            return self._mul_numeric(other.logical())
+        # string * string: intersection with ⊗ = min (default aggregator)
+        return self._mul_string(other)
+
+    def _mul_numeric(self, other: "Assoc") -> "Assoc":
+        row_int, ia, ib = sorted_intersect(self.row, other.row)
+        col_int, ja, jb = sorted_intersect(self.col, other.col)
+        if len(row_int) == 0 or len(col_int) == 0:
+            return Assoc()
+        a = self.adj.tocsr()[ia, :][:, ja]
+        b = other.adj.tocsr()[ib, :][:, jb]
+        out = Assoc._from_parts(row_int, col_int, 1.0, a.multiply(b).tocoo())
+        out._drop_zeros_and_condense()
+        return out
+
+    def _mask_by(self, mask: "Assoc") -> "Assoc":
+        """Restrict a string array to the support of a numeric mask."""
+        rm, cm, _ = mask.triples()
+        keys_mask = set(zip(rm.tolist(), cm.tolist()))
+        r, c, v = self.triples()
+        keep = np.fromiter(
+            ((ri, ci) in keys_mask for ri, ci in zip(r.tolist(), c.tolist())),
+            dtype=bool, count=len(r))
+        return Assoc(r[keep], c[keep], v[keep])
+
+    def _mul_string(self, other: "Assoc") -> "Assoc":
+        r1, c1, v1 = self.triples()
+        r2, c2, v2 = other.triples()
+        d2 = {(ri, ci): vi for ri, ci, vi in zip(r2.tolist(), c2.tolist(), v2.tolist())}
+        rows, cols, vals = [], [], []
+        for ri, ci, vi in zip(r1.tolist(), c1.tolist(), v1.tolist()):
+            if (ri, ci) in d2:
+                rows.append(ri)
+                cols.append(ci)
+                vals.append(min(vi, d2[(ri, ci)]))
+        return Assoc(rows, cols, vals)
+
+    # ------------------------------------------------------------------ #
+    # array multiplication (paper §II.C.3)                               #
+    # ------------------------------------------------------------------ #
+    def __matmul__(self, other: "Assoc") -> "Assoc":
+        if not isinstance(other, Assoc):
+            return NotImplemented
+        a = self.logical() if not self.numeric else self
+        b = other.logical() if not other.numeric else other
+        inner, ia, ib = sorted_intersect(a.col, b.row)
+        if len(inner) == 0:
+            return Assoc()
+        a_m = a.adj.tocsr()[:, ia]
+        b_m = b.adj.tocsr()[ib, :]
+        prod = (a_m @ b_m).tocoo()
+        out = Assoc._from_parts(a.row, b.col, 1.0, prod)
+        out._drop_zeros_and_condense()
+        return out
+
+    def sqin(self) -> "Assoc":
+        """AᵀA — the paper's correlation idiom (column-key graph)."""
+        return self.transpose() @ self
+
+    def sqout(self) -> "Assoc":
+        """AAᵀ — row-key graph."""
+        return self @ self.transpose()
+
+    # ------------------------------------------------------------------ #
+    # structural ops                                                     #
+    # ------------------------------------------------------------------ #
+    def transpose(self) -> "Assoc":
+        return Assoc._from_parts(
+            self.col.copy(), self.row.copy(),
+            self.val if self.numeric else self.val.copy(),
+            self.adj.transpose().tocoo())
+
+    @property
+    def T(self) -> "Assoc":
+        return self.transpose()
+
+    def copy(self) -> "Assoc":
+        return Assoc._from_parts(
+            self.row.copy(), self.col.copy(),
+            self.val if self.numeric else self.val.copy(),
+            self.adj.copy())
+
+    def sum(self, axis: Optional[int] = None):
+        a = self if self.numeric else self.logical()
+        if axis is None:
+            return float(a.adj.sum())
+        m = np.asarray(a.adj.sum(axis=axis)).ravel()
+        if axis == 0:   # column sums → row vector keyed by col
+            return Assoc(["sum"], a.col, m)
+        return Assoc(a.row, ["sum"], m)  # row sums → column vector
+
+    # ------------------------------------------------------------------ #
+    # extraction & assignment (paper §II.B)                              #
+    # ------------------------------------------------------------------ #
+    def _resolve_keys(self, sel, keys: np.ndarray) -> np.ndarray:
+        """Resolve a selector to integer positions into ``keys``."""
+        n = len(keys)
+        if isinstance(sel, slice):          # positional (paper rule 2)
+            return np.arange(n)[sel]
+        if isinstance(sel, (int, np.integer)) and not isinstance(sel, bool):
+            return np.asarray([int(sel)])
+        if isinstance(sel, str):
+            if sel == ":":
+                return np.arange(n)
+            parts = _split_string_list(sel)
+            if len(parts) == 3 and parts[1] == ":":
+                lo, hi = parts[0], parts[2]
+                # right-INCLUSIVE string slice (paper rule 1)
+                lo_i = np.searchsorted(keys.astype(str), lo, side="left")
+                hi_i = np.searchsorted(keys.astype(str), hi, side="right")
+                return np.arange(lo_i, hi_i)
+            sel = parts
+        arr = np.asarray(sel)
+        if arr.dtype.kind in "iu" and not isinstance(sel, np.ndarray):
+            arr = arr  # lists of ints are positional too (paper rule 2)
+            return arr.ravel()
+        if _is_str_kind(arr):
+            pos = np.searchsorted(keys.astype(str), arr.astype(str))
+            pos = np.clip(pos, 0, max(n - 1, 0))
+            hit = keys.astype(str)[pos] == arr.astype(str) if n else np.zeros(arr.shape, bool)
+            return pos[hit]
+        # numeric key membership
+        pos = np.searchsorted(keys, arr)
+        pos = np.clip(pos, 0, max(n - 1, 0))
+        hit = keys[pos] == arr if n else np.zeros(arr.shape, bool)
+        return pos[hit]
+
+    def __getitem__(self, ij) -> "Assoc":
+        i, j = ij
+        ri = self._resolve_keys(i, self.row)
+        ci = self._resolve_keys(j, self.col)
+        if len(ri) == 0 or len(ci) == 0:
+            return Assoc()
+        sub = self.adj.tocsr()[ri, :][:, ci].tocoo()
+        out = Assoc._from_parts(
+            self.row[ri], self.col[ci],
+            self.val if self.numeric else self.val.copy(), sub)
+        out.condense()
+        return out
+
+    def __setitem__(self, ij, value):
+        i, j = ij
+        if isinstance(value, Assoc):
+            merged = self.combine(value, lambda a, b: b) if self.nnz() else value.copy()
+            self.row, self.col = merged.row, merged.col
+            self.val, self.adj = merged.val, merged.adj
+            return
+        r, c, v = self.triples()
+        rows = np.concatenate([r.astype(str) if _is_str_kind(r) else r,
+                               _sanitize_keys(i)]) if len(r) else _sanitize_keys(i)
+        cols = np.concatenate([c.astype(str) if _is_str_kind(c) else c,
+                               _sanitize_keys(j)]) if len(c) else _sanitize_keys(j)
+        vals = np.concatenate([v, np.asarray([value])]) if len(r) else np.asarray([value])
+        merged = Assoc(rows, cols, vals, aggregate="last")
+        self.row, self.col = merged.row, merged.col
+        self.val, self.adj = merged.val, merged.adj
+
+    # ------------------------------------------------------------------ #
+    # comparison / display                                               #
+    # ------------------------------------------------------------------ #
+    def __eq__(self, other) -> bool:  # structural equality of nonempty maps
+        if not isinstance(other, Assoc):
+            return NotImplemented
+        return self.to_dict() == other.to_dict()
+
+    def __ne__(self, other) -> bool:
+        eq = self.__eq__(other)
+        return NotImplemented if eq is NotImplemented else not eq
+
+    def __hash__(self):  # pragma: no cover - dict-keyed usage is unusual
+        return id(self)
+
+    def __repr__(self) -> str:
+        r, c, v = self.triples()
+        lines = [f"Assoc({len(self.row)}x{len(self.col)}, nnz={self.nnz()})"]
+        for t, (ri, ci, vi) in enumerate(zip(r, c, v)):
+            if t >= 8:
+                lines.append(f"  ... ({self.nnz() - 8} more)")
+                break
+            lines.append(f"  ({ri!r}, {ci!r}) : {vi!r}")
+        return "\n".join(lines)
+
+    def printfull(self) -> str:
+        """Tabular rendering like the paper's Fig. 1."""
+        d = self.to_dict()
+        cols = [str(x) for x in self.col.tolist()]
+        widths = {c: max(len(c), *(len(str(d.get((r, rc), ""))) for r, rc in
+                  ((rr, cc) for rr in self.row.tolist() for cc in [c2 for c2 in self.col.tolist() if str(c2) == c])))
+                  for c in cols} if len(self.row) else {c: len(c) for c in cols}
+        rw = max((len(str(r)) for r in self.row.tolist()), default=0)
+        out = [" " * rw + "  " + "  ".join(c.ljust(widths[c]) for c in cols)]
+        for r in self.row.tolist():
+            cells = [str(d.get((r, c), "")).ljust(widths[str(c)]) for c in self.col.tolist()]
+            out.append(str(r).ljust(rw) + "  " + "  ".join(cells))
+        s = "\n".join(out)
+        print(s)
+        return s

@@ -1,0 +1,199 @@
+"""Distributed associative arrays: the "Distributed" D of D4M on a mesh.
+
+Historically D4M distributes via Accumulo tablet servers: tables are
+row-range-partitioned and algebra pushes down to the servers (Graphulo).
+The mesh-native mapping: a ``DistAssoc`` is an ``AssocTensor`` whose COO
+triples are **row-rank-range partitioned over the `data` axis** (tablet ↔
+shard), and the paper's operations decompose as:
+
+  * element-wise ⊕ / ⊗ — row partitions are disjoint and aligned, so both
+    are embarrassingly parallel ``shard_map`` calls (zero collectives);
+  * array product ``A ⊗.⊕ B`` — contraction keys live on the row axis of B,
+    so each shard computes a LOCAL product against its B-rows and partial
+    results combine with a ⊕ ``psum`` over `data` — the Graphulo
+    server-side-combine pattern as one collective;
+  * global reductions (row/col ⊕-sums) — local reduce + ``psum``.
+
+Shards keep the full keyspaces (host-side, cheap) and static capacity
+``cap / n_shards``; re-sharding for elasticity is a host-side split by
+row-rank ranges (same code path the checkpoint restore uses).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .assoc_tensor import SENT, AssocTensor, dedup_sorted_coo
+from .keyspace import KeySpace
+from .semiring import PLUS_TIMES, get_semiring
+
+__all__ = ["DistAssoc"]
+
+
+class DistAssoc:
+    """Row-partitioned AssocTensor over a mesh's ``data`` axis."""
+
+    def __init__(self, local: AssocTensor, mesh: Mesh, *,
+                 row_bounds: np.ndarray):
+        """``local``: stacked per-shard COO [n_shards, cap_local] arrays
+        (leading axis sharded over `data`).  ``row_bounds``: shard row-rank
+        boundaries, len n_shards+1."""
+        self.local = local
+        self.mesh = mesh
+        self.row_bounds = row_bounds
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def from_triples(rows, cols, vals, mesh: Mesh, *, aggregate="min",
+                     capacity_per_shard: Optional[int] = None) -> "DistAssoc":
+        n_shards = mesh.shape["data"]
+        row_space = KeySpace(np.asarray(rows))
+        col_space = KeySpace(np.asarray(cols))
+        r, _ = row_space.rank(np.asarray(rows))
+        # contiguous rank ranges (tablet splits)
+        bounds = np.linspace(0, len(row_space), n_shards + 1).astype(np.int64)
+        shard_of = np.searchsorted(bounds[1:], r, side="right")
+        cap = capacity_per_shard or int(
+            max(8, np.ceil(max(np.bincount(shard_of, minlength=n_shards).max(), 1) / 8) * 8))
+
+        locs = []
+        rows_np, cols_np, vals_np = (np.asarray(rows), np.asarray(cols),
+                                     np.asarray(vals))
+        for s in range(n_shards):
+            m = shard_of == s
+            locs.append(AssocTensor.from_triples(
+                rows_np[m] if m.any() else rows_np[:0],
+                cols_np[m] if m.any() else cols_np[:0],
+                vals_np[m] if m.any() else vals_np[:0],
+                aggregate=aggregate, capacity=cap,
+                row_space=row_space, col_space=col_space))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locs)
+        sharded = jax.tree.map(
+            lambda x: jax.device_put(
+                x, NamedSharding(mesh, P(*( ("data",) + (None,) * (x.ndim - 1))))),
+            stacked)
+        return DistAssoc(sharded, mesh, row_bounds=bounds)
+
+    # -- conversions -----------------------------------------------------------
+    def to_assoc(self):
+        """Gather all shards to a host Assoc (small-data paths/tests)."""
+        from .assoc import Assoc
+        n_shards = self.mesh.shape["data"]
+        merged = None
+        for s in range(n_shards):
+            local = jax.tree.map(lambda x: x[s], self.local)
+            a = local.to_assoc()
+            merged = a if merged is None else merged + a if a.nnz() else merged
+        return merged
+
+    # -- element-wise (alignment-free: row ranges are disjoint) -----------------
+    def _ewise(self, other: "DistAssoc", op: str, semiring) -> "DistAssoc":
+        sr = get_semiring(semiring)
+        a_dict = {"rows": self.local.rows, "cols": self.local.cols,
+                  "vals": self.local.vals, "nnz": self.local.nnz}
+        spec = {k: P(*(("data",) + (None,) * (v.ndim - 1)))
+                for k, v in a_dict.items()}
+
+        @partial(shard_map, mesh=self.mesh,
+                 in_specs=(spec, spec), out_specs=spec,
+                 check_rep=False)
+        def go(a, b):
+            # keyspaces are host metadata; inside shard_map the algebra runs
+            # on raw rank arrays via the same canonicalization primitive the
+            # single-device AssocTensor uses.
+            a0 = jax.tree.map(lambda x: x[0], a)
+            b0 = jax.tree.map(lambda x: x[0], b)
+            if op == "add":
+                rows = jnp.concatenate([a0["rows"], b0["rows"]])
+                cols = jnp.concatenate([a0["cols"], b0["cols"]])
+                vals = jnp.concatenate([a0["vals"], b0["vals"]])
+                r, c, v, n = dedup_sorted_coo(rows, cols, vals, sr.add,
+                                              zero=sr.zero)
+                out = {"rows": r, "cols": c, "vals": v, "nnz": n}
+            else:
+                src = jnp.concatenate([
+                    jnp.zeros(a0["rows"].shape[0], jnp.int32),
+                    jnp.ones(b0["rows"].shape[0], jnp.int32)])
+                rows = jnp.concatenate([a0["rows"], b0["rows"]])
+                cols = jnp.concatenate([a0["cols"], b0["cols"]])
+                vals = jnp.concatenate([a0["vals"], b0["vals"]])
+                r, c, v, n = dedup_sorted_coo(
+                    rows, cols, vals, sr.add, zero=sr.zero,
+                    require_pair=True, pair_op=sr.mul, src=src)
+                cap = min(a0["rows"].shape[0], b0["rows"].shape[0])
+                out = {"rows": r[:cap], "cols": c[:cap], "vals": v[:cap],
+                       "nnz": jnp.minimum(n, cap)}
+            return {"rows": out["rows"][None], "cols": out["cols"][None],
+                    "vals": out["vals"][None], "nnz": out["nnz"][None]}
+
+        b_dict = {"rows": other.local.rows, "cols": other.local.cols,
+                  "vals": other.local.vals, "nnz": other.local.nnz}
+        out = go(a_dict, b_dict)
+        new_local = AssocTensor(out["rows"], out["cols"], out["vals"],
+                                out["nnz"], self.local.row_space,
+                                self.local.col_space, self.local.val_space)
+        return DistAssoc(new_local, self.mesh, row_bounds=self.row_bounds)
+
+    def add(self, other, semiring=PLUS_TIMES):
+        return self._ewise(other, "add", semiring)
+
+    def mul(self, other, semiring=PLUS_TIMES):
+        return self._ewise(other, "mul", semiring)
+
+    # -- global reductions --------------------------------------------------------
+    def col_reduce(self, semiring=PLUS_TIMES) -> jnp.ndarray:
+        """⊕ over rows per column → dense [n_cols] (psum over data)."""
+        sr = get_semiring(semiring)
+        nc = len(self.local.col_space)
+
+        @partial(shard_map, mesh=self.mesh,
+                 in_specs=(P("data"), P("data"), P("data")),
+                 out_specs=P(), check_rep=False)
+        def go(cols, vals, rows):
+            ok = rows[0] != SENT
+            vec = jnp.zeros((nc,), jnp.float32)
+            if sr.name == "plus_times":
+                vec = vec.at[jnp.where(ok, cols[0], nc)].add(
+                    jnp.where(ok, vals[0], 0.0), mode="drop")
+                return jax.lax.psum(vec, "data")
+            vec = jnp.full((nc,), sr.zero, jnp.float32)
+            vec = vec.at[jnp.where(ok, cols[0], nc)].max(
+                jnp.where(ok, vals[0], sr.zero), mode="drop")
+            return jax.lax.pmax(vec, "data")
+
+        return go(self.local.cols, self.local.vals, self.local.rows)
+
+    def matmul_dense_vec(self, x: jnp.ndarray, semiring=PLUS_TIMES) -> jnp.ndarray:
+        """y = A ⊗.⊕ x for a dense vector over the column keyspace.
+
+        Row partitions are disjoint: every shard produces its own y rows;
+        combining is a concatenation expressed as a psum of disjoint
+        supports (the Graphulo pushdown pattern).
+        """
+        sr = get_semiring(semiring)
+        nr = len(self.local.row_space)
+
+        @partial(shard_map, mesh=self.mesh,
+                 in_specs=(P("data"), P("data"), P("data"), P()),
+                 out_specs=P(), check_rep=False)
+        def go(rows, cols, vals, xv):
+            ok = rows[0] != SENT
+            contrib = sr.mul(jnp.where(ok, vals[0], sr.zero),
+                             xv[jnp.clip(cols[0], 0, xv.shape[0] - 1)])
+            y = jnp.full((nr,), sr.zero, jnp.float32)
+            if sr.name == "plus_times":
+                y = jnp.zeros((nr,), jnp.float32).at[
+                    jnp.where(ok, rows[0], nr)].add(
+                    jnp.where(ok, contrib, 0.0), mode="drop")
+                return jax.lax.psum(y, "data")
+            y = y.at[jnp.where(ok, rows[0], nr)].max(
+                jnp.where(ok, contrib, sr.zero), mode="drop")
+            return jax.lax.pmax(y, "data")
+
+        return go(self.local.rows, self.local.cols, self.local.vals, x)

@@ -1,0 +1,111 @@
+"""Host-side key dictionaries for device associative arrays.
+
+TPU device code cannot hold strings or dynamically-growing key sets, so the
+device representation (``AssocTensor``) stores **int32 ranks** into a
+host-side sorted unique key array — the paper's string-value pointer scheme
+(``adj[i,j] = k+1`` into sorted ``A.val``) promoted to a general mechanism
+for rows, columns *and* values.
+
+Because the key array is sorted, rank order ⇔ lexicographic order, so
+order-theoretic semiring ops (min/max under dictionary order) act directly on
+ranks on device.  Range queries (D4M's right-inclusive string slices) resolve
+on host to a rank interval, executed on device as an integer mask.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+__all__ = ["KeySpace"]
+
+
+class KeySpace:
+    """An immutable sorted-unique key dictionary (host side)."""
+
+    def __init__(self, keys):
+        arr = np.asarray(keys)
+        if arr.dtype.kind in ("U", "S", "O"):
+            arr = arr.astype(str)
+        else:
+            arr = arr.astype(np.float64)
+        self.keys = np.unique(arr)  # sorted unique
+        self._digest = hashlib.sha1(
+            self.keys.tobytes() if self.keys.dtype.kind != "U"
+            else "\x00".join(self.keys.tolist()).encode()).hexdigest()
+
+    # -- container protocol -------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    def __contains__(self, key) -> bool:
+        return len(self.rank(np.asarray([key]), strict=False)[0]) == 1
+
+    def __getitem__(self, rank):
+        return self.keys[rank]
+
+    # jit static-aux requirements: cheap, content-based hash/eq
+    def __hash__(self) -> int:
+        return hash(self._digest)
+
+    def __eq__(self, other) -> bool:
+        if self is other:
+            return True
+        return isinstance(other, KeySpace) and self._digest == other._digest
+
+    def __repr__(self) -> str:
+        return f"KeySpace(n={len(self)}, kind={self.keys.dtype.kind})"
+
+    @property
+    def is_string(self) -> bool:
+        return self.keys.dtype.kind == "U"
+
+    # -- rank mapping ---------------------------------------------------------
+    def rank(self, keys, strict: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+        """Map keys → int32 ranks.  Returns ``(ranks, found_mask)``.
+
+        With ``strict=True`` unknown keys raise; otherwise they are filtered
+        (mask reports which inputs were found).
+        """
+        arr = np.asarray(keys)
+        if self.is_string:
+            arr = arr.astype(str)
+        pos = np.searchsorted(self.keys, arr)
+        pos_c = np.clip(pos, 0, max(len(self.keys) - 1, 0))
+        found = (self.keys[pos_c] == arr) if len(self.keys) else np.zeros(arr.shape, bool)
+        if strict and not found.all():
+            missing = arr[~found][:5]
+            raise KeyError(f"keys not in KeySpace: {missing!r}")
+        return pos_c[found].astype(np.int32) if not strict else pos_c.astype(np.int32), found
+
+    def rank_range(self, lo, hi) -> Tuple[int, int]:
+        """Right-inclusive D4M range ``lo ≤ k ≤ hi`` → half-open rank range."""
+        lo_i = int(np.searchsorted(self.keys, lo, side="left"))
+        hi_i = int(np.searchsorted(self.keys, hi, side="right"))
+        return lo_i, hi_i
+
+    # -- merging --------------------------------------------------------------
+    def union(self, other: "KeySpace") -> Tuple["KeySpace", np.ndarray, np.ndarray]:
+        """Merged keyspace + rank-translation tables for both inputs.
+
+        ``self_map[r]`` is the rank in the union of the key with rank ``r``
+        in ``self`` (likewise ``other_map``).  The translation tables are the
+        host analogue of the paper's union index maps; uploading them lets
+        the device re-rank an AssocTensor onto the merged space with one
+        gather.
+        """
+        if self == other:
+            eye = np.arange(len(self), dtype=np.int32)
+            return self, eye, eye
+        if self.is_string != other.is_string:
+            raise TypeError("cannot merge string and numeric keyspaces")
+        merged = KeySpace(np.concatenate([self.keys, other.keys]))
+        self_map = np.searchsorted(merged.keys, self.keys).astype(np.int32)
+        other_map = np.searchsorted(merged.keys, other.keys).astype(np.int32)
+        return merged, self_map, other_map
+
+    @staticmethod
+    def integers(n: int) -> "KeySpace":
+        """The keyspace {0.0, 1.0, ..., n-1} — ranks coincide with keys."""
+        return KeySpace(np.arange(n, dtype=np.float64))

@@ -1,0 +1,155 @@
+"""Semiring algebra for associative arrays.
+
+A semiring ``(V, ⊕, ⊗, 0, 1)`` supplies the addition/multiplication pair under
+which associative-array algebra (element-wise add, element-wise multiply, and
+array multiplication ``⊗.⊕``) is defined.  This module provides a small
+registry of the semirings used by D4M plus the machinery the device kernels
+dispatch on.
+
+Two families of implementations coexist:
+
+* **scalar/python** callables (``add_py`` / ``mul_py``) used by the host
+  ``Assoc`` reference implementation and by property tests of the axioms;
+* **jnp** callables (``add`` / ``mul``) that operate on arrays and are safe
+  inside jit/pallas (the Pallas semiring-matmul kernel selects an MXU path
+  only for ``(+,×)``; every other semiring contracts on the VPU via
+  broadcast-reduce).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Semiring",
+    "PLUS_TIMES",
+    "MAX_PLUS",
+    "MIN_PLUS",
+    "MAX_MIN",
+    "MAX_TIMES",
+    "AND_OR",
+    "get_semiring",
+    "REGISTRY",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A (numerical) semiring usable on both host and device.
+
+    Attributes
+    ----------
+    name:       registry key, e.g. ``"plus_times"``.
+    add:        jnp elementwise ⊕ (associative & commutative).
+    mul:        jnp elementwise ⊗ (associative; distributes over ⊕).
+    zero:       identity of ⊕ / annihilator of ⊗ (python float).
+    one:        identity of ⊗ (python float).
+    add_reduce: jnp reduction implementing ⊕ along an axis (used by matmul
+                contractions and aggregation).
+    mxu:        True iff the contraction can be lowered to a plain matmul on
+                the MXU (only the plus-times algebra qualifies).
+    idempotent_add: True iff ``a ⊕ a == a`` (max/min-style algebras); such
+                semirings make telemetry merges retry-idempotent.
+    """
+
+    name: str
+    add: Callable[[Any, Any], Any]
+    mul: Callable[[Any, Any], Any]
+    zero: float
+    one: float
+    add_reduce: Callable[..., Any]
+    mxu: bool = False
+    idempotent_add: bool = False
+
+    # ---- host/scalar views (numpy-friendly; used by host Assoc + tests) ----
+    def add_py(self, a, b):
+        return np.asarray(self.add(np.asarray(a), np.asarray(b)))[()]
+
+    def mul_py(self, a, b):
+        return np.asarray(self.mul(np.asarray(a), np.asarray(b)))[()]
+
+    def matmul_dense(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Reference dense semiring contraction ``C[i,j] = ⊕_k a[i,k] ⊗ b[k,j]``.
+
+        Used as the jnp oracle for the Pallas kernel and as the fallback path
+        on backends where the kernel is unavailable.
+        """
+        if self.mxu:
+            return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+        # broadcast-reduce: [i, k, 1] ⊗ [1, k, j] → reduce over k
+        prod = self.mul(a[:, :, None], b[None, :, :])
+        return self.add_reduce(prod, axis=1)
+
+    def is_zero(self, x) -> Any:
+        if math.isinf(self.zero):
+            return jnp.isinf(x) & ((x < 0) == (self.zero < 0))
+        return x == self.zero
+
+
+def _mk(name, add, mul, zero, one, add_reduce, mxu=False, idem=False) -> Semiring:
+    return Semiring(
+        name=name, add=add, mul=mul, zero=zero, one=one,
+        add_reduce=add_reduce, mxu=mxu, idempotent_add=idem,
+    )
+
+
+PLUS_TIMES = _mk(
+    "plus_times", jnp.add, jnp.multiply, 0.0, 1.0, jnp.sum, mxu=True)
+MAX_PLUS = _mk(
+    "max_plus", jnp.maximum, jnp.add, -jnp.inf, 0.0, jnp.max, idem=True)
+MIN_PLUS = _mk(
+    "min_plus", jnp.minimum, jnp.add, jnp.inf, 0.0, jnp.min, idem=True)
+MAX_MIN = _mk(
+    "max_min", jnp.maximum, jnp.minimum, -jnp.inf, jnp.inf, jnp.max, idem=True)
+MAX_TIMES = _mk(
+    "max_times", jnp.maximum, jnp.multiply, 0.0, 1.0, jnp.max, idem=True)
+AND_OR = _mk(  # boolean algebra on {0., 1.}
+    "and_or", jnp.logical_or, jnp.logical_and, 0.0, 1.0,
+    lambda x, axis=None: jnp.any(x, axis=axis), idem=True)
+
+REGISTRY: Dict[str, Semiring] = {
+    s.name: s
+    for s in (PLUS_TIMES, MAX_PLUS, MIN_PLUS, MAX_MIN, MAX_TIMES, AND_OR)
+}
+
+
+def get_semiring(name_or_sr) -> Semiring:
+    if isinstance(name_or_sr, Semiring):
+        return name_or_sr
+    try:
+        return REGISTRY[str(name_or_sr)]
+    except KeyError as exc:
+        raise KeyError(
+            f"unknown semiring {name_or_sr!r}; known: {sorted(REGISTRY)}"
+        ) from exc
+
+
+# ---------------------------------------------------------------------------
+# The (nonunital) string algebra (Σ*, ⌢, min, ε) — host only.
+#
+# String values cannot live on a TPU; the device stores int32 ranks into the
+# sorted unique-value array (the paper's own pointer scheme).  min under the
+# dictionary order is then rank-min (device-safe); concatenation creates new
+# values and therefore runs on host where the dictionary can grow.
+# ---------------------------------------------------------------------------
+
+class StringAlgebra:
+    """The paper's nonunital string semiring: ⊕ = concatenation, ⊗ = min."""
+
+    name = "string"
+    zero = ""  # ε — identity for concatenation, the "empty" value
+
+    @staticmethod
+    def add_py(a: str, b: str) -> str:
+        return a + b
+
+    @staticmethod
+    def mul_py(a: str, b: str) -> str:
+        return min(a, b)
+
+
+STRING = StringAlgebra()

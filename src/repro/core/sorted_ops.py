@@ -1,0 +1,155 @@
+"""Sorted-set primitives: union / intersection with index maps.
+
+These are the paper's §II.C building blocks.  The paper constructs the sorted
+union/intersection of two repetition-free sorted key arrays with a scalar
+merge loop, recording *index maps* describing how each input embeds into the
+result.  Those index maps are what lets ``A.adj`` / ``B.adj`` be re-indexed
+onto the combined key space so a single bulk sparse-linear-algebra call
+finishes the job.
+
+Two implementations:
+
+* ``sorted_union`` / ``sorted_intersect`` — host (numpy) reference with the
+  exact semantics of the paper's merge loop, but vectorized via two-sided
+  ``searchsorted`` (no Python-level loop; this is already the first
+  TPU-minded rewrite and is what the host ``Assoc`` uses).
+* ``sorted_union_padded`` / ``sorted_intersect_padded`` — shape-static jnp
+  versions for fixed-capacity device arrays (sentinel-padded), jit-safe;
+  the Pallas ``sorted_merge`` kernel accelerates the same contract.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "sorted_union",
+    "sorted_intersect",
+    "sorted_union_padded",
+    "sorted_intersect_padded",
+    "INT_SENTINEL",
+]
+
+# Padding sentinel for int32 rank arrays: sorts after every valid rank.
+INT_SENTINEL = np.int32(2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Host (numpy) — used by the paper-faithful Assoc
+# ---------------------------------------------------------------------------
+
+def sorted_union(i: np.ndarray, j: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sorted union of two repetition-free sorted arrays with index maps.
+
+    Returns ``(k, i_map, j_map)`` where ``k`` is the sorted union and
+    ``k[i_map] == i`` and ``k[j_map] == j`` elementwise (the paper's "how I
+    and J sit within K").
+    """
+    i = np.asarray(i)
+    j = np.asarray(j)
+    k = np.union1d(i, j)  # sorted unique
+    i_map = np.searchsorted(k, i)
+    j_map = np.searchsorted(k, j)
+    return k, i_map, j_map
+
+
+def sorted_intersect(i: np.ndarray, j: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sorted intersection with index maps *into the inputs*.
+
+    Returns ``(k, i_map, j_map)`` with ``i[i_map] == k`` and ``j[j_map] == k``
+    (the paper records how K sits within I and J).
+    """
+    i = np.asarray(i)
+    j = np.asarray(j)
+    k = np.intersect1d(i, j, assume_unique=True)
+    i_map = np.searchsorted(i, k)
+    j_map = np.searchsorted(j, k)
+    return k, i_map, j_map
+
+
+# ---------------------------------------------------------------------------
+# Device (jnp, shape-static) — used by AssocTensor
+#
+# Inputs are int32 rank arrays of static length, sorted ascending, padded at
+# the tail with INT_SENTINEL.  Outputs have static capacity len(i)+len(j)
+# (union) / min(len(i), len(j)) (intersection), padded the same way, plus the
+# actual count.
+# ---------------------------------------------------------------------------
+
+def sorted_union_padded(i: jnp.ndarray, j: jnp.ndarray):
+    """Shape-static sorted union of sentinel-padded sorted int32 arrays.
+
+    Returns ``(k, nk, i_map, j_map)``:
+      * ``k``:  int32[len(i)+len(j)] sorted union, sentinel-padded,
+      * ``nk``: int32 scalar count of valid entries,
+      * ``i_map``/``j_map``: positions of each input element within ``k``
+        (sentinel positions map to the tail and are masked by callers).
+
+    Strategy: positions in the merged order are computable analytically —
+    element ``i[m]`` lands at ``m + (# j strictly below it)`` and ``j[n]`` at
+    ``n + (# i at-or-below it)``; duplicates collapse because the j-copy maps
+    onto the i-copy's slot.  A scatter-min compacts the union.  This is the
+    merge-path formulation the Pallas kernel tiles.
+    """
+    ni_cap, nj_cap = i.shape[0], j.shape[0]
+    cap = ni_cap + nj_cap
+    sent = jnp.int32(INT_SENTINEL)
+
+    # rank of each element in the merged multiset
+    i_in_j = jnp.searchsorted(j, i, side="left")   # # of j strictly less
+    j_in_i = jnp.searchsorted(i, j, side="right")  # # of i less-or-equal
+    i_pos = jnp.arange(ni_cap, dtype=jnp.int32) + i_in_j.astype(jnp.int32)
+    j_pos = jnp.arange(nj_cap, dtype=jnp.int32) + j_in_i.astype(jnp.int32)
+
+    # duplicates: j element equal to some i element occupies the same slot
+    j_dup = (j_in_i > 0) & (i[jnp.clip(j_in_i - 1, 0, ni_cap - 1)] == j)
+    j_pos = jnp.where(j_dup, j_pos - 1, j_pos)
+
+    # merged array with duplicates collapsed; sentinel-valid mask
+    merged = jnp.full((cap,), sent, dtype=jnp.int32)
+    merged = merged.at[i_pos].set(i, mode="drop")
+    merged = merged.at[j_pos].set(j, mode="drop")
+
+    # compact: valid slots are those < sentinel; stable-partition via argsort
+    # of (is_sentinel, position) — equivalently sort merged (sentinels sort
+    # to the tail and order among valid entries is already ascending).
+    slot_valid = merged != sent
+    order = jnp.argsort(~slot_valid, stable=True)  # valid slots first, in order
+    k = merged[order]
+    nk = slot_valid.sum().astype(jnp.int32)
+
+    # index maps: position of the slot each element landed in after compaction
+    inv = jnp.zeros((cap,), dtype=jnp.int32).at[order].set(
+        jnp.arange(cap, dtype=jnp.int32))
+    i_map = inv[i_pos]
+    j_map = inv[j_pos]
+    # sentinel inputs map to tail
+    i_map = jnp.where(i == sent, cap - 1, i_map)
+    j_map = jnp.where(j == sent, cap - 1, j_map)
+    return k, nk, i_map, j_map
+
+
+def sorted_intersect_padded(i: jnp.ndarray, j: jnp.ndarray):
+    """Shape-static sorted intersection of sentinel-padded sorted arrays.
+
+    Returns ``(k, nk, i_map, j_map)`` with capacity ``min(len(i), len(j))``;
+    ``i_map``/``j_map`` give, for each valid ``k[t]``, its position in ``i``
+    / ``j`` (tail positions are clamped and masked by ``t < nk``).
+    """
+    cap = min(i.shape[0], j.shape[0])
+    sent = jnp.int32(INT_SENTINEL)
+
+    pos_in_j = jnp.searchsorted(j, i, side="left")
+    hit = (pos_in_j < j.shape[0]) & (j[jnp.clip(pos_in_j, 0, j.shape[0] - 1)] == i)
+    hit = hit & (i != sent)
+
+    # compact the hits into the first nk slots, preserving order
+    order = jnp.argsort(~hit, stable=True)[:cap]
+    nk = hit.sum().astype(jnp.int32)
+    valid = jnp.arange(cap) < nk
+    k = jnp.where(valid, i[order], sent)
+    i_map = jnp.where(valid, order.astype(jnp.int32), jnp.int32(0))
+    j_map = jnp.where(valid, pos_in_j[order].astype(jnp.int32), jnp.int32(0))
+    return k, nk, i_map, j_map

@@ -1,0 +1,10 @@
+"""repro.distributed — fault tolerance, straggler mitigation, compression,
+and D4M-semiring telemetry for multi-pod runs."""
+from .compression import compress_tree, decompress_tree
+from .fault_tolerance import (FaultToleranceConfig, HeartbeatMonitor,
+                              RestartPolicy, StragglerMitigator, run_resilient)
+from .metrics import MetricsStore
+
+__all__ = ["HeartbeatMonitor", "RestartPolicy", "StragglerMitigator",
+           "FaultToleranceConfig", "run_resilient", "MetricsStore",
+           "compress_tree", "decompress_tree"]

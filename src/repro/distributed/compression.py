@@ -1,0 +1,46 @@
+"""Gradient compression for cross-pod (DCI) all-reduce.
+
+int8 block quantization with **error feedback**: the quantization residual
+is carried to the next step so the compressed SGD direction stays unbiased
+in the long run (standard EF-SGD construction).  Intended for the gradient
+sync across the ``pod`` axis where bandwidth is ~10× scarcer than ICI;
+intra-pod reduction stays full-precision.
+
+The quantizer reuses the optimizer's shape-preserving q8 layout so sharded
+specs transfer verbatim.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import dequantize_q8, quantize_q8
+
+
+def compress_tree(grads, error_state: Optional[Any] = None):
+    """(compressed, new_error_state).  compressed leaves: {"q","s"}."""
+    if error_state is None:
+        error_state = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                                   grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        packed = quantize_q8(corrected)
+        deq = dequantize_q8(packed, g.shape)
+        return packed, corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def decompress_tree(compressed, shapes_like, dtype=jnp.float32):
+    flat_c, tdef = jax.tree.flatten(
+        shapes_like)  # structure reference
+    flat_packed = tdef.flatten_up_to(compressed)
+    return tdef.unflatten([
+        dequantize_q8(p, s.shape, dtype) for p, s in zip(flat_packed, flat_c)])

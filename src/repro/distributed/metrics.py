@@ -1,0 +1,68 @@
+"""Training telemetry as D4M associative arrays.
+
+Metrics are triples ``(step, metric_name) → value`` — an associative array.
+Merging across hosts, restarts or duplicated retries is the semiring ⊕:
+
+* idempotent aggregators (``max``/``min``/``last``) make merges retry-safe —
+  re-reporting the same step after a restart cannot corrupt history;
+* cross-host reduction of counters uses ``sum``; gauges use ``max``.
+
+That uniform merge semantics is what lets the fault-tolerance layer replay
+work without bookkeeping — D4M's aggregation-on-collision doing systems
+work (§4 of DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import Assoc
+
+
+class MetricsStore:
+    def __init__(self, aggregate="last"):
+        self.table = Assoc()
+        self.aggregate = aggregate
+
+    def log(self, step: int, values: Dict[str, float]):
+        names = list(values)
+        upd = Assoc([float(step)] * len(names), names,
+                    [float(values[n]) for n in names])
+        self.table = self.table.combine(upd, {"last": lambda a, b: b,
+                                              "max": max, "min": min,
+                                              "sum": lambda a, b: a + b,
+                                              }[self.aggregate]) \
+            if self.table.nnz() else upd
+
+    def merge(self, other: "MetricsStore") -> "MetricsStore":
+        """Cross-host / cross-restart merge — ⊕ on collisions."""
+        out = MetricsStore(self.aggregate)
+        if self.table.nnz() and other.table.nnz():
+            out.table = self.table.combine(
+                other.table, {"last": lambda a, b: b, "max": max,
+                              "min": min, "sum": lambda a, b: a + b
+                              }[self.aggregate])
+        else:
+            out.table = (self.table if self.table.nnz() else other.table).copy()
+        return out
+
+    def series(self, name: str):
+        if self.table.nnz() == 0:
+            return np.zeros((0,)), np.zeros((0,))
+        col = self.table[:, name]
+        r, _, v = col.triples()
+        order = np.argsort(r.astype(float))
+        return r.astype(float)[order], v[order]
+
+    def to_dict(self) -> Dict:
+        r, c, v = self.table.triples()
+        return {"rows": r.tolist(), "cols": c.tolist(), "vals": v.tolist(),
+                "aggregate": self.aggregate}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "MetricsStore":
+        ms = MetricsStore(d.get("aggregate", "last"))
+        if d["rows"]:
+            ms.table = Assoc(d["rows"], d["cols"], d["vals"])
+        return ms

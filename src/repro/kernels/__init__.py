@@ -1,0 +1,10 @@
+"""repro.kernels — Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships three files:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling,
+  ops.py    — jitted public wrapper (padding, impl dispatch),
+  ref.py    — pure-jnp oracle used by the allclose test sweeps.
+
+Kernels are validated in interpret mode on CPU; TPU is the deployment
+target.  See DESIGN.md §2 for the CPU-scipy → TPU adaptation story.
+"""

@@ -1,0 +1,31 @@
+"""Jitted wrapper + block-mask construction from padded COO."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import get_semiring
+from .bsr_spgemm import bsr_spgemm_pallas
+from .ref import bsr_spgemm_ref
+
+
+def make_block_mask(rows, cols, valid, mb: int, kb: int, *, bm=128, bk=128):
+    """Per-tile presence mask from COO coordinates (int32 [MB, KB])."""
+    r = jnp.where(valid, rows // bm, mb)
+    c = jnp.where(valid, cols // bk, kb)
+    mask = jnp.zeros((mb + 1, kb + 1), jnp.int32).at[r, c].add(1, mode="drop")
+    return (mask[:mb, :kb] > 0).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("semiring", "impl", "bm", "bn", "bk"))
+def bsr_spgemm(a, block_mask, b, *, semiring="plus_times", impl="auto",
+               bm: int = 128, bn: int = 128, bk: int | None = None):
+    sr = get_semiring(semiring)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return bsr_spgemm_ref(a, block_mask, b, semiring=sr, bm=bm, bk=bk)
+    return bsr_spgemm_pallas(a, block_mask, b, semiring=sr, bm=bm, bn=bn,
+                             bk=bk, interpret=(impl == "interpret"))

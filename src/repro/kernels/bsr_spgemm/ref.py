@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: mask-expanded semiring matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.semiring import get_semiring
+
+
+def bsr_spgemm_ref(a, block_mask, b, *, semiring="plus_times",
+                   bm: int = 128, bk: int | None = None):
+    sr = get_semiring(semiring)
+    if bk is None:
+        bk = 128
+    m, kdim = a.shape
+    mask_full = jnp.repeat(jnp.repeat(block_mask != 0, bm, axis=0), bk, axis=1)
+    a_masked = jnp.where(mask_full, a.astype(jnp.float32), sr.zero)
+    return sr.matmul_dense(a_masked, b.astype(jnp.float32)).astype(jnp.float32)

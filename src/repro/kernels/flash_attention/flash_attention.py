@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: flash attention (online softmax) with GQA broadcast.
+
+Softmax attention is itself a semiring-flavoured contraction: the online-
+softmax recurrence maintains a running ``(max, Σexp)`` pair — a rescaled
+``(max,+)`` fold over key blocks — which is why this kernel shares its tile
+plumbing with ``semiring_matmul`` (K-sequential grid + VMEM accumulators).
+It exists because the reference path materializes the S×S score matrix in
+HBM, which the roofline analysis shows dominates the memory term for every
+train/prefill cell; the kernel keeps scores in VMEM so HBM traffic drops to
+Q/K/V/O only.
+
+Layout: q [B, H, Sq, D], k/v [B, KV, Sk, D] (GQA: the index_map points each
+q-head block at its kv group, never materializing repeated K/V).  Grid is
+(B, H, Sq/bq, Sk/bk) with the key dimension innermost; scratch carries
+(acc, running max m, running sum l).  Causal/window masks come from global
+position offsets, so the same kernel serves train (q_off=0) and chunked
+prefill.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window, bq: int, bk: int,
+            nk: int, q_off: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, ...]                  # [bq, d]
+    k = k_ref[0, 0, ...]                  # [bk, d]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [bq, bk]
+
+    qpos = q_off + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                  # [bq]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)       # rescale factor for old state
+    p = jnp.exp(s - m_cur[:, None])       # [bq, bk]
+    l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=1)
+    m_ref[:, 0] = m_cur
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0, ...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
+                           sm_scale=None, q_off: int = 0,
+                           bq: int = 256, bk: int = 256,
+                           interpret: bool = False):
+    """q [B,H,Sq,D], k/v [B,KV,Sk,D] → o [B,H,Sq,D] (same dtype as q)."""
+    b, h, sq, d = q.shape
+    _, kv, sk, _ = k.shape
+    g = h // kv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nk = sk // bk
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, nk=nk, q_off=q_off),
+        grid=(b, h, sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: segmented inclusive scan over sorted key runs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_COMBINE = {"sum": jnp.add, "min": jnp.minimum, "max": jnp.maximum}
+
+
+def segment_scan_ref(keys: jnp.ndarray, vals: jnp.ndarray, *,
+                     combine: str = "sum"):
+    comb = _COMBINE[combine]
+    n = keys.shape[0]
+    vals = vals.astype(jnp.float32)
+
+    def assoc(a, b):
+        (ka, va), (kb, vb) = a, b
+        v = jnp.where(ka == kb, comb(va, vb), vb)
+        return kb, v
+
+    _, out = jax.lax.associative_scan(
+        lambda x, y: assoc(x, y), (keys, vals))
+    return out

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: segmented reduction over sorted key runs.
+
+The D4M constructor aggregates values whose (row, col) keys collide —
+after lexsorting, collisions are contiguous *runs*.  This kernel computes,
+for every position, the inclusive ⊕-combine of its run prefix, carrying
+(last key, running value) across blocks through VMEM scratch so runs may
+span block boundaries.  The run-LAST positions then hold each run's total;
+``ops.py`` extracts them.  Within a block the scan is a Hillis-Steele
+segmented doubling scan — log2(block) vector steps, no scalar loop.
+
+Supported combines: sum / min / max (the aggregators device AssocTensors
+use; string concat stays on host, see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_COMBINE = {
+    "sum": (jnp.add, 0.0),
+    "min": (jnp.minimum, float("inf")),
+    "max": (jnp.maximum, float("-inf")),
+}
+
+
+def _kernel(keys_ref, vals_ref, out_ref, carry_k, carry_v, *,
+            combine_name: str, bn: int, nb: int):
+    ib = pl.program_id(0)
+    comb, ident = _COMBINE[combine_name]
+
+    @pl.when(ib == 0)
+    def _init():
+        carry_k[...] = jnp.full_like(carry_k, jnp.int32(-2147483648))
+        carry_v[...] = jnp.full_like(carry_v, ident)
+
+    keys = keys_ref[...]      # [1, bn] int32
+    vals = vals_ref[...]      # [1, bn] f32
+
+    # Hillis-Steele segmented inclusive scan within the block
+    acc = vals
+    seg = keys
+    step = 1
+    while step < bn:
+        sh_acc = jnp.roll(acc, step, axis=1)
+        sh_seg = jnp.roll(seg, step, axis=1)
+        pos_ok = jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1) >= step
+        same = (sh_seg == seg) & pos_ok
+        acc = jnp.where(same, comb(acc, sh_acc), acc)
+        step *= 2
+
+    # merge the carry from the previous block into the leading run
+    same_as_carry = keys == carry_k[0, 0]
+    lead = jnp.cumprod(same_as_carry.astype(jnp.int32), axis=1).astype(bool)
+    acc = jnp.where(lead, comb(acc, carry_v[0, 0]), acc)
+
+    out_ref[...] = acc
+    carry_k[0, 0] = keys[0, bn - 1]
+    carry_v[0, 0] = acc[0, bn - 1]
+
+
+def segment_scan_pallas(keys: jnp.ndarray, vals: jnp.ndarray, *,
+                        combine: str = "sum", bn: int = 1024,
+                        interpret: bool = False):
+    """Inclusive segmented ⊕-scan of vals over sorted int32 key runs."""
+    n = keys.shape[0]
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, combine_name=combine, bn=bn, nb=n // bn),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda ib: (0, ib)),
+            pl.BlockSpec((1, bn), lambda ib: (0, ib)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda ib: (0, ib)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.int32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys[None], vals[None].astype(jnp.float32))
+    return out[0]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the semiring matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.semiring import get_semiring
+
+
+def semiring_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, *,
+                        semiring="plus_times") -> jnp.ndarray:
+    sr = get_semiring(semiring)
+    return sr.matmul_dense(a.astype(jnp.float32),
+                           b.astype(jnp.float32)).astype(jnp.float32)

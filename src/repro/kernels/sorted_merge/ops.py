@@ -1,0 +1,56 @@
+"""Jitted wrappers: union/intersection index maps from rank counts.
+
+These back the device AssocTensor's keyspace alignment (the paper's §II.C
+index maps).  ``merge_index_maps`` reproduces exactly the contract of
+``repro.core.sorted_ops.sorted_union_padded`` but with the Pallas
+rank-count kernel as the inner primitive.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sorted_ops import INT_SENTINEL
+from .ref import rank_count_ref
+from .sorted_merge import rank_count_pallas
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def rank_count(i, j, *, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return rank_count_ref(i, j)
+    pad_i = (-i.shape[0]) % 512 if i.shape[0] > 512 else (-i.shape[0]) % 8
+    pad_j = (-j.shape[0]) % 512 if j.shape[0] > 512 else (-j.shape[0]) % 8
+    ip = jnp.pad(i, (0, pad_i), constant_values=INT_SENTINEL)
+    jp = jnp.pad(j, (0, pad_j), constant_values=INT_SENTINEL)
+    bi = min(512, ip.shape[0])
+    bj = min(512, jp.shape[0])
+    rank, hit = rank_count_pallas(ip, jp, bi=bi, bj=bj,
+                                  interpret=(impl == "interpret"))
+    # sentinel tails in J inflate nothing (< any valid key is False), but
+    # sentinel I entries count all valid J — callers mask by validity.
+    return rank[:i.shape[0]], hit[:i.shape[0]]
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def merge_positions(i, j, *, impl: str = "auto"):
+    """UNION positions for two sorted, repetition-free, sentinel-padded
+    int32 arrays — duplicates collapse onto one shared slot.
+
+    A duplicate shrinks the union by one, so every element must also
+    subtract the number of collapsed pairs BELOW it: that count is the
+    exclusive cumsum of its own side's hit flags (both sides are sorted, so
+    pairs below i[m] are exactly the matched i's before m)."""
+    r_ij, hit_ij = rank_count(i, j, impl=impl)    # J below / matching each I
+    r_ji, hit_ji = rank_count(j, i, impl=impl)    # I below / matching each J
+    dup_below_i = jnp.cumsum(hit_ij) - hit_ij     # exclusive
+    dup_below_j = jnp.cumsum(hit_ji) - hit_ji
+    ni, nj = i.shape[0], j.shape[0]
+    i_pos = jnp.arange(ni, dtype=jnp.int32) + r_ij - dup_below_i
+    j_pos = jnp.arange(nj, dtype=jnp.int32) + r_ji - dup_below_j
+    j_dup = hit_ji > 0
+    return i_pos, j_pos, j_dup

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the rank-count kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rank_count_ref(i: jnp.ndarray, j: jnp.ndarray):
+    """rank[m] = #{n : j[n] < i[m]};  hit[m] = #{n : j[n] == i[m]}."""
+    rank = jnp.searchsorted(j, i, side="left").astype(jnp.int32)
+    right = jnp.searchsorted(j, i, side="right").astype(jnp.int32)
+    return rank, right - rank

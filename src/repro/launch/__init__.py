@@ -1,0 +1,1 @@
+"""repro.launch — mesh construction, sharding rules, step builders, dry-run."""

@@ -1,0 +1,119 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+``compiled.cost_analysis()`` supplies HLO FLOPs and bytes accessed;
+collective traffic is NOT in cost_analysis, so we parse the post-SPMD HLO
+text and sum operand bytes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute, applying standard ring-algorithm byte
+multipliers.  Post-SPMD HLO shapes are per-device, so the sums are already
+per-chip quantities — exactly what the roofline denominator wants.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+# -- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS = 197e12         # bf16 per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link (≈, per the brief)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.  "bf16[16,4096,448]{2,1,0}"  or  "f32[128]"  or tuple "(bf16[..], ..)"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+# ring-algorithm per-chip byte multipliers (n = group size, large-n limit)
+_ALGO_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,          # (n-1)/n ≈ 1
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind per-chip collective bytes (algo-factored) + raw counts."""
+    out: Dict[str, float] = {k: 0.0 for k in _ALGO_FACTOR}
+    counts: Dict[str, int] = {k: 0 for k in _ALGO_FACTOR}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        result_shape, kind = m.group(1), m.group(2)
+        b = _shape_bytes(result_shape)
+        out[kind] += b * _ALGO_FACTOR[kind]
+        counts[kind] += 1
+    out_total = sum(out.values())
+    return {"per_kind": out, "counts": counts, "total": out_total}
+
+
+def roofline_terms(cost: Dict[str, Any], coll: Dict[str, Any],
+                   n_chips: int, *, ici_links: int = 4) -> Dict[str, float]:
+    """The three roofline terms in seconds (per step, per chip).
+
+    cost_analysis flops/bytes on a post-SPMD module are per-device program
+    quantities; collective bytes likewise.  ici_links: v5e has 4 ICI links
+    per chip on a 2-D torus (x±, y±).
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    coll_b = float(coll["total"])
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_hbm / HBM_BW,
+        "collective_s": coll_b / (ICI_BW * ici_links),
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_hbm,
+        "collective_bytes_per_chip": coll_b,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    three = {k: terms[k] for k in ("compute_s", "memory_s", "collective_s")}
+    return max(three, key=three.get)
+
+
+def model_flops(cfg, shape, n_active_params: float) -> float:
+    """6·N·D (N = active params, D = tokens processed by the step)."""
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_active_params * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_active_params * d  # forward only
+    return 2.0 * n_active_params * shape.global_batch  # decode: 1 tok/seq
+
+
+def active_param_count(cfg, total_params: float) -> float:
+    """MoE: only top-k experts (+ shared + dense layers) count as active."""
+    if not cfg.moe:
+        return total_params
+    mo = cfg.moe
+    d = cfg.d_model
+    per_expert = 3 * d * mo["d_ff"]
+    n_moe_layers = cfg.n_layers - mo.get("first_dense", 0)
+    routed_total = mo["n_experts"] * per_expert * n_moe_layers
+    routed_active = mo["top_k"] * per_expert * n_moe_layers
+    return total_params - routed_total + routed_active

@@ -1,0 +1,271 @@
+"""Static HLO analyzer with loop-trip multipliers.
+
+``compiled.cost_analysis()`` (and any naive text scan) counts a ``while``
+body ONCE — but every layer stack here is a ``lax.scan``, so FLOPs, HBM
+bytes and collective bytes would be undercounted by ~n_layers.  This module
+parses the post-SPMD HLO text into computations, walks the call graph from
+ENTRY, multiplies through ``while`` trip counts (recovered from the loop
+condition's comparison constant), and accumulates:
+
+  * ``flops``            — 2·M·N·K for every dot (+ batch dims), the
+                           dominant term; convolutions approximated the same
+                           way (window product as K).
+  * ``hbm_bytes``        — Σ (operand + result bytes) over *HBM-boundary*
+                           ops: fusions, dots, collectives, copies,
+                           gather/scatter/dynamic-slice/DUS, sort, reduce.
+                           Ops inside fusion bodies don't touch HBM and are
+                           excluded (roofline convention).
+  * ``collective_bytes`` — per-kind result bytes × ring algorithm factor.
+
+Shapes are post-SPMD = per-device, so all outputs are per-chip quantities.
+This is a structural estimate (buffer reuse and fusion boundaries are
+approximations) — exactly the granularity a dry-run roofline needs.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_CALLED = re.compile(
+    r"(?:condition|body|to_apply|called_computations|branch_computations|"
+    r"fusion)=\{?%?([\w\.\-_,%\s]+)\}?")
+_OPERAND = re.compile(r"%([\w\.\-_]+)")
+
+_ALGO_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+_COLL_BASE = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+_HBM_OPS_PREFIX = (
+    "fusion", "dot", "convolution", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "sort", "reduce", "transpose",
+    "broadcast", "iota", "concatenate", "slice", "reverse", "pad", "select",
+    "add", "multiply", "subtract", "divide", "exponential", "rsqrt", "tanh",
+    "convert", "compare", "maximum", "minimum", "log", "custom-call",
+) + _COLL_BASE
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+class Op:
+    __slots__ = ("name", "shape", "kind", "rest", "operands", "called")
+
+    def __init__(self, name, shape, kind, rest):
+        self.name = name
+        self.shape = shape
+        self.kind = kind
+        self.rest = rest
+        self.operands = []
+        self.called = []
+
+
+def parse_hlo(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    entry_name = None
+    for line in text.splitlines():
+        h = _COMP_HDR.match(line.strip()) if ("{" in line and "->" in line) else None
+        if h:
+            cur = h.group(2)
+            comps[cur] = []
+            if h.group(1):
+                entry_name = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, kind, rest = m.groups()
+        op = Op(name, shape, kind, rest)
+        # operand names: up to the closing paren of the op call
+        paren = rest.split(")")[0]
+        op.operands = _OPERAND.findall(paren)
+        for cm in _CALLED.finditer(rest):
+            for c in cm.group(1).split(","):
+                c = c.strip().lstrip("%")
+                if c:
+                    op.called.append(c)
+        comps[cur].append(op)
+    if entry_name is not None and entry_name != "__entry__":
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Trip count of a lax.scan while: max integer constant in condition."""
+    best = 1
+    for op in comps.get(cond_name, []):
+        m = re.search(r"\bconstant\((\d+)\)", f"{op.kind}({op.rest}")
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_dims = _shape_dims(op.shape)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contracting dims from lhs
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    k = 1
+    if m and op.operands:
+        lhs_shape = shapes.get(op.operands[0], "")
+        lhs_dims = _shape_dims(lhs_shape)
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(lhs_dims):
+                k *= lhs_dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_dims = _shape_dims(op.shape)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    rhs = shapes.get(op.operands[1], "") if len(op.operands) > 1 else ""
+    k = 1
+    for d in _shape_dims(rhs):
+        k *= d
+    return 2.0 * out_elems * max(k, 1) / max(out_dims[-1] if out_dims else 1, 1)
+
+
+def analyze(text: str, detail: bool = False) -> Dict[str, float]:
+    """detail=True adds ``top_hbm``: the 15 largest HBM-traffic op groups
+    keyed by (kind, result shape) — used by §Perf to attribute the memory
+    term (e.g. how much is attention-score traffic)."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:  # fallback: biggest computation
+        entry = max(comps.values(), key=len) if comps else []
+
+    flops = 0.0
+    hbm = 0.0
+    hbm_by: Dict[str, float] = defaultdict(float)
+    coll: Dict[str, float] = defaultdict(float)
+    coll_counts: Dict[str, float] = defaultdict(float)
+    fusion_bodies = set()
+    for cs in comps.values():
+        for op in cs:
+            if op.kind == "fusion":
+                fusion_bodies.update(op.called)
+
+    seen_stack = []
+
+    def walk(ops: List[Op], mult: float, in_fusion: bool):
+        nonlocal flops, hbm
+        shapes = {op.name: op.shape for op in ops}
+        for op in ops:
+            kind = op.kind
+            base = kind.replace("-start", "").replace("-done", "")
+            if kind == "dot":
+                flops += mult * _dot_flops(op, shapes)
+            elif kind == "convolution":
+                flops += mult * _conv_flops(op, shapes)
+            if not in_fusion:
+                if base in _COLL_BASE and not kind.endswith("-done"):
+                    _, b = _shape_elems_bytes(op.shape)
+                    coll[base] += mult * b * _ALGO_FACTOR[base]
+                    coll_counts[base] += mult
+                if (not kind.endswith("-done")
+                        and any(kind.startswith(p) for p in _HBM_OPS_PREFIX)):
+                    _, ob = _shape_elems_bytes(op.shape)
+                    opb = [_shape_elems_bytes(shapes.get(o, ""))[1]
+                           for o in op.operands]
+                    if kind == "dynamic-update-slice":
+                        # in-place: traffic = 2 × update slice, not the buffer
+                        upd = opb[1] if len(opb) > 1 else 0
+                        contrib = mult * 2 * upd
+                    elif kind == "dynamic-slice":
+                        contrib = mult * 2 * ob
+                    elif kind == "copy":
+                        contrib = mult * 2 * ob
+                    elif kind == "fusion" and "dynamic-update-slice" in op.name:
+                        # in-place update fusion: result aliases the big
+                        # operand; count only the non-aliased operands twice
+                        big = max(opb) if opb else 0
+                        contrib = mult * 2 * (sum(opb) - big)
+                    else:
+                        contrib = mult * (ob + sum(opb))
+                    hbm += contrib
+                    if detail:
+                        shp = op.shape.split("{")[0].strip()
+                        hbm_by[f"{kind}:{shp}"] += contrib
+            # recurse
+            if kind == "while":
+                body, cond = None, None
+                mb = re.search(r"body=%?([\w\.\-_]+)", op.rest)
+                mc = re.search(r"condition=%?([\w\.\-_]+)", op.rest)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _trip_count(comps, cond) if cond else 1
+                if body in comps and body not in seen_stack:
+                    seen_stack.append(body)
+                    walk(comps[body], mult * trips, in_fusion)
+                    seen_stack.pop()
+            elif kind == "fusion":
+                for c in op.called:
+                    if c in comps and c not in seen_stack:
+                        seen_stack.append(c)
+                        walk(comps[c], mult, True)
+                        seen_stack.pop()
+            elif kind in ("call", "conditional", "map", "reduce", "sort",
+                          "scatter", "reduce-window", "select-and-scatter",
+                          "custom-call", "all-reduce", "reduce-scatter"):
+                for c in op.called:
+                    if c in comps and c not in seen_stack:
+                        seen_stack.append(c)
+                        walk(comps[c], mult, True)
+                        seen_stack.pop()
+
+    walk(entry, 1.0, False)
+    out = {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": dict(coll),
+        "collective_counts": dict(coll_counts),
+        "collective_total": sum(coll.values()),
+    }
+    if detail:
+        out["top_hbm"] = sorted(hbm_by.items(), key=lambda kv: -kv[1])[:15]
+    return out

@@ -1,0 +1,85 @@
+"""Serving driver: prefill + batched decode with static-shape caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+
+Demonstrates the inference path the decode_* dry-run cells lower: one
+prefill builds the KV/SSM caches at fixed capacity, then a jitted
+single-token step is iterated.  Request batching is static-shape (padded
+slots), the production pattern for TPU serving.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.models import model as M
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(remat="none")
+    mesh = make_host_mesh(1, 1)
+    rng = jax.random.PRNGKey(args.seed)
+    params, _ = M.init(rng, cfg)
+
+    b, p, g = args.batch, args.prompt_len, args.gen
+    cache_len = p + g
+    prompts = jax.random.randint(rng, (b, p), 0, cfg.vocab, dtype=jnp.int32)
+    enc = (jax.random.normal(rng, (b, cfg.encdec["enc_frames"], cfg.d_model),
+                             jnp.float32).astype(cfg.compute_dtype)
+           if cfg.encdec else None)
+
+    serve_step = jax.jit(S.make_serve_step(cfg), donate_argnums=(1,))
+
+    with mesh:
+        # prefill: build caches at decode capacity by running token-by-token
+        # for non-divisible prompt lengths (smoke scale), or via the prefill
+        # step + host-side repack at production scale.
+        cache = M.init_cache(cfg, b, cache_len)
+        t0 = time.time()
+        tok = prompts[:, :1]
+        logits = None
+        for t in range(p):
+            logits, cache = serve_step(params, cache, prompts[:, t:t + 1],
+                                       jnp.int32(t))
+        t_prefill = time.time() - t0
+
+        # decode loop (greedy)
+        out_tokens = []
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        t0 = time.time()
+        for t in range(p, p + g):
+            out_tokens.append(np.asarray(tok))
+            logits, cache = serve_step(params, cache, tok, jnp.int32(t))
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(logits)
+        t_decode = time.time() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"[serve] batch={b} prefill({p} tok)={t_prefill:.2f}s "
+          f"decode {g} tok in {t_decode:.2f}s "
+          f"({1000 * t_decode / g:.1f} ms/tok/batch)")
+    print(f"[serve] sample generated ids: {gen[0][:16].tolist()}")
+    assert gen.shape == (b, g) and np.isfinite(np.asarray(logits)).all()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,218 @@
+"""Logical-axis → mesh-axis translation (TP / FSDP / EP / SP rules).
+
+Model code annotates every parameter with logical axis names (see
+``repro.models.layers``); this module turns those into ``PartitionSpec``s
+for a concrete mesh, checking divisibility so non-shardable dims degrade to
+replication instead of failing at compile (e.g. minicpm's prime-ish vocab
+122753, mamba2-130m's 24 SSM heads on a 16-way model axis).
+
+Policy (baseline — §Perf iterates on it):
+  * TP over ``model``: heads/kv/mlp/vocab (+ expert hidden when
+    ``moe_sharding == "tp"``); EP over ``model``: expert axis when
+    ``moe_sharding == "ep"``.
+  * FSDP over ``data``: the "embed" axis of every ≥2-D parameter — combined
+    with TP this fully shards large weights over the whole pod; XLA inserts
+    the per-layer all-gathers inside the scan (ZeRO-3 behaviour).
+  * DP over ``("pod", "data")``: batch dims of inputs/activations; the
+    ``pod`` axis never shards parameters (gradient all-reduce crosses DCI
+    once per step; parameter collectives stay on ICI).
+  * Optimizer moments inherit the param spec leaf-wise (q8 scales drop the
+    last axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import batch_axes
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def logical_rules(cfg, *, fsdp: bool = True, fsdp_over_pod: bool = False,
+                  parallelism: str = "2d") -> Dict[str, Any]:
+    ep = (cfg.moe_sharding == "ep") if cfg.moe else False
+    embed = None
+    if fsdp:
+        # ≥300B models must shard parameters across pods too (ZeRO over
+        # DCI): a 671B AdamW state cannot fit one pod's aggregate HBM.
+        embed = ("pod", "data") if fsdp_over_pod else "data"
+    if parallelism == "fsdp_only":
+        # §Perf: for small models TP's per-layer activation all-reduces
+        # dominate; fold the model axis into data parallelism instead —
+        # params fully sharded over BOTH axes, zero TP collectives.
+        return {
+            "layers": None,
+            "embed": ("data", "model") if fsdp else None,
+            "heads": None, "kv": None, "mlp": None, "vocab": None,
+            "expert": "model" if ep else None, "expert_mlp": None,
+            None: None,
+        }
+    ep2d = bool(cfg.moe) and cfg.moe_sharding == "ep2d"
+    # 2-D expert parallelism: experts over data×model (DeepSeek's EP-256
+    # deployment) — each chip OWNS its experts outright, so no per-layer
+    # FSDP weight gather; dispatch becomes an all-to-all.
+    expert_axis: Any = (("data", "model") if ep2d
+                        else ("model" if ep else None))
+    return {
+        "layers": None,
+        "embed": embed,
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": expert_axis,
+        "expert_mlp": "model" if not (ep or ep2d) else None,
+        None: None,
+    }
+
+
+def spec_for_shape(shape: Tuple[int, ...], logical: Tuple, rules, mesh: Mesh,
+                   *, keep_1d_replicated: bool = True) -> P:
+    """Translate one logical tuple, dropping axes that don't divide."""
+    if len(logical) != len(shape):
+        raise ValueError(f"logical {logical} vs shape {shape}")
+    if keep_1d_replicated and len(shape) < 2:
+        return P()
+    out = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        mesh_axis = rules.get(name)
+        if isinstance(mesh_axis, tuple):  # e.g. FSDP over ("pod", "data")
+            axes = tuple(a for a in mesh_axis if a in mesh.axis_names)
+            sz = 1
+            for a in axes:
+                sz *= _axis_size(mesh, a)
+            if axes and not (set(axes) & used) and dim % sz == 0:
+                out.append(axes)
+                used.update(axes)
+            elif axes and dim % _axis_size(mesh, axes[-1]) == 0 \
+                    and axes[-1] not in used:
+                out.append(axes[-1])
+                used.add(axes[-1])
+            else:
+                out.append(None)
+            continue
+        if (mesh_axis is None or mesh_axis in used
+                or dim % _axis_size(mesh, mesh_axis) != 0):
+            out.append(None)
+        else:
+            out.append(mesh_axis)
+            used.add(mesh_axis)
+    return P(*out)
+
+
+def param_specs(shapes_tree, logical_tree, cfg, mesh: Mesh, *,
+                fsdp: bool = True, fsdp_over_pod: bool = False,
+                parallelism: str = "2d"):
+    """PartitionSpec pytree for params given shapes + logical annotations."""
+    rules = logical_rules(cfg, fsdp=fsdp, fsdp_over_pod=fsdp_over_pod,
+                          parallelism=parallelism)
+
+    def one(logical, shape_like):
+        shape = tuple(shape_like.shape)
+        return spec_for_shape(shape, tuple(logical), rules, mesh)
+
+    # logical_tree drives flattening: its leaves are tuples of axis names,
+    # which jax would otherwise treat as internal nodes.
+    return jax.tree.map(one, logical_tree, shapes_tree,
+                        is_leaf=lambda t: isinstance(t, tuple) and all(
+                            isinstance(x, (str, type(None))) for x in t))
+
+
+def shard_tree(shapes_tree, specs_tree, mesh: Mesh):
+    return jax.tree.map(lambda _, s: NamedSharding(mesh, s),
+                        shapes_tree, specs_tree,
+                        is_leaf=lambda t: isinstance(t, P))
+
+
+def batch_spec(global_batch: int, mesh: Mesh, ndim: int = 2,
+               parallelism: str = "2d") -> P:
+    """Shard the batch dim over (pod, data) when divisible, else degrade.
+
+    fsdp_only parallelism additionally folds `model` into the batch axes.
+    """
+    axes = [a for a in batch_axes(mesh)]
+    if parallelism == "fsdp_only":
+        axes.append("model")
+    while axes and global_batch % int(np.prod([_axis_size(mesh, a) for a in axes])):
+        axes.pop()  # drop innermost first (pod kept longest? drop data first)
+    b_axes = tuple(axes) if axes else None
+    rest = [None] * (ndim - 1)
+    return P(b_axes, *rest)
+
+
+def opt_state_specs(param_specs_tree, opt_state_shapes):
+    """Optimizer-state specs mirroring param specs.
+
+    m/v inherit the param's spec; q8 scale tensors ("s") drop the last axis
+    spec entry; count is replicated.
+    """
+    def mom(ps, st):
+        if isinstance(st, dict) and set(st) == {"q", "s"}:
+            s_spec = P(*ps[:-1], None) if len(ps) else P()
+            return {"q": ps, "s": s_spec}
+        return ps
+
+    return {
+        "m": jax.tree.map(mom, param_specs_tree, opt_state_shapes["m"],
+                          is_leaf=lambda t: isinstance(t, P)),
+        "v": jax.tree.map(mom, param_specs_tree, opt_state_shapes["v"],
+                          is_leaf=lambda t: isinstance(t, P)),
+        "count": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cache specs (decode/prefill)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg, cache_shapes, mesh: Mesh, global_batch: int):
+    """Shardings for the decode caches built by models.model.init_cache.
+
+    Leaves look like [L, B, S, ...]: batch over (pod, data) when divisible;
+    the trailing feature axis over `model` when divisible (kv heads for GQA,
+    the compressed latent for MLA — which is what makes a 61-layer 32k MLA
+    cache fit); `len` counters replicated.
+    """
+    b_ax = batch_spec(global_batch, mesh, ndim=1)[0]
+    model_size = _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        if name == "len":
+            return P()
+        if name in ("k", "v"):  # [L, B, S, KV, dh]
+            kv, dh = shape[3], shape[4]
+            if kv % model_size == 0:
+                return P(None, b_ax, None, "model", None)
+            if dh % model_size == 0:
+                # head-dim-sharded cache: scores/PV contract dh → one small
+                # psum per step, but the cache memory divides by |model|
+                # (crucial when kv_heads < |model|, e.g. GQA kv=2..8)
+                return P(None, b_ax, None, None, "model")
+            return P(None, b_ax, None, None, None)
+        if name == "ckv":       # [L, B, S, dc] — shard the latent (MLA)
+            return P(None, b_ax, None,
+                     "model" if shape[3] % model_size == 0 else None)
+        if name == "kr":        # [L, B, S, dr]
+            return P(None, b_ax, None,
+                     "model" if shape[3] % model_size == 0 else None)
+        if name == "h":         # [L, B, H, N, P] — SSM state
+            hshard = ("model" if (cfg.shard_ssm_heads and
+                                  shape[2] % model_size == 0) else None)
+            return P(None, b_ax, hshard, None, None)
+        if name in ("conv_x", "conv_bc"):  # [L, B, K-1, C]
+            c = shape[3]
+            cshard = "model" if (name == "conv_x" and c % model_size == 0) else None
+            return P(None, b_ax, None, cshard)
+        # fallback: batch on axis 1 if it matches
+        return P(*([None] + [b_ax] + [None] * (len(shape) - 2)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

@@ -1,0 +1,368 @@
+"""Step builders: train / prefill / serve, with input_specs for the dry-run.
+
+Everything here is mesh-agnostic pure functions plus a thin layer that
+computes in/out shardings and returns ``jax.jit`` objects ready to
+``.lower().compile()`` (dry-run) or execute (real run).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation — the same
+pattern the dry-run brief prescribes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import model as M
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from . import sharding as shd
+from .mesh import batch_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    peak_lr: float = 3e-4
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    max_grad_norm: float = 1.0
+    opt_state_policy: str = "fp32"   # fp32 | bf16 | q8
+    fsdp: bool = True
+    microbatch: int = 0              # >0: grad-accumulation chunks
+    grad_accum_dtype: str = "fp32"   # fp32 | bf16 (≥300B models)
+    fsdp_over_pod: bool = False      # ZeRO across pods (≥300B models)
+    parallelism: str = "2d"          # 2d (TP×FSDP) | fsdp_only (§Perf)
+    residual_budget: float = 4e9     # microbatch sizing target
+    offload_opt_state: bool = False  # pinned_host moments (TPU target only:
+    #                                  the CPU dry-run backend cannot compile
+    #                                  device-placement annotations)
+
+
+def default_train_options(cfg: ModelConfig) -> TrainOptions:
+    """Size-adaptive defaults: big models get low-precision moments."""
+    n = est_param_count(cfg)
+    if n > 3e11:
+        return TrainOptions(opt_state_policy="q8", grad_accum_dtype="bf16",
+                            fsdp_over_pod=True)
+    if n > 2e10:
+        return TrainOptions(opt_state_policy="bf16")
+    return TrainOptions()
+
+
+def auto_microbatch(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                    residual_budget: float = 4e9,
+                    parallelism: str = "2d") -> int:
+    """Grad-accumulation chunks bounding the saved-residual footprint.
+
+    The layer-scan saves one d_model residual per layer per live token
+    (full-remat policy), i.e. ``L·d·2B`` bytes/token — the dominant live
+    train buffer.  Choose the smallest power-of-two split keeping that
+    under ``residual_budget`` per device.
+    """
+    from .mesh import batch_axes
+    axes = list(batch_axes(mesh))
+    if parallelism == "fsdp_only":
+        axes.append("model")
+    data_sz = 1
+    for a in axes:
+        data_sz *= mesh.shape[a]
+    b_local = max(shape.global_batch // data_sz, 1)
+    tokens = b_local * shape.seq_len
+    per_token = cfg.n_layers * cfg.d_model * 2  # bf16 residual per layer
+    tokens_budget = max(int(residual_budget / per_token), shape.seq_len)
+    mb = 1
+    while (tokens // mb > tokens_budget and mb < b_local
+           and b_local % (mb * 2) == 0):
+        mb *= 2
+    return mb
+
+
+def est_param_count(cfg: ModelConfig) -> float:
+    """Closed-form parameter estimate (embeddings + stacks)."""
+    d = cfg.d_model
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    per_attn = d * cfg.n_heads * cfg.dh * 2 + d * cfg.n_kv_heads * cfg.dh * 2
+    if cfg.mla:
+        m = cfg.mla
+        per_attn = (d * m["q_lora_rank"]
+                    + m["q_lora_rank"] * cfg.n_heads * (m["qk_nope_dim"] + m["qk_rope_dim"])
+                    + d * (m["kv_lora_rank"] + m["qk_rope_dim"])
+                    + m["kv_lora_rank"] * cfg.n_heads * (m["qk_nope_dim"] + m["v_head_dim"])
+                    + cfg.n_heads * m["v_head_dim"] * d)
+    mlp_mult = 3 if cfg.act == "swiglu" else 2
+    per_mlp = mlp_mult * d * cfg.d_ff
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        s = cfg.ssm
+        per_ssm = d * s["d_inner"] * 3 + 2 * d * s["d_state"] * 2
+        n = cfg.n_layers * per_ssm + emb
+        if cfg.family == "hybrid":
+            n += per_attn + per_mlp
+        return n
+    if cfg.moe:
+        mo = cfg.moe
+        per_moe = mo["n_experts"] * 3 * d * mo["d_ff"] + \
+            mo.get("shared_expert", 0) * 3 * d * mo["d_ff"] + d * mo["n_experts"]
+        nd = mo.get("first_dense", 0)
+        return emb + nd * (per_attn + per_mlp) + \
+            (cfg.n_layers - nd) * (per_attn + per_moe)
+    n_stacks = 1 + (cfg.encdec["enc_layers"] / cfg.n_layers if cfg.encdec else 0)
+    return emb + cfg.n_layers * n_stacks * (per_attn + per_mlp)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), jnp.int32),
+                 "labels": sds((b, s), jnp.int32)}
+        if cfg.encdec:
+            batch["enc_inputs"] = sds(
+                (b, cfg.encdec["enc_frames"], cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.encdec:
+            out["enc_inputs"] = sds(
+                (b, cfg.encdec["enc_frames"], cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a cache of seq_len
+    cache_shapes = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    return {"tokens": sds((b, 1), jnp.int32),
+            "pos": sds((), jnp.int32),
+            "cache": cache_shapes}
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                 parallelism: str = "2d") -> Dict[str, Any]:
+    bsp = shd.batch_spec(shape.global_batch, mesh, ndim=2,
+                         parallelism=parallelism)
+    if shape.kind == "train":
+        specs = {"tokens": bsp, "labels": bsp}
+        if cfg.encdec:
+            specs["enc_inputs"] = P(bsp[0], None, None)
+        return {"batch": specs}
+    if shape.kind == "prefill":
+        out = {"tokens": bsp}
+        if cfg.encdec:
+            out["enc_inputs"] = P(bsp[0], None, None)
+        return out
+    cache_shapes = jax.eval_shape(lambda: M.init_cache(cfg, shape.global_batch,
+                                                       shape.seq_len))
+    return {"tokens": bsp, "pos": P(),
+            "cache": shd.cache_specs(cfg, cache_shapes, mesh,
+                                     shape.global_batch)}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opts: TrainOptions):
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        if opts.microbatch and opts.microbatch > 1:
+            loss, metrics, grads = _accumulated_grads(
+                params, cfg, batch, opts.microbatch,
+                acc_dtype=jnp.bfloat16 if opts.grad_accum_dtype == "bf16"
+                else jnp.float32)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                M.lm_loss, has_aux=True)(params, cfg, batch)
+        grads, gnorm = clip_by_global_norm(grads, opts.max_grad_norm)
+        lr = opts.peak_lr  # schedules applied by the driver via closure/arg
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr, b1=opts.b1, b2=opts.b2,
+            weight_decay=opts.weight_decay,
+            state_policy=opts.opt_state_policy)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def _accumulated_grads(params, cfg, batch, n_micro: int,
+                       acc_dtype=jnp.float32):
+    """Gradient accumulation over batch-split microbatches (lax.scan).
+
+    ``acc_dtype=bf16`` halves the standing accumulator for ≥300B models
+    (precision loss ≈ log2(n_micro)/2 bits; tested in tests/test_optim.py).
+    """
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    micro = jax.tree.map(split, batch)
+
+    def one(carry, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.lm_loss, has_aux=True)(params, cfg, mb)
+        acc_loss, acc_grads = carry
+        acc_grads = jax.tree.map(
+            lambda a, g: (a + g.astype(acc_dtype)).astype(acc_dtype),
+            acc_grads, grads)
+        return (acc_loss + loss, acc_grads), metrics
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+    (loss, grads), metrics = jax.lax.scan(one, (jnp.float32(0.0), zeros), micro)
+    scale = 1.0 / n_micro  # n_micro is a power of two: exact in bf16
+    return (loss * scale,
+            jax.tree.map(lambda m: m[-1], metrics),
+            jax.tree.map(lambda g: g * jnp.asarray(scale, g.dtype), grads))
+
+
+def make_prefill_step(cfg: ModelConfig):
+    if cfg.prefill_chunk:
+        return _make_chunked_prefill_step(cfg, cfg.prefill_chunk)
+
+    def prefill_step(params, tokens, enc_inputs=None):
+        # hidden → unembed ONLY the last position: avoids materializing the
+        # [B, S, V] logits tensor (40+ GB at 32k × 150k vocab).
+        hidden, _, cache = M.forward(params, cfg, tokens, mode="prefill",
+                                     enc_inputs=enc_inputs,
+                                     return_hidden=True)
+        head = params.get("lm_head", params["embed"])
+        last = hidden[:, -1:]
+        logits = (last @ head["table"].T.astype(last.dtype)).astype(jnp.float32)
+        if cfg.logit_scale is not None:
+            logits = logits * cfg.logit_scale
+        return logits[:, 0], cache
+    return prefill_step
+
+
+def _make_chunked_prefill_step(cfg: ModelConfig, chunk: int):
+    """Window-wise prefill: live activations bound to O(chunk) instead of
+    O(S) — the long-context production path (closes the deepseek
+    prefill_32k memory cell).  Not supported for enc-dec / windowed caches.
+    """
+    assert cfg.encdec is None and cfg.window is None
+
+    def prefill_step(params, tokens, enc_inputs=None):
+        b, s = tokens.shape
+        assert s % chunk == 0, (s, chunk)
+        cache = M.init_cache(cfg, b, s)
+        toks = tokens.reshape(b, s // chunk, chunk).transpose(1, 0, 2)
+
+        def body(carry, tok_c):
+            cache, pos0 = carry
+            positions = pos0 + jnp.arange(chunk, dtype=jnp.int32)
+            hidden, _, cache = M.forward(
+                params, cfg, tok_c, mode="chunked_prefill", cache=cache,
+                positions=positions, return_hidden=True)
+            return (cache, pos0 + jnp.int32(chunk)), hidden[:, -1]
+
+        (cache, _), lasts = jax.lax.scan(body, (cache, jnp.int32(0)), toks)
+        last = lasts[-1][:, None]
+        head = params.get("lm_head", params["embed"])
+        logits = (last @ head["table"].T.astype(last.dtype)).astype(jnp.float32)
+        if cfg.logit_scale is not None:
+            logits = logits * cfg.logit_scale
+        return logits[:, 0], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, cache, tokens [B,1], pos) → logits, cache."""
+    def serve_step(params, cache, tokens, pos):
+        positions = pos[None].astype(jnp.int32)
+        logits, _, new_cache = M.forward(params, cfg, tokens, mode="decode",
+                                         cache=cache, positions=positions)
+        return logits[:, 0], new_cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# jit assembly for a concrete mesh (used by dryrun + real drivers)
+# ---------------------------------------------------------------------------
+
+def _as_shardings(tree, mesh):
+    """PartitionSpec leaves → NamedSharding (mesh-bound)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_jitted(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                 opts: Optional[TrainOptions] = None):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs), out_tag)."""
+    opts = opts or default_train_options(cfg)
+    from repro.models.pjit_utils import set_parallelism
+    set_parallelism(opts.parallelism)
+    param_shapes, logical = M_init_specs(cfg)
+    pspecs_raw = shd.param_specs(param_shapes, logical, cfg, mesh,
+                                 fsdp=opts.fsdp,
+                                 fsdp_over_pod=opts.fsdp_over_pod,
+                                 parallelism=opts.parallelism)
+    ins = input_specs(cfg, shape)
+    pspecs = _as_shardings(pspecs_raw, mesh)
+    bspecs = _as_shardings(
+        batch_pspecs(cfg, shape, mesh, parallelism=opts.parallelism), mesh)
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(
+            partial(adamw_init, state_policy=opts.opt_state_policy),
+            param_shapes)
+        ospecs = _as_shardings(shd.opt_state_specs(pspecs_raw, opt_shapes),
+                               mesh)
+        if opts.microbatch == 0:
+            opts = dataclasses.replace(
+                opts, microbatch=auto_microbatch(
+                    cfg, shape, mesh, residual_budget=opts.residual_budget,
+                    parallelism=opts.parallelism))
+        fn = make_train_step(cfg, opts)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pspecs, ospecs, bspecs["batch"]),
+            out_shardings=(pspecs, ospecs, None),
+            donate_argnums=(0, 1),
+        )
+        args = (param_shapes, opt_shapes, ins["batch"])
+        return jitted, args
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        if cfg.encdec:
+            jitted = jax.jit(fn, in_shardings=(pspecs, bspecs["tokens"],
+                                               bspecs["enc_inputs"]),
+                             out_shardings=None)
+            args = (param_shapes, ins["tokens"], ins["enc_inputs"])
+        else:
+            jitted = jax.jit(fn, in_shardings=(pspecs, bspecs["tokens"]),
+                             out_shardings=None)
+            args = (param_shapes, ins["tokens"])
+        return jitted, args
+    # decode
+    fn = make_serve_step(cfg)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(pspecs, bspecs["cache"], bspecs["tokens"], bspecs["pos"]),
+        out_shardings=(None, bspecs["cache"]),
+        donate_argnums=(1,),
+    )
+    args = (param_shapes, ins["cache"], ins["tokens"], ins["pos"])
+    return jitted, args
+
+
+def M_init_specs(cfg):
+    """Logical specs without materializing params (init under eval_shape)."""
+    shapes, specs = None, None
+
+    def capture(key):
+        nonlocal specs
+        p, s = M.init(key, cfg)
+        specs = s
+        return p
+
+    shapes = jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return shapes, specs

@@ -1,0 +1,125 @@
+"""End-to-end training driver (CPU-runnable at smoke scale, mesh-generic).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+        --steps 50 --ckpt-dir /tmp/run1
+
+Wires every subsystem: D4M data pipeline → pjit train step (sharded via
+launch.sharding) → AdamW + schedule → async checkpointing → fault-tolerant
+step loop → D4M metrics telemetry.  ``--simulate-failure N`` kills the step
+function at step N to exercise restore-and-replay end-to-end (the same path
+tests/test_fault_tolerance.py asserts on).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_smoke
+from repro.data import CorpusPipeline, synth_corpus
+from repro.distributed import MetricsStore, RestartPolicy, run_resilient
+from repro.models import model as M
+from repro.optim import adamw_init, make_schedule
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--simulate-failure", type=int, default=-1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke(args.arch) if args.smoke else get_config(args.arch))
+    cfg = cfg.replace(remat="none" if args.smoke else cfg.remat)
+    mesh = make_host_mesh(1, 1)
+    opts = S.TrainOptions(peak_lr=args.lr)
+    # MiniCPM contributes the WSD schedule — honour it by default
+    sched_kind = "wsd" if (cfg.name.startswith("minicpm")
+                           and args.schedule == "cosine") else args.schedule
+    schedule = make_schedule(sched_kind, peak_lr=args.lr,
+                             warmup=max(args.steps // 20, 2),
+                             total=args.steps)
+
+    docs = synth_corpus(n_docs=64, seed=args.seed)
+    pipeline = CorpusPipeline(docs, seq_len=args.seq_len,
+                              batch_per_shard=args.batch, seed=args.seed)
+    print(f"[data] corpus nnz={pipeline.table.nnz()} "
+          f"vocab={len(pipeline.tokenizer.table)}")
+    if cfg.vocab < len(pipeline.tokenizer.table):
+        raise SystemExit("smoke vocab smaller than tokenizer table")
+
+    rng = jax.random.PRNGKey(args.seed)
+    train_step_base = S.make_train_step(cfg, opts)
+
+    @jax.jit
+    def train_step(state, batch):
+        params, opt_state, step = state
+        lr = schedule(step)
+        # close over schedule by rebuilding opts-less update: reuse base fn
+        # (its lr is peak; rescale grads-equivalent by lr/peak inside adamw
+        # would be wrong — instead call the step fn pieces directly)
+        (loss, metrics), grads = jax.value_and_grad(
+            M.lm_loss, has_aux=True)(params, cfg, batch)
+        from repro.optim import adamw_update, clip_by_global_norm
+        grads, gnorm = clip_by_global_norm(grads, opts.max_grad_norm)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr, b1=opts.b1, b2=opts.b2,
+            weight_decay=opts.weight_decay,
+            state_policy=opts.opt_state_policy)
+        return ((params, opt_state, step + 1),
+                {"loss": loss, "grad_norm": gnorm, "lr": lr})
+
+    def make_state():
+        params, _ = M.init(rng, cfg)
+        opt_state = adamw_init(params, state_policy=opts.opt_state_policy)
+        return (params, opt_state, jnp.int32(0))
+
+    metrics = MetricsStore("last")
+    ckpt = (CheckpointManager(args.ckpt_dir, save_interval_steps=args.ckpt_every)
+            if args.ckpt_dir else None)
+
+    fail_at = args.simulate_failure
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if fail_at >= 0 and calls["n"] == fail_at:
+            raise RuntimeError("simulated worker failure")
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, m = train_step(state, jb)
+        return state, {k: float(v) for k, v in m.items()}
+
+    t0 = time.time()
+    with mesh:
+        state, steps_done, restarts = run_resilient(
+            n_steps=args.steps, step_fn=step_fn, make_state=make_state,
+            ckpt_manager=ckpt, pipeline=pipeline,
+            policy=RestartPolicy(max_restarts=3, backoff_s=0.01),
+            metrics=metrics)
+    dt = time.time() - t0
+    steps_s, losses = metrics.series("loss")
+    print(f"[train] {steps_done} steps in {dt:.1f}s "
+          f"({dt / max(steps_done,1):.2f} s/step), restarts={restarts}")
+    if len(losses) >= 2:
+        print(f"[train] loss {losses[0]:.3f} → {losses[-1]:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

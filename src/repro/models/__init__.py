@@ -1,0 +1,2 @@
+"""repro.models — pure-JAX model zoo covering the assigned architectures."""
+from . import attention, layers, model, moe, ssm

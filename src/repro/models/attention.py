@@ -1,0 +1,360 @@
+"""Attention variants: GQA (full/causal/sliding-window), MLA, cross-attention.
+
+All softmax attention flows through :func:`chunked_attention` — a
+query-chunked formulation whose peak live buffer is ``[B, H, Qc, Sk]`` rather
+than the full ``[B, H, Sq, Sk]`` score matrix.  On TPU the Pallas
+flash-attention kernel (``repro.kernels.flash_attention``) replaces it when
+``cfg.attn_impl == "pallas"``; the chunked jnp path is the XLA-native
+reference used for CPU tests and the dry-run (so ``cost_analysis`` reflects
+real XLA HLO rather than an opaque custom call).
+
+Decode paths write KV at a dynamic position into a static-shape cache
+(sliding-window archs use a ring buffer of the window size, which is what
+makes `long_500k` tractable for mixtral-8x22b).  MLA (DeepSeek-V3) caches
+only the compressed latent + shared rope key and uses the absorbed-matmul
+decode trick, cutting cache bytes per token from ``2·H·dh`` to ``d_c + d_r``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, init_linear, linear, rms_norm_simple, rope_freqs
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# core chunked softmax attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      *, q_positions: jnp.ndarray, k_positions: jnp.ndarray,
+                      causal: bool, window: Optional[int] = None,
+                      k_valid_len: Optional[jnp.ndarray] = None,
+                      chunk: int = 512, impl: str = "reference",
+                      sm_scale: Optional[float] = None) -> jnp.ndarray:
+    """Softmax attention with GQA broadcast and position-based masking.
+
+    q: [B, Sq, H, Dh]; k/v: [B, Sk, KV, Dh] with H % KV == 0.
+    Masks: ``causal`` ⇒ keep k_pos ≤ q_pos;  ``window`` ⇒ also q_pos − k_pos <
+    window;  ``k_valid_len`` ⇒ k index < valid length (decode caches).
+    """
+    if impl == "pallas":  # TPU fast path (tests validate vs this reference)
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, q_positions=q_positions,
+                               k_positions=k_positions, causal=causal,
+                               window=window, k_valid_len=k_valid_len,
+                               sm_scale=sm_scale)
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, kv, g, dh)
+
+    @jax.checkpoint  # recompute scores/probs in backward: O(chunk·Sk) residuals → O(chunk·Dh)
+    def one_chunk(qc, qpos_c):
+        # qc: [B, Qc, KV, G, Dh] → scores [B, KV, G, Qc, Sk]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((qc.shape[1], k.shape[1]), dtype=bool)
+        qp = qpos_c[:, None]
+        kp = k_positions[None, :]
+        if causal:
+            mask &= kp <= qp
+        if window is not None:
+            mask &= (qp - kp) < window
+        if k_valid_len is not None:
+            mask &= (jnp.arange(k.shape[1])[None, :] < k_valid_len)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+        out_c = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                           preferred_element_type=jnp.float32)
+        return out_c.astype(qc.dtype)  # stack bf16, not f32, under lax.map
+
+    dv = v.shape[-1]  # value head dim may differ from q/k (MLA)
+    if sq % chunk != 0:
+        chunk = sq  # non-divisible (e.g. whisper's 1500 frames): one block
+    if sq <= chunk:
+        out = one_chunk(qg, q_positions)
+    else:
+        n = sq // chunk
+        assert sq % chunk == 0, f"Sq={sq} not divisible by chunk={chunk}"
+        qs = qg.reshape(b, n, chunk, kv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_positions.reshape(n, chunk)
+        out = jax.lax.map(lambda args: one_chunk(*args), (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kv, g, dv)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (covers chatglm3/qwen3/starcoder2/minicpm/mixtral/
+# chameleon/whisper-self/zamba2-shared)
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, *, d_model: Optional[int] = None,
+             cross: bool = False) -> Tuple[Params, Params]:
+    d = d_model or cfg.d_model
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    bias = cfg.attn_bias
+    p, s = {}, {}
+    p["wq"], s["wq"] = init_linear(ks[0], d, h * dh, axes=("embed", "heads"), dtype=cfg.param_dtype, bias=bias)
+    p["wk"], s["wk"] = init_linear(ks[1], d, kvh * dh, axes=("embed", "heads"), dtype=cfg.param_dtype, bias=bias)
+    p["wv"], s["wv"] = init_linear(ks[2], d, kvh * dh, axes=("embed", "heads"), dtype=cfg.param_dtype, bias=bias)
+    p["wo"], s["wo"] = init_linear(ks[3], h * dh, d, axes=("heads", "embed"), dtype=cfg.param_dtype, bias=bias)
+    if cfg.qk_norm:
+        p["q_g"] = jnp.ones((dh,), cfg.param_dtype)
+        p["k_g"] = jnp.ones((dh,), cfg.param_dtype)
+        s["q_g"] = (None,)
+        s["k_g"] = (None,)
+    return p, s
+
+
+def gqa_qkv(p: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+            *, rope: bool = True):
+    b, sq, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(b, sq, h, dh)
+    k = linear(p["wk"], x).reshape(b, sq, kvh, dh)
+    v = linear(p["wv"], x).reshape(b, sq, kvh, dh)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, p["q_g"])
+        k = rms_norm_simple(k, p["k_g"])
+    if rope and cfg.rope_theta is not None:
+        rd = cfg.rotary_dim or dh
+        cos, sin = rope_freqs(dh, cfg.rope_theta, positions, rotary_dim=rd)
+        q = apply_rope(q, cos, sin, rotary_dim=rd)
+        k = apply_rope(k, cos, sin, rotary_dim=rd)
+    return q, k, v
+
+
+def gqa_attention(p: Params, cfg, x: jnp.ndarray, *,
+                  mode: str, cache: Optional[Params] = None,
+                  positions: Optional[jnp.ndarray] = None,
+                  causal: bool = True):
+    """Self-attention in train/prefill/decode modes.
+
+    Returns ``(out, new_cache)``; cache layout {"k","v": [B, Sc, KV, Dh],
+    "len": int32} — for sliding-window configs Sc == window (ring buffer).
+    """
+    b, sq, _ = x.shape
+    window = cfg.window
+    if positions is None:
+        positions = jnp.arange(sq, dtype=jnp.int32)
+    q, k, v = gqa_qkv(p, cfg, x, positions)
+
+    if mode == "chunked_prefill":
+        # multi-token append: write the chunk's K/V at the cache cursor and
+        # attend causally over everything cached so far.  Bounds live
+        # activations to O(chunk) — the production long-context prefill path
+        # (not supported for ring/windowed caches).
+        assert cache is not None and window is None
+        pos0 = cache["len"]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos0, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos0, axis=1)
+        out = chunked_attention(
+            q, k_cache, v_cache, q_positions=positions,
+            k_positions=jnp.arange(k_cache.shape[1], dtype=jnp.int32),
+            causal=True, k_valid_len=pos0 + sq, impl=cfg.attn_impl,
+            chunk=cfg.attn_chunk)
+        out = linear(p["wo"], out.reshape(b, sq, -1))
+        return out, {"k": k_cache, "v": v_cache, "len": pos0 + sq}
+
+    if mode in ("train", "prefill"):
+        out = chunked_attention(
+            q, k, v, q_positions=positions, k_positions=positions,
+            causal=causal, window=window, impl=cfg.attn_impl,
+            chunk=cfg.attn_chunk)
+        new_cache = None
+        if mode == "prefill":
+            if window is not None:  # keep last `window` tokens, ring order
+                cap = min(window, sq)
+                kk, vv = k[:, -cap:], v[:, -cap:]
+                # ring-align so slot (pos % window) holds position pos
+                start = (sq - cap) % window if window else 0
+                idx = (jnp.arange(cap) + start) % max(window, 1)
+                k_cache = jnp.zeros((b, window, *k.shape[2:]), k.dtype).at[:, idx].set(kk)
+                v_cache = jnp.zeros((b, window, *v.shape[2:]), v.dtype).at[:, idx].set(vv)
+                new_cache = {"k": k_cache, "v": v_cache,
+                             "len": jnp.int32(sq)}
+            else:
+                new_cache = {"k": k, "v": v, "len": jnp.int32(sq)}
+        out = linear(p["wo"], out.reshape(b, sq, -1))
+        return out, new_cache
+
+    # decode: sq == 1, append at cache position
+    assert cache is not None
+    from .pjit_utils import constrain_decode_qkv
+    q, k, v = constrain_decode_qkv(q, k, v, cfg.n_kv_heads)
+    pos = cache["len"]  # scalar int32: number of tokens already cached
+    sc = cache["k"].shape[1]
+    slot = pos % sc if window is not None else pos
+    k_cache = cache["k"].at[:, slot].set(k[:, 0])
+    v_cache = cache["v"].at[:, slot].set(v[:, 0])
+    k_pos = _cache_positions(pos, sc, window)
+    valid = jnp.minimum(pos + 1, sc)
+    out = chunked_attention(
+        q, k_cache, v_cache, q_positions=positions, k_positions=k_pos,
+        causal=True, window=window, k_valid_len=valid, impl=cfg.attn_impl)
+    out = linear(p["wo"], out.reshape(b, sq, -1))
+    return out, {"k": k_cache, "v": v_cache, "len": pos + 1}
+
+
+def _cache_positions(pos, cache_size, window):
+    """Absolute positions of each cache slot (ring-aware)."""
+    idx = jnp.arange(cache_size, dtype=jnp.int32)
+    if window is None:
+        return idx
+    # slot s holds the most recent token t with t % cache_size == s, t ≤ pos
+    cur_slot = pos % cache_size
+    age = (cur_slot - idx) % cache_size
+    return pos - age
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention(p: Params, cfg, x: jnp.ndarray, enc_kv: Params):
+    """Attend from decoder states to (precomputed) encoder K/V."""
+    b, sq, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(b, sq, h, dh)
+    out = chunked_attention(
+        q, enc_kv["k"], enc_kv["v"],
+        q_positions=jnp.arange(sq, dtype=jnp.int32),
+        k_positions=jnp.arange(enc_kv["k"].shape[1], dtype=jnp.int32),
+        causal=False, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+    return linear(p["wo"], out.reshape(b, sq, -1))
+
+
+def encode_cross_kv(p: Params, cfg, enc_out: jnp.ndarray) -> Params:
+    b, se, _ = enc_out.shape
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    k = linear(p["wk"], enc_out).reshape(b, se, kvh, dh)
+    v = linear(p["wv"], enc_out).reshape(b, se, kvh, dh)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg) -> Tuple[Params, Params]:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    dq, dc = m["q_lora_rank"], m["kv_lora_rank"]
+    dn, dr, dv = m["qk_nope_dim"], m["qk_rope_dim"], m["v_head_dim"]
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["wdq"], s["wdq"] = init_linear(ks[0], d, dq, axes=("embed", None), dtype=cfg.param_dtype)
+    p["q_norm_g"] = jnp.ones((dq,), cfg.param_dtype); s["q_norm_g"] = (None,)
+    p["wuq"], s["wuq"] = init_linear(ks[1], dq, h * (dn + dr), axes=(None, "heads"), dtype=cfg.param_dtype)
+    p["wdkv"], s["wdkv"] = init_linear(ks[2], d, dc, axes=("embed", None), dtype=cfg.param_dtype)
+    p["kv_norm_g"] = jnp.ones((dc,), cfg.param_dtype); s["kv_norm_g"] = (None,)
+    p["wkr"], s["wkr"] = init_linear(ks[3], d, dr, axes=("embed", None), dtype=cfg.param_dtype)
+    p["wuk"], s["wuk"] = init_linear(ks[4], dc, h * dn, axes=(None, "heads"), dtype=cfg.param_dtype)
+    p["wuv"], s["wuv"] = init_linear(ks[5], dc, h * dv, axes=(None, "heads"), dtype=cfg.param_dtype)
+    p["wo"], s["wo"] = init_linear(ks[6], h * dv, d, axes=("heads", "embed"), dtype=cfg.param_dtype)
+    return p, s
+
+
+def mla_attention(p: Params, cfg, x: jnp.ndarray, *, mode: str,
+                  cache: Optional[Params] = None,
+                  positions: Optional[jnp.ndarray] = None):
+    """MLA with compressed-latent cache and absorbed decode matmuls."""
+    m = cfg.mla
+    b, sq, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m["qk_nope_dim"], m["qk_rope_dim"], m["v_head_dim"]
+    dc = m["kv_lora_rank"]
+    if positions is None:
+        positions = jnp.arange(sq, dtype=jnp.int32)
+
+    cq = rms_norm_simple(linear(p["wdq"], x), p["q_norm_g"])
+    qall = linear(p["wuq"], cq).reshape(b, sq, h, dn + dr)
+    q_nope, q_rope = qall[..., :dn], qall[..., dn:]
+    ckv = rms_norm_simple(linear(p["wdkv"], x), p["kv_norm_g"])  # [B,S,dc]
+    k_rope = linear(p["wkr"], x)  # [B,S,dr] shared across heads
+
+    cos, sin = rope_freqs(dr, cfg.rope_theta, positions, rotary_dim=dr)
+    q_rope = apply_rope(q_rope, cos, sin, rotary_dim=dr)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin, rotary_dim=dr)[:, :, 0]
+
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if mode in ("train", "prefill"):
+        # materialized path: per-head K/V from the latent
+        k_nope = linear(p["wuk"], ckv).reshape(b, sq, h, dn)
+        v = linear(p["wuv"], ckv).reshape(b, sq, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, sq, h, dr))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(q, k, v, q_positions=positions,
+                                k_positions=positions, causal=True,
+                                impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                                sm_scale=scale)
+        new_cache = ({"ckv": ckv, "kr": k_rope, "len": jnp.int32(sq)}
+                     if mode == "prefill" else None)
+        return linear(p["wo"], out.reshape(b, sq, -1)), new_cache
+
+    # decode / chunked_prefill: the latent cache is shared; decode uses the
+    # absorbed matmuls (weight-bound), chunked prefill re-materializes
+    # per-head K/V from the latent and goes through the memory-bounded
+    # chunked_attention (the absorbed form would hold [B,H,C,S] f32 probs).
+    assert cache is not None
+    from .pjit_utils import constrain_last_model
+    pos = cache["len"]
+    if sq == 1:
+        ckv_cache = cache["ckv"].at[:, pos].set(ckv[:, 0])   # [B,Sc,dc]
+        kr_cache = cache["kr"].at[:, pos].set(k_rope[:, 0])  # [B,Sc,dr]
+    else:
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1)
+        kr_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), pos, axis=1)
+
+    if mode == "chunked_prefill":
+        sc_len = ckv_cache.shape[1]
+        k_nope_all = linear(p["wuk"], ckv_cache).reshape(b, sc_len, h, dn)
+        v_all = linear(p["wuv"], ckv_cache).reshape(b, sc_len, h, dv)
+        k_all = jnp.concatenate(
+            [k_nope_all, jnp.broadcast_to(kr_cache[:, :, None, :],
+                                          (b, sc_len, h, dr))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(
+            q, k_all, v_all, q_positions=positions,
+            k_positions=jnp.arange(sc_len, dtype=jnp.int32), causal=True,
+            k_valid_len=pos + sq, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+            sm_scale=scale)
+        out = linear(p["wo"], out.reshape(b, sq, -1))
+        return out, {"ckv": ckv_cache, "kr": kr_cache, "len": pos + sq}
+    wuk = p["wuk"]["w"].reshape(dc, h, dn)
+    q_abs = jnp.einsum("bqhn,chn->bqhc", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))          # [B,Sq,H,dc]
+    # pin q̃ (and q_rope) to the cache's LATENT sharding: head-sharded q̃
+    # against a dc-sharded cache makes SPMD re-gather the whole 32k-token
+    # latent cache every layer (§Perf deepseek decode_32k)
+    q_abs = constrain_last_model(q_abs)
+    q_rope = constrain_last_model(q_rope)
+    s_nope = jnp.einsum("bqhc,bsc->bhqs", q_abs, ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                        kr_cache.astype(jnp.float32))
+    sc_len = ckv_cache.shape[1]
+    scores = (s_nope + s_rope) * scale
+    q_pos = positions[None, None, :, None]               # absolute positions
+    valid = jnp.arange(sc_len)[None, None, None, :] <= q_pos
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhqs,bsc->bqhc", probs, ckv_cache.astype(jnp.float32))
+    wuv = p["wuv"]["w"].reshape(dc, h, dv)
+    out = jnp.einsum("bqhc,chv->bqhv", lat, wuv.astype(jnp.float32))
+    out = linear(p["wo"], out.reshape(b, sq, -1).astype(x.dtype))
+    return out, {"ckv": ckv_cache, "kr": kr_cache, "len": pos + sq}

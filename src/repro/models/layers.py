@@ -1,0 +1,168 @@
+"""Shared neural-net building blocks (pure JAX, no framework deps).
+
+Parameters are plain nested dicts of ``jnp.ndarray``.  Every ``init_*``
+returns ``(params, specs)`` where ``specs`` mirrors ``params`` with logical
+axis-name tuples; ``repro.launch.sharding`` maps logical names onto mesh axes
+(TP/FSDP/EP).  Keeping specs beside params means adding an architecture never
+touches the sharding code.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# Logical axis names (mapped to mesh axes in launch/sharding.py):
+#   "embed"   — d_model         (FSDP-sharded over data when enabled)
+#   "heads"   — attention heads (TP)
+#   "kv"      — kv heads        (TP when divisible)
+#   "mlp"     — d_ff            (TP)
+#   "vocab"   — vocabulary      (TP)
+#   "expert"  — MoE experts     (EP → model axis)
+#   "layers"  — scan axis       (never sharded)
+#   None      — replicated
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, *, axes: Tuple, dtype,
+                scale: Optional[float] = None, bias: bool = False):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    s = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = (axes[1],)
+    return p, s
+
+
+def linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# -- normalization -----------------------------------------------------------
+
+def init_norm(d: int, *, kind: str, dtype) -> Tuple[Params, Params]:
+    p = {"g": jnp.ones((d,), dtype)}
+    s = {"g": ("embed",)}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype)
+        s["b"] = ("embed",)
+    return p, s
+
+
+def apply_norm(p: Params, x: jnp.ndarray, *, kind: str,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["g"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_simple(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * g.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, *, act: str, dtype,
+             bias: bool = False) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        p_gate, s_gate = init_linear(ks[0], d_model, d_ff, axes=("embed", "mlp"), dtype=dtype)
+        p_up, s_up = init_linear(ks[1], d_model, d_ff, axes=("embed", "mlp"), dtype=dtype)
+        p_dn, s_dn = init_linear(ks[2], d_ff, d_model, axes=("mlp", "embed"), dtype=dtype)
+        return ({"gate": p_gate, "up": p_up, "down": p_dn},
+                {"gate": s_gate, "up": s_up, "down": s_dn})
+    p_up, s_up = init_linear(ks[0], d_model, d_ff, axes=("embed", "mlp"), dtype=dtype, bias=bias)
+    p_dn, s_dn = init_linear(ks[1], d_ff, d_model, axes=("mlp", "embed"), dtype=dtype, bias=bias)
+    return {"up": p_up, "down": p_dn}, {"up": s_up, "down": s_dn}
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, *, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+    h = linear(p["up"], x)
+    h = jax.nn.gelu(h, approximate=True)
+    return linear(p["down"], h)
+
+
+# -- embeddings ----------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, *, dtype,
+                   scale: float = 1.0) -> Tuple[Params, Params]:
+    p = {"table": _normal(key, (vocab, d_model), scale, dtype)}
+    return p, {"table": ("vocab", "embed")}
+
+
+def embed(p: Params, ids: jnp.ndarray, *, scale: float = 1.0) -> jnp.ndarray:
+    out = p["table"][ids]
+    return out * scale if scale != 1.0 else out
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits; fp32 for numerical stability of the softmax/xent."""
+    return (x @ p["table"].T.astype(x.dtype)).astype(jnp.float32)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-math.log(10000.0) * 2 * dim / d)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- rotary position embeddings --------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray,
+               rotary_dim: Optional[int] = None):
+    """cos/sin tables; ``rotary_dim < head_dim`` gives partial ("2d") RoPE."""
+    rd = rotary_dim or head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, rd/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               rotary_dim: Optional[int] = None) -> jnp.ndarray:
+    """x: [..., S, H, Dh]; rotate the first ``rotary_dim`` dims pairwise."""
+    rd = rotary_dim or x.shape[-1]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    # cos/sin: [..., S, rd/2] → broadcast over heads axis
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    rot = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([rot, xp], axis=-1) if rd < x.shape[-1] else rot
+
+
+# -- misc -------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy; logits fp32 [..., V], labels int [...]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,580 @@
+"""Model assembly: one generic LM covering all ten assigned architectures.
+
+A config selects the layer kind (attention+MLP, attention+MoE, Mamba2,
+hybrid-with-shared-attention, encoder-decoder); the stack is always a
+``lax.scan`` over parameters stacked on a leading ``layers`` axis, so compile
+time is O(1) in depth and remat policy is per-scan-step.
+
+Public entry points (used by launch/ and tests):
+  * ``init(rng, cfg)``                 → ``(params, specs)``
+  * ``forward(params, cfg, tokens, mode, cache, pos, enc_inputs)``
+  * ``lm_loss(params, cfg, batch)``    → scalar + aux
+  * ``init_cache(cfg, batch, cache_len)``
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (Params, _normal, apply_mlp, apply_norm, embed,
+                     init_embedding, init_mlp, init_norm, linear,
+                     sinusoidal_positions)
+from .pjit_utils import constrain_batch, constrain_seq
+
+# ---------------------------------------------------------------------------
+# layer init/apply (single layer; stacked via vmap outside)
+# ---------------------------------------------------------------------------
+
+
+def _residual_scale(cfg) -> float:
+    if cfg.scale_depth is None:
+        return 1.0
+    return cfg.scale_depth / math.sqrt(cfg.n_layers)
+
+
+def init_decoder_layer(key, cfg, *, use_moe: bool, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["attn_norm"], s["attn_norm"] = init_norm(cfg.d_model, kind=cfg.norm, dtype=cfg.param_dtype)
+    if cfg.mla is not None:
+        p["attn"], s["attn"] = attn.init_mla(ks[0], cfg)
+    else:
+        p["attn"], s["attn"] = attn.init_gqa(ks[0], cfg)
+    if cross:
+        p["cross_norm"], s["cross_norm"] = init_norm(cfg.d_model, kind=cfg.norm, dtype=cfg.param_dtype)
+        p["cross"], s["cross"] = attn.init_gqa(ks[1], cfg, cross=True)
+    p["mlp_norm"], s["mlp_norm"] = init_norm(cfg.d_model, kind=cfg.norm, dtype=cfg.param_dtype)
+    if use_moe:
+        p["moe"], s["moe"] = moe_lib.init_moe(ks[2], cfg)
+    else:
+        p["mlp"], s["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                      act=cfg.act, dtype=cfg.param_dtype,
+                                      bias=cfg.attn_bias)
+    return p, s
+
+
+def apply_decoder_layer(p: Params, cfg, x, *, mode: str, cache, positions,
+                        use_moe: bool, enc_kv=None, causal: bool = True):
+    rs = _residual_scale(cfg)
+    h = apply_norm(p["attn_norm"], x, kind=cfg.norm)
+    if cfg.mla is not None:
+        a_out, new_cache = attn.mla_attention(p["attn"], cfg, h, mode=mode,
+                                              cache=cache, positions=positions)
+    else:
+        a_out, new_cache = attn.gqa_attention(p["attn"], cfg, h, mode=mode,
+                                              cache=cache, positions=positions,
+                                              causal=causal)
+    x = (x + a_out * rs).astype(cfg.compute_dtype)
+    if enc_kv is not None:
+        h = apply_norm(p["cross_norm"], x, kind=cfg.norm)
+        x = (x + attn.cross_attention(p["cross"], cfg, h, enc_kv) * rs
+             ).astype(cfg.compute_dtype)
+    h = apply_norm(p["mlp_norm"], x, kind=cfg.norm)
+    aux = jnp.float32(0.0)
+    load = None
+    if use_moe:
+        m_out, aux, load = moe_lib.apply_moe(p["moe"], cfg, h)
+    else:
+        m_out = apply_mlp(p["mlp"], h, act=cfg.act)
+    x = (x + m_out * rs).astype(cfg.compute_dtype)
+    return x, new_cache, aux, load
+
+
+def init_mamba_layer(key, cfg):
+    p, s = {}, {}
+    p["norm"], s["norm"] = init_norm(cfg.d_model, kind=cfg.norm, dtype=cfg.param_dtype)
+    p["mixer"], s["mixer"] = ssm_lib.init_mamba2(key, cfg)
+    return p, s
+
+
+def apply_mamba_layer(p: Params, cfg, x, *, mode: str, cache):
+    h = apply_norm(p["norm"], x, kind=cfg.norm)
+    out, new_cache = ssm_lib.mamba2_block(p["mixer"], cfg, h, mode=mode, cache=cache)
+    return (x + out).astype(cfg.compute_dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacked init helpers
+# ---------------------------------------------------------------------------
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over layer keys → params stacked on axis 0."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, specs = init_fn(keys[0])
+    specs = jax.tree.map(lambda sp: ("layers",) + tuple(sp),
+                         specs, is_leaf=lambda t: isinstance(t, tuple))
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init(rng, cfg) -> Tuple[Params, Params]:
+    ks = jax.random.split(rng, 8)
+    p, s = {}, {}
+    p["embed"], s["embed"] = init_embedding(ks[0], cfg.vocab, cfg.d_model,
+                                            dtype=cfg.param_dtype)
+    if cfg.pos_emb == "learned":
+        p["pos"] = _normal(ks[1], (cfg.max_seq, cfg.d_model), 0.02, cfg.param_dtype)
+        s["pos"] = (None, "embed")
+    p["final_norm"], s["final_norm"] = init_norm(cfg.d_model, kind=cfg.norm,
+                                                 dtype=cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"], s["lm_head"] = init_embedding(ks[2], cfg.vocab,
+                                                    cfg.d_model,
+                                                    dtype=cfg.param_dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        n_dense = cfg.moe.get("first_dense", 0) if cfg.moe else cfg.n_layers
+        n_moe = cfg.n_layers - n_dense
+        if n_dense:
+            p["dense_stack"], s["dense_stack"] = _stack_init(
+                partial(init_decoder_layer, cfg=cfg, use_moe=False), ks[3], n_dense)
+        if n_moe:
+            p["moe_stack"], s["moe_stack"] = _stack_init(
+                partial(init_decoder_layer, cfg=cfg, use_moe=True), ks[4], n_moe)
+        if cfg.mtp:
+            # DeepSeek-V3 multi-token prediction module: one extra block
+            # over Proj([norm(h); norm(emb(t+1))]) predicting t+2
+            kp = jax.random.fold_in(ks[5], 7)
+            mtp_p, mtp_s = {}, {}
+            mtp_p["norm_h"], mtp_s["norm_h"] = init_norm(
+                cfg.d_model, kind=cfg.norm, dtype=cfg.param_dtype)
+            mtp_p["norm_e"], mtp_s["norm_e"] = init_norm(
+                cfg.d_model, kind=cfg.norm, dtype=cfg.param_dtype)
+            mtp_p["proj"] = _normal(kp, (2 * cfg.d_model, cfg.d_model),
+                                    (2 * cfg.d_model) ** -0.5, cfg.param_dtype)
+            mtp_s["proj"] = ("embed", None)
+            mtp_p["layer"], mtp_s["layer"] = init_decoder_layer(
+                jax.random.fold_in(kp, 1), cfg, use_moe=False)
+            p["mtp"], s["mtp"] = mtp_p, mtp_s
+    elif fam == "ssm":
+        p["mamba_stack"], s["mamba_stack"] = _stack_init(
+            partial(init_mamba_layer, cfg=cfg), ks[3], cfg.n_layers)
+    elif fam == "hybrid":
+        p["mamba_stack"], s["mamba_stack"] = _stack_init(
+            partial(init_mamba_layer, cfg=cfg), ks[3], cfg.n_layers)
+        # shared attention block (one set of weights, invoked every k layers)
+        p["shared"], s["shared"] = init_decoder_layer(ks[4], cfg, use_moe=False)
+        hy = cfg.hybrid
+        n_inv = (cfg.n_layers + hy["attn_every"] - 1) // hy["attn_every"]
+        r = hy.get("lora_rank", 0)
+        if r:
+            dh_total = cfg.n_heads * cfg.dh
+            p["shared_lora"] = {
+                "a": _normal(ks[5], (n_inv, cfg.d_model, r), 0.01, cfg.param_dtype),
+                "b": jnp.zeros((n_inv, r, dh_total), cfg.param_dtype),
+            }
+            s["shared_lora"] = {"a": (None, "embed", None), "b": (None, None, "heads")}
+    elif fam == "encdec":
+        p["enc_stack"], s["enc_stack"] = _stack_init(
+            partial(init_decoder_layer, cfg=cfg, use_moe=False),
+            ks[3], cfg.encdec["enc_layers"])
+        p["dec_stack"], s["dec_stack"] = _stack_init(
+            partial(init_decoder_layer, cfg=cfg, use_moe=False, cross=True),
+            ks[4], cfg.n_layers)
+        p["enc_norm"], s["enc_norm"] = init_norm(cfg.d_model, kind=cfg.norm,
+                                                 dtype=cfg.param_dtype)
+        p["enc_pos"] = sinusoidal_positions(
+            cfg.encdec["enc_frames"], cfg.d_model).astype(cfg.param_dtype)
+        s["enc_pos"] = (None, "embed")
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# scanning machinery
+# ---------------------------------------------------------------------------
+
+def _scan_stack(layer_apply, stacked_params, x, stacked_cache, cfg):
+    """Scan ``layer_apply`` over a stacked parameter pytree (+opt cache)."""
+
+    def body(carry, xs):
+        xv, aux_acc = carry
+        pl, cl = xs
+        pin = constrain_seq if cfg.seq_parallel else constrain_batch
+        xv = pin(xv)  # keep residuals data-(or seq-)sharded (see pjit_utils)
+        out = layer_apply(pl, xv, cl)
+        xv, new_cache, aux = out
+        xv = pin(xv)
+        return (xv, aux_acc + aux), new_cache
+
+    fn = body
+    if cfg.remat == "full":
+        fn = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), new_caches = jax.lax.scan(
+        fn, (x, jnp.float32(0.0)), (stacked_params, stacked_cache))
+    return x, aux, new_caches
+
+
+def _none_like_stack(params_stack):
+    """A scan-compatible None cache (broadcast leaf)."""
+    n = jax.tree.leaves(params_stack)[0].shape[0]
+    return jnp.zeros((n, 0), jnp.float32)  # zero-size xs placeholder
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg, tokens: jnp.ndarray, *, mode: str = "train",
+            cache: Optional[Params] = None,
+            positions: Optional[jnp.ndarray] = None,
+            enc_inputs: Optional[jnp.ndarray] = None,
+            return_hidden: bool = False):
+    """tokens [B,S] int32 → logits [B,S,V] (fp32) or hidden (if requested).
+
+    decode mode: S==1, ``cache`` required, ``positions`` = [1] current pos.
+    encdec: ``enc_inputs`` [B, frames, d_model] (stub frontend embeddings)
+    required in train/prefill; cached cross-KV used in decode.
+    """
+    x = embed(params["embed"], tokens, scale=cfg.scale_emb).astype(cfg.compute_dtype)
+    x = constrain_batch(x)
+    b, sq = tokens.shape
+    if positions is None:
+        positions = jnp.arange(sq, dtype=jnp.int32)
+    if cfg.pos_emb == "learned":
+        if mode in ("decode", "chunked_prefill"):
+            x = x + params["pos"][positions][None]
+        else:
+            x = x + params["pos"][:sq][None]
+    aux_total = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {}
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        for stack_name, use_moe in (("dense_stack", False), ("moe_stack", True)):
+            if stack_name not in params:
+                continue
+            st_cache = cache[stack_name] if cache is not None else None
+            def apply_one(pl, xv, cl, _moe=use_moe):
+                cl = cl if isinstance(cl, dict) else None
+                xv, nc, aux, _load = apply_decoder_layer(
+                    pl, cfg, xv, mode=mode, cache=cl, positions=positions,
+                    use_moe=_moe)
+                return xv, (nc if nc is not None else
+                            _none_like_cache_leaf()), aux
+            x, aux, nc = _scan_stack(
+                apply_one, params[stack_name], x,
+                st_cache if st_cache is not None
+                else _none_like_stack(params[stack_name]), cfg)
+            aux_total += aux
+            if mode in ("prefill", "chunked_prefill", "decode"):
+                new_cache[stack_name] = nc
+    elif fam == "ssm":
+        st_cache = cache["mamba_stack"] if cache is not None else None
+        def apply_one(pl, xv, cl):
+            cl = cl if isinstance(cl, dict) else None
+            xv, nc = apply_mamba_layer(pl, cfg, xv, mode=mode, cache=cl)
+            return xv, (nc if nc is not None else _none_like_cache_leaf()), jnp.float32(0.0)
+        x, aux, nc = _scan_stack(
+            apply_one, params["mamba_stack"], x,
+            st_cache if st_cache is not None
+            else _none_like_stack(params["mamba_stack"]), cfg)
+        if mode in ("prefill", "chunked_prefill", "decode"):
+            new_cache["mamba_stack"] = nc
+    elif fam == "hybrid":
+        x, aux_total, new_cache = _hybrid_forward(
+            params, cfg, x, mode=mode, cache=cache, positions=positions)
+    elif fam == "encdec":
+        x, aux_total, new_cache = _encdec_forward(
+            params, cfg, x, mode=mode, cache=cache, positions=positions,
+            enc_inputs=enc_inputs)
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(params["final_norm"], x, kind=cfg.norm)
+    if return_hidden:
+        return x, aux_total, (new_cache or None)
+    head = params.get("lm_head", params["embed"])
+    logits = (x @ head["table"].T.astype(x.dtype)).astype(jnp.float32)
+    if cfg.logit_scale is not None:
+        logits = logits * cfg.logit_scale
+    return logits, aux_total, (new_cache or None)
+
+
+def _none_like_cache_leaf():
+    return jnp.zeros((0,), jnp.float32)
+
+
+# -- hybrid (zamba2): mamba scan with conditional shared attention ------------
+#
+# One scan over the 81 mamba layers; every `attn_every`-th step additionally
+# applies the SHARED attention+MLP block (one weight set, per-invocation LoRA
+# delta on wq).  The shared block's KV caches live in the scan CARRY as a
+# stacked [n_inv, ...] buffer updated at a dynamic invocation index — caches
+# exist only for the ~L/6 invocations, not per layer.
+
+def _hybrid_forward(params, cfg, x, *, mode, cache, positions):
+    hy = cfg.hybrid
+    every = hy["attn_every"]
+    n = cfg.n_layers
+    shared = params["shared"]
+    lora = params.get("shared_lora")
+    window = hy.get("attn_window")
+    hy_cfg = cfg.replace(window=window) if window else cfg
+
+    mamba_xs = (cache["mamba_stack"] if cache is not None
+                else _none_like_stack(params["mamba_stack"]))
+    if mode == "train":
+        acache0 = jnp.zeros((0,), jnp.float32)  # unused placeholder
+    elif mode == "prefill":
+        n_inv = (n + every - 1) // every
+        sq = x.shape[1]
+        sc = min(sq, window) if window else sq
+        acache0 = {
+            "k": jnp.zeros((n_inv, x.shape[0], sc, cfg.n_kv_heads, cfg.dh),
+                           cfg.compute_dtype),
+            "v": jnp.zeros((n_inv, x.shape[0], sc, cfg.n_kv_heads, cfg.dh),
+                           cfg.compute_dtype),
+            "len": jnp.zeros((n_inv,), jnp.int32)}
+    else:
+        acache0 = cache["shared_attn"]
+
+    def body(carry, xs):
+        xv, aux, acache = carry
+        pl, cl, idx = xs
+        xv = constrain_batch(xv)
+        inv = idx // every
+
+        def with_attn(op):
+            xv, acache = op
+            pa = _apply_lora_to_attn(shared, lora, inv) if lora is not None else shared
+            acl = None
+            if mode in ("decode", "chunked_prefill"):
+                acl = jax.tree.map(
+                    lambda t: jax.lax.dynamic_index_in_dim(t, inv, 0, keepdims=False),
+                    acache)
+            out, nac, a2, _ = apply_decoder_layer(
+                pa, hy_cfg, xv, mode=mode, cache=acl, positions=positions,
+                use_moe=False)
+            if mode != "train" and nac is not None:
+                acache = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new.astype(full.dtype), inv, 0),
+                    acache, nac)
+            return out, acache, a2
+
+        def without(op):
+            xv, acache = op
+            return xv, acache, jnp.float32(0.0)
+
+        xv, acache, a2 = jax.lax.cond(
+            idx % every == 0, with_attn, without, (xv, acache))
+        cl_ = cl if isinstance(cl, dict) else None
+        xv, ncl = apply_mamba_layer(pl, cfg, xv, mode=mode, cache=cl_)
+        return ((xv, aux + a2, acache),
+                (ncl if ncl is not None else _none_like_cache_leaf()))
+
+    fn = (jax.checkpoint(body, prevent_cse=False)
+          if (cfg.remat == "full" and mode == "train") else body)
+    idxs = jnp.arange(n, dtype=jnp.int32)
+    (x, aux, acache), new_mamba = jax.lax.scan(
+        fn, (x, jnp.float32(0.0), acache0),
+        (params["mamba_stack"], mamba_xs, idxs))
+    new_cache = {}
+    if mode in ("prefill", "chunked_prefill", "decode"):
+        new_cache = {"mamba_stack": new_mamba, "shared_attn": acache}
+    return x, aux, new_cache
+
+
+def _apply_lora_to_attn(pa: Params, lora: Params, inv):
+    """Add the per-invocation LoRA delta to the shared block's wq."""
+    a = lora["a"][inv]
+    b = lora["b"][inv]
+    attn_p = dict(pa["attn"])
+    wq = dict(attn_p["wq"])
+    wq["w"] = wq["w"] + (a @ b).astype(wq["w"].dtype)
+    attn_p["wq"] = wq
+    out = dict(pa)
+    out["attn"] = attn_p
+    return out
+
+
+# -- encoder-decoder (whisper) -------------------------------------------------
+
+def _encdec_forward(params, cfg, x, *, mode, cache, positions, enc_inputs):
+    aux = jnp.float32(0.0)
+    if mode in ("train", "prefill"):
+        assert enc_inputs is not None, "encdec needs encoder frame embeddings"
+        e = enc_inputs.astype(cfg.compute_dtype) + params["enc_pos"][None]
+        def enc_one(pl, xv, cl):
+            xv, _, a, _ = apply_decoder_layer(
+                pl, cfg, xv, mode="train", cache=None,
+                positions=jnp.arange(e.shape[1], dtype=jnp.int32),
+                use_moe=False, causal=False)
+            return xv, _none_like_cache_leaf(), a
+        e, a1, _ = _scan_stack(enc_one, params["enc_stack"], e,
+                               _none_like_stack(params["enc_stack"]), cfg)
+        e = apply_norm(params["enc_norm"], e, kind=cfg.norm)
+        # precompute stacked cross-KV for every decoder layer
+        cross_kv = jax.vmap(
+            lambda pl: attn.encode_cross_kv(pl["cross"], cfg, e))(
+                params["dec_stack"])
+    else:
+        cross_kv = cache["cross_kv"]
+
+    dec_cache = cache["dec_stack"] if cache is not None else None
+
+    def dec_one_with_kv(pl_and_kv, xv, cl):
+        pl, kv = pl_and_kv
+        cl = cl if isinstance(cl, dict) else None
+        xv, nc, a, _ = apply_decoder_layer(
+            pl, cfg, xv, mode=mode, cache=cl, positions=positions,
+            use_moe=False, enc_kv=kv)
+        return xv, (nc if nc is not None else _none_like_cache_leaf()), a
+
+    x, a2, nc = _scan_stack(
+        lambda pl, xv, cl: dec_one_with_kv(pl, xv, cl),
+        (params["dec_stack"], cross_kv), x,
+        dec_cache if dec_cache is not None
+        else _none_like_stack(params["dec_stack"]), cfg)
+    new_cache = {}
+    if mode in ("prefill", "decode"):
+        new_cache = {"dec_stack": nc, "cross_kv": cross_kv}
+    return x, aux + a2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, cache_len: int) -> Params:
+    """Static-shape decode caches, stacked on the layer axis."""
+    cdt = cfg.compute_dtype
+
+    def kv_cache(n_layers, sc):
+        return {"k": jnp.zeros((n_layers, batch, sc, cfg.n_kv_heads, cfg.dh), cdt),
+                "v": jnp.zeros((n_layers, batch, sc, cfg.n_kv_heads, cfg.dh), cdt),
+                "len": jnp.zeros((n_layers,), jnp.int32)}
+
+    sc = min(cache_len, cfg.window) if cfg.window else cache_len
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        out = {}
+        n_dense = cfg.moe.get("first_dense", 0) if cfg.moe else cfg.n_layers
+        n_moe = cfg.n_layers - n_dense
+        if cfg.mla is not None:
+            def mla_cache(n_layers):
+                m = cfg.mla
+                return {"ckv": jnp.zeros((n_layers, batch, cache_len, m["kv_lora_rank"]), cdt),
+                        "kr": jnp.zeros((n_layers, batch, cache_len, m["qk_rope_dim"]), cdt),
+                        "len": jnp.zeros((n_layers,), jnp.int32)}
+            if n_dense:
+                out["dense_stack"] = mla_cache(n_dense)
+            if n_moe:
+                out["moe_stack"] = mla_cache(n_moe)
+        else:
+            if n_dense:
+                out["dense_stack"] = kv_cache(n_dense, sc)
+            if n_moe:
+                out["moe_stack"] = kv_cache(n_moe, sc)
+        return out
+    if fam == "ssm":
+        per = ssm_lib.init_ssm_cache(cfg, batch)
+        return {"mamba_stack": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), per)}
+    if fam == "hybrid":
+        per = ssm_lib.init_ssm_cache(cfg, batch)
+        hy = cfg.hybrid
+        n_inv = (cfg.n_layers + hy["attn_every"] - 1) // hy["attn_every"]
+        mamba = {"mamba_stack": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), per)}
+        swin = hy.get("attn_window")
+        sc_h = min(cache_len, swin) if swin else cache_len
+        mamba["shared_attn"] = {
+            "k": jnp.zeros((n_inv, batch, sc_h, cfg.n_kv_heads, cfg.dh), cdt),
+            "v": jnp.zeros((n_inv, batch, sc_h, cfg.n_kv_heads, cfg.dh), cdt),
+            "len": jnp.zeros((n_inv,), jnp.int32)}
+        return mamba
+    if fam == "encdec":
+        return {"dec_stack": kv_cache(cfg.n_layers, sc),
+                "cross_kv": {
+                    "k": jnp.zeros((cfg.n_layers, batch, cfg.encdec["enc_frames"],
+                                    cfg.n_kv_heads, cfg.dh), cdt),
+                    "v": jnp.zeros((cfg.n_layers, batch, cfg.encdec["enc_frames"],
+                                    cfg.n_kv_heads, cfg.dh), cdt)}}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# losses / steps (pure fns; launch wraps them in pjit)
+# ---------------------------------------------------------------------------
+
+def chunked_lm_loss(params, cfg, hidden, labels, mask=None):
+    """Sequence-chunked softmax xent: avoids materializing [B,S,V] fp32."""
+    head = params.get("lm_head", params["embed"])
+    w = head["table"]
+    b, s, d = hidden.shape
+    c = min(cfg.loss_chunk, s)
+    n = s // c
+    assert s % c == 0
+
+    def one(carry, xs):
+        h_c, y_c, m_c = xs
+        h_c = constrain_batch(h_c)
+        logits = (h_c @ w.T.astype(h_c.dtype)).astype(jnp.float32)
+        if cfg.logit_scale is not None:
+            logits = logits * cfg.logit_scale
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold via one-hot contraction: take_along_axis over a vocab-sharded
+        # logits tensor would force XLA to replicate the whole chunk.
+        oh = jax.nn.one_hot(y_c, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.sum(logits * oh, axis=-1)
+        nll = (logz - gold) * m_c
+        return (carry[0] + nll.sum(), carry[1] + m_c.sum()), None
+
+    hs = hidden.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    ys = labels.reshape(b, n, c).transpose(1, 0, 2)
+    ms = (mask if mask is not None
+          else jnp.ones_like(labels, jnp.float32)).reshape(b, n, c).transpose(1, 0, 2)
+    body = jax.checkpoint(one) if cfg.remat != "none" else one
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hs, ys, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, cfg, batch):
+    """batch: {"tokens": [B,S], "labels": [B,S], optional "enc_inputs"}."""
+    hidden, aux, _ = forward(params, cfg, batch["tokens"], mode="train",
+                             enc_inputs=batch.get("enc_inputs"),
+                             return_hidden=True)
+    loss = chunked_lm_loss(params, cfg, hidden, batch["labels"],
+                           batch.get("loss_mask"))
+    metrics = {"xent": loss, "moe_aux": aux}
+    if cfg.mtp and "mtp" in params:
+        mtp_l = _mtp_loss(params, cfg, hidden, batch["labels"])
+        loss = loss + cfg.mtp_weight * mtp_l
+        metrics["mtp"] = mtp_l
+    moe_w = (cfg.moe or {}).get("aux_weight", 0.0)
+    return loss + moe_w * aux, metrics
+
+
+def _mtp_loss(params, cfg, hidden, labels):
+    """DeepSeek-V3 MTP: h'_i = Proj([norm(h_i); norm(emb(t_{i+1}))]) →
+    one transformer block → shared head → predict t_{i+2}."""
+    mp = params["mtp"]
+    b, s, d = hidden.shape
+    emb_next = embed(params["embed"], labels).astype(cfg.compute_dtype)
+    h = jnp.concatenate([
+        apply_norm(mp["norm_h"], hidden, kind=cfg.norm),
+        apply_norm(mp["norm_e"], emb_next, kind=cfg.norm)], axis=-1)
+    h = (h @ mp["proj"]).astype(cfg.compute_dtype)
+    h, _, _, _ = apply_decoder_layer(
+        mp["layer"], cfg, h, mode="train", cache=None,
+        positions=jnp.arange(s, dtype=jnp.int32), use_moe=False)
+    # predict t+2: shift labels left by one; mask the last position
+    labels2 = jnp.roll(labels, -1, axis=1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    return chunked_lm_loss(params, cfg, h, labels2, mask)

@@ -1,0 +1,172 @@
+"""Mixture-of-Experts with D4M-style sparse dispatch.
+
+Top-k gating produces, for every sequence, a sparse associative array
+``G : (token × expert) → gate`` (an ``AssocTensor`` in COO form: token ids ×
+expert ids with gate values).  Dispatch and combine are then the two
+``(+,×)`` semiring contractions
+
+    X_buf = Gᵀ ⊗.⊕ X         (expert, cap, d)  ← gather tokens per expert
+    Y     = G  ⊗.⊕ FFN(X_buf) (token, d)        ← weighted combine
+
+realized as sort-based scatter/gather so the expert FFN runs as one dense
+MXU-aligned einsum per expert group (the TPU adaptation of the paper's
+"defer to bulk sparse linear algebra" strategy — scalar CSR loops become a
+sort + two scatters + one big matmul).
+
+Routing is per-sequence so the sort never crosses a batch boundary: under
+``pjit`` the batch axis is data-sharded, making dispatch collective-free;
+expert weights shard over the ``model`` axis (EP) when ``E % |model| == 0``,
+else the per-expert FFN shards its hidden dim (TP).  Combine contracts the
+expert axis, so XLA inserts exactly one reduce per MoE block in the EP case.
+
+Two router flavours:
+* ``softmax_topk`` (Mixtral): softmax → top-k → renormalize; switch-style
+  load-balancing aux loss.
+* ``sigmoid_topk`` (DeepSeek-V3): sigmoid affinities, bias-adjusted top-k
+  selection (aux-loss-free balancing — the bias is updated outside the
+  gradient from per-step expert load), gates renormalized over the selected
+  experts; optional always-on shared expert.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, _normal, init_linear, linear
+
+
+def init_moe(key, cfg) -> Tuple[Params, Params]:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m["d_ff"], m["n_experts"]
+    ks = jax.random.split(key, 6)
+    p: Params = {"router": _normal(ks[0], (d, e), d ** -0.5, jnp.float32)}
+    s: Params = {"router": ("embed", None)}
+    # stacked expert FFNs (swiglu), logical axis "expert" on dim 0
+    p["gate"] = _normal(ks[1], (e, d, f), d ** -0.5, cfg.param_dtype)
+    p["up"] = _normal(ks[2], (e, d, f), d ** -0.5, cfg.param_dtype)
+    p["down"] = _normal(ks[3], (e, f, d), f ** -0.5, cfg.param_dtype)
+    s["gate"] = ("expert", "embed", "expert_mlp")
+    s["up"] = ("expert", "embed", "expert_mlp")
+    s["down"] = ("expert", "expert_mlp", "embed")
+    if m.get("router_bias", False):  # DeepSeek aux-loss-free balancing bias
+        p["e_bias"] = jnp.zeros((e,), jnp.float32)
+        s["e_bias"] = (None,)
+    if m.get("shared_expert", 0):
+        fs = m["d_ff"] * m["shared_expert"]
+        p["shared_gate"], s["shared_gate"] = init_linear(
+            ks[4], d, fs, axes=("embed", "mlp"), dtype=cfg.param_dtype)
+        p["shared_up"], s["shared_up"] = init_linear(
+            jax.random.fold_in(ks[4], 1), d, fs, axes=("embed", "mlp"),
+            dtype=cfg.param_dtype)
+        p["shared_down"], s["shared_down"] = init_linear(
+            ks[5], fs, d, axes=("mlp", "embed"), dtype=cfg.param_dtype)
+    return p, s
+
+
+def _route(p: Params, cfg, x: jnp.ndarray):
+    """Router → (gates [B,S,k], expert_idx [B,S,k], aux_loss, load [E])."""
+    m = cfg.moe
+    e, k = m["n_experts"], m["top_k"]
+    # matmul in compute dtype, convert AFTER: upcasting x here would flip
+    # the backward residual-stream cotangent (and every dW fed by it) to f32
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [B,S,E]
+    if m.get("router_type", "softmax_topk") == "sigmoid_topk":
+        scores = jax.nn.sigmoid(logits)
+        sel_scores = scores + p.get("e_bias", 0.0)
+        _, idx = jax.lax.top_k(sel_scores, k)
+        g = jnp.take_along_axis(scores, idx, axis=-1)
+        gates = g / jnp.maximum(g.sum(-1, keepdims=True), 1e-9)
+        gates = gates * m.get("routed_scale", 1.0)
+        aux = jnp.float32(0.0)  # aux-loss-free balancing
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        g, idx = jax.lax.top_k(probs, k)
+        gates = g / jnp.maximum(g.sum(-1, keepdims=True), 1e-9)
+        # switch-transformer load-balance aux loss
+        frac_tokens = jnp.mean(
+            jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(-2), axis=(0, 1))
+        frac_probs = jnp.mean(probs, axis=(0, 1))
+        aux = e * jnp.sum(frac_tokens / k * frac_probs)
+    load = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(axis=(0, 1, 2))
+    return gates.astype(x.dtype), idx, aux, load
+
+
+def _dispatch_seq(x_s: jnp.ndarray, idx_s: jnp.ndarray, gate_s: jnp.ndarray,
+                  n_experts: int, capacity: int):
+    """Per-sequence sort-based dispatch (the D4M Gᵀ⊗.⊕X contraction).
+
+    x_s [S,d], idx_s [S,k], gate_s [S,k] →
+    buffer [E,C,d], and combine metadata (token, expert, slot, gate, keep).
+    """
+    s, k = idx_s.shape
+    e_flat = idx_s.reshape(-1)                         # [S*k]
+    tok_flat = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+    gate_flat = gate_s.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)           # group by expert
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    gate_sorted = gate_flat[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(counts) - counts               # exclusive prefix
+    pos = jnp.arange(s * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = pos < capacity
+    # scatter tokens into the expert buffer; overflow slots dropped (OOB)
+    buf = jnp.zeros((n_experts, capacity, x_s.shape[-1]), x_s.dtype)
+    buf = buf.at[e_sorted, jnp.where(keep, pos, capacity)].set(
+        x_s[tok_sorted], mode="drop")
+    return buf, (tok_sorted, e_sorted, pos, gate_sorted, keep)
+
+
+def _combine_seq(y_buf: jnp.ndarray, meta, seq_len: int):
+    """Weighted scatter-add back to token order (the G⊗.⊕Y contraction)."""
+    tok_sorted, e_sorted, pos, gate_sorted, keep = meta
+    vals = y_buf[e_sorted, jnp.where(keep, pos, 0)]
+    vals = vals * (gate_sorted * keep.astype(gate_sorted.dtype))[:, None]
+    out = jnp.zeros((seq_len, y_buf.shape[-1]), y_buf.dtype)
+    return out.at[tok_sorted].add(vals)
+
+
+def apply_moe(p: Params, cfg, x: jnp.ndarray):
+    """x: [B, S, d] → (y [B, S, d], aux_loss, expert_load [E])."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m["n_experts"], m["top_k"]
+    cf = m.get("capacity_factor", 1.25)
+    cap = int(max(1, round(s * k / e * cf)))
+    gates, idx, aux, load = _route(p, cfg, x)
+
+    buf, meta = jax.vmap(
+        lambda xs, is_, gs: _dispatch_seq(xs, is_, gs, e, cap))(x, idx, gates)
+    # buf: [B, E, C, d] — one dense einsum per projection over all experts.
+    # Batch stays data-sharded through dispatch/FFN/combine: without the
+    # constraints XLA's backward all-gathers the f32 expert buffers to
+    # compute weight grads instead of psum-ing local partials.  Under 2-D
+    # expert parallelism the buffers must instead follow the expert axis
+    # (the dispatch all-to-all), so we leave placement to SPMD there.
+    from .pjit_utils import constrain_batch
+    pin = (lambda t: t) if cfg.moe_sharding == "ep2d" else constrain_batch
+    buf = pin(buf)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["gate"])) * \
+        jnp.einsum("becd,edf->becf", buf, p["up"])
+    h = pin(h)
+    y_buf = jnp.einsum("becf,efd->becd", h, p["down"])
+    y_buf = pin(y_buf)
+    y = jax.vmap(lambda yb, mt: _combine_seq(yb, mt, s))(y_buf, meta)
+
+    if "shared_gate" in p:  # DeepSeek shared expert — always on
+        y = y + linear(p["shared_down"],
+                       jax.nn.silu(linear(p["shared_gate"], x)) *
+                       linear(p["shared_up"], x))
+    return y, aux, load
+
+
+def update_router_bias(e_bias: jnp.ndarray, load: jnp.ndarray,
+                       rate: float = 1e-3) -> jnp.ndarray:
+    """DeepSeek-V3 aux-loss-free balancing: nudge under-loaded experts up.
+
+    Applied OUTSIDE the gradient (in the train step) from per-step loads.
+    """
+    mean = load.mean()
+    return e_bias + rate * jnp.sign(mean - load)

@@ -1,0 +1,195 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked for TPU.
+
+The SSD recurrence per head (state size N, head dim P):
+
+    h_t = exp(Δ_t·A) · h_{t-1} + Δ_t · B_t xᵗ_t        h ∈ R^{N×P}
+    y_t = C_tᵀ h_t + D · x_t
+
+is evaluated chunk-parallel (chunk Q): within a chunk the dual "masked
+attention" form ``Y = ((C Bᵀ) ∘ L) X`` runs as dense MXU einsums, and a
+short ``lax.scan`` over chunks carries the inter-chunk state.  This is the
+standard SSD decomposition — sequential work drops from S steps to S/Q.
+
+Decode is the exact single-step recurrence on a carried ``(conv_tail,
+ssm_state)`` cache: O(1) memory in sequence length, which is why the SSM and
+hybrid architectures own the ``long_500k`` shape.
+
+Layout notes (TPU): heads shard over the ``model`` mesh axis ("heads"
+logical axis on every H-indexed dim); B/C are per-group (G=1 here) and
+replicated; all chunk einsums contract locally so the block is
+collective-free except the in/out projections' TP.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, _normal, init_linear, linear, rms_norm_simple
+
+
+def init_mamba2(key, cfg) -> Tuple[Params, Params]:
+    m = cfg.ssm
+    d = cfg.d_model
+    d_in = m["d_inner"]
+    n, hdim, conv = m["d_state"], m["head_dim"], m["d_conv"]
+    g = m.get("n_groups", 1)
+    nh = d_in // hdim
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    # in_proj → [z, x, B, C, dt]
+    p["in_z"], s["in_z"] = init_linear(ks[0], d, d_in, axes=("embed", "heads"), dtype=cfg.param_dtype)
+    p["in_x"], s["in_x"] = init_linear(ks[1], d, d_in, axes=("embed", "heads"), dtype=cfg.param_dtype)
+    p["in_b"], s["in_b"] = init_linear(ks[2], d, g * n, axes=("embed", None), dtype=cfg.param_dtype)
+    p["in_c"], s["in_c"] = init_linear(ks[3], d, g * n, axes=("embed", None), dtype=cfg.param_dtype)
+    p["in_dt"], s["in_dt"] = init_linear(ks[4], d, nh, axes=("embed", "heads"), dtype=cfg.param_dtype)
+    p["dt_bias"] = jnp.zeros((nh,), jnp.float32); s["dt_bias"] = ("heads",)
+    p["a_log"] = jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)); s["a_log"] = ("heads",)
+    p["d_skip"] = jnp.ones((nh,), jnp.float32); s["d_skip"] = ("heads",)
+    # depthwise causal convs (split: x-part sharded, BC-part replicated)
+    p["conv_x"] = _normal(ks[5], (conv, d_in), 0.5, cfg.param_dtype)
+    p["conv_bc"] = _normal(ks[6], (conv, 2 * g * n), 0.5, cfg.param_dtype)
+    s["conv_x"] = (None, "heads"); s["conv_bc"] = (None, None)
+    p["norm_g"] = jnp.ones((d_in,), cfg.param_dtype); s["norm_g"] = ("heads",)
+    p["out"], s["out"] = init_linear(ks[7], d_in, d, axes=("heads", "embed"), dtype=cfg.param_dtype)
+    return p, s
+
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv via K shifted adds. x [B,S,C], kernel [K,C]."""
+    k = kernel.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail  # [B, K-1, C] — previous inputs (decode path)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(k))
+    new_tail = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out), new_tail
+
+
+def _ssd_chunked(xh, bt, ct, dt, a, chunk: int,
+                 h0: Optional[jnp.ndarray] = None):
+    """Chunk-parallel SSD scan.
+
+    xh [B,S,H,P], bt/ct [B,S,G,N] (G broadcasts over H), dt [B,S,H] (>0),
+    a [H] (<0).  Returns (y [B,S,H,P], h_last [B,H,N,P]).
+    """
+    b, s, h, p = xh.shape
+    g, n = bt.shape[2], bt.shape[3]
+    while s % chunk:  # halve until it divides (short prompts / odd lengths)
+        chunk //= 2
+    chunk = max(chunk, 1)
+    nc = s // chunk
+    r = h // g  # heads per B/C group — NEVER materialize B/C per head
+
+    def resh(t, last):
+        return t.reshape((b, nc, chunk) + last)
+
+    xh_c = resh(xh, (g, r, p))                        # [B,NC,Q,G,R,P]
+    bt_c = resh(bt, (g, n))                           # [B,NC,Q,G,N]
+    ct_c = resh(ct, (g, n))
+    dt_c = resh(dt, (g, r))                           # [B,NC,Q,G,R]
+    la = dt_c * a.reshape(g, r)[None, None, None]     # log-decay per step, <0
+    cum = jnp.cumsum(la, axis=2)                      # [B,NC,Q,G,R]
+
+    # intra-chunk (dual attention form): M[i,j] = exp(cum_i − cum_j)·(i≥j),
+    # applied per head; the C·Bᵀ Gram matrix is per *group* (tiny for G≪H).
+    gram = jnp.einsum("bcqgn,bckgn->bcqkg", ct_c, bt_c)   # [B,NC,Q,K,G]
+    li = cum[:, :, :, None]                                # [B,NC,Q,1,G,R]
+    lj = cum[:, :, None, :, :, :]                          # [B,NC,1,K,G,R]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None, None]
+    # mask BEFORE exp: the i<j region has li−lj > 0 and exp() there would
+    # overflow to inf, poisoning gradients through the where.
+    decay = jnp.exp(jnp.where(tri, li - lj, -jnp.inf))     # [B,NC,Q,K,G,R]
+    y_intra = jnp.einsum("bcqkg,bcqkgr,bckgr,bckgrp->bcqgrp",
+                         gram, decay, dt_c, xh_c)
+
+    # per-chunk aggregated state:  S_c = Σ_t exp(cum_last − cum_t)·Δ_t·B_t xᵗ_t
+    seg = jnp.exp(cum[:, :, -1:] - cum)                    # [B,NC,Q,G,R]
+    state_c = jnp.einsum("bcqgr,bcqgr,bcqgn,bcqgrp->bcgrnp",
+                         seg, dt_c, bt_c, xh_c)            # [B,NC,G,R,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1])                   # [B,NC,G,R]
+
+    # inter-chunk: scan carried state across chunks
+    def step(h_prev, inp):
+        st, dec = inp                                  # [B,G,R,N,P], [B,G,R]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev                           # emit state ENTERING chunk
+
+    init = (h0.reshape(b, g, r, n, p) if h0 is not None
+            else jnp.zeros((b, g, r, n, p), xh.dtype))
+    h_last, h_in = jax.lax.scan(
+        step, init,
+        (state_c.transpose(1, 0, 2, 3, 4, 5), chunk_decay.transpose(1, 0, 2, 3)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4, 5)            # [B,NC,G,R,N,P]
+
+    # contribution of carried state:  y⁺_t = exp(cum_t)·C_t · h_in
+    y_inter = jnp.einsum("bcqgr,bcqgn,bcgrnp->bcqgrp",
+                         jnp.exp(cum), ct_c, h_in)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_last.reshape(b, h, n, p)
+
+
+def mamba2_block(p: Params, cfg, x: jnp.ndarray, *, mode: str,
+                 cache: Optional[Params] = None):
+    """Full Mamba2 block. cache = {"conv_x","conv_bc": tails, "h": state}."""
+    m = cfg.ssm
+    b, s, _ = x.shape
+    d_in, n, hdim = m["d_inner"], m["d_state"], m["head_dim"]
+    g = m.get("n_groups", 1)
+    nh = d_in // hdim
+
+    z = linear(p["in_z"], x)
+    xr = linear(p["in_x"], x)
+    bc = jnp.concatenate([linear(p["in_b"], x), linear(p["in_c"], x)], axis=-1)
+    dt = jax.nn.softplus(
+        linear(p["in_dt"], x).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    tail_x = cache["conv_x"] if cache is not None else None
+    tail_bc = cache["conv_bc"] if cache is not None else None
+    xr, new_tail_x = _causal_conv(xr, p["conv_x"], tail_x)
+    bc, new_tail_bc = _causal_conv(bc, p["conv_bc"], tail_bc)
+    bt = bc[..., :g * n].reshape(b, s, g, n).astype(jnp.float32)
+    ct = bc[..., g * n:].reshape(b, s, g, n).astype(jnp.float32)
+    xh = xr.reshape(b, s, nh, hdim).astype(jnp.float32)
+
+    if mode in ("train", "prefill", "chunked_prefill"):
+        h0 = (cache["h"].astype(xh.dtype) if (mode == "chunked_prefill"
+                                              and cache is not None) else None)
+        y, h_last = _ssd_chunked(xh, bt, ct, dt, a, m.get("chunk", 256),
+                                 h0=h0)
+    else:  # decode: exact single-step recurrence
+        h_prev = cache["h"]                            # [B,H,N,P] fp32
+        dec = jnp.exp(dt[:, 0] * a[None, :])           # [B,H]
+        bt0 = jnp.repeat(bt[:, 0], nh // g, axis=1)    # [B,H,N]
+        ct0 = jnp.repeat(ct[:, 0], nh // g, axis=1)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dt[:, 0], bt0, xh[:, 0])
+        h_new = h_prev * dec[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct0, h_new)[:, None]
+        h_last = h_new
+
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm_simple(y * jax.nn.silu(z), p["norm_g"])
+    out = linear(p["out"], y)
+    new_cache = None
+    if mode in ("prefill", "chunked_prefill", "decode"):
+        new_cache = {"conv_x": new_tail_x, "conv_bc": new_tail_bc,
+                     "h": h_last.astype(jnp.float32)}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int):
+    m = cfg.ssm
+    d_in, n, hdim, conv = m["d_inner"], m["d_state"], m["head_dim"], m["d_conv"]
+    g = m.get("n_groups", 1)
+    nh = d_in // hdim
+    return {
+        "conv_x": jnp.zeros((batch, conv - 1, d_in), cfg.compute_dtype),
+        "conv_bc": jnp.zeros((batch, conv - 1, 2 * g * n), cfg.compute_dtype),
+        "h": jnp.zeros((batch, nh, n, hdim), jnp.float32),
+    }

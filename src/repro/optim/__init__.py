@@ -1,0 +1,8 @@
+"""repro.optim — AdamW with quantized-state options, schedules, clipping."""
+from .adamw import adamw_init, adamw_update, quantize_q8, dequantize_q8
+from .clip import clip_by_global_norm, global_norm
+from .schedules import cosine_schedule, make_schedule, wsd_schedule
+
+__all__ = ["adamw_init", "adamw_update", "quantize_q8", "dequantize_q8",
+           "clip_by_global_norm", "global_norm", "cosine_schedule",
+           "wsd_schedule", "make_schedule"]

@@ -1,0 +1,19 @@
+"""Global-norm gradient clipping (fp32 accumulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    # scale in the grad's own dtype: an f32 upcast would transiently double
+    # the grad tree (hundreds of GB at 671B params)
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn

@@ -1,0 +1,42 @@
+"""Learning-rate schedules: cosine and WSD (Warmup-Stable-Decay, MiniCPM).
+
+WSD is the schedule the MiniCPM paper contributes: linear warmup → long
+constant ("stable") phase → short exponential/linear decay tail.  Unlike
+cosine it decouples total-token count from the decay horizon, which is what
+makes mid-flight restarts and continued pretraining cheap — a property the
+fault-tolerance layer exploits (restarting inside the stable phase does not
+perturb the schedule).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: MiniCPM §4 (decay tail = last `decay_frac`)."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    # exponential decay tail: lr = peak * final_frac^(t/T_decay)
+    t = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                 0.0, 1.0)
+    dec = peak_lr * jnp.power(final_frac, t)
+    stable = jnp.full_like(step, peak_lr)
+    out = jnp.where(step < warmup, warm,
+                    jnp.where(step < decay_start, stable, dec))
+    return out
+
+
+def make_schedule(kind: str, **kw):
+    fn = {"cosine": cosine_schedule, "wsd": wsd_schedule}[kind]
+    return lambda step: fn(step, **kw)

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets 512 in its own
+# subprocess); fail fast if something leaked the flag into the test env.
+assert "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "tests must not inherit the dry-run's 512-device XLA_FLAGS"
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("ci")

@@ -1,0 +1,181 @@
+"""Host Assoc vs a dict-of-dicts oracle (the paper's semantics, §II)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import Assoc
+
+keys = st.text(alphabet="abcdefg", min_size=1, max_size=3)
+vals_num = st.floats(min_value=-100, max_value=100, allow_nan=False,
+                     allow_subnormal=False, width=32).filter(lambda v: abs(v) > 1e-3)
+
+triples = st.lists(st.tuples(keys, keys, vals_num), min_size=0, max_size=30)
+
+
+def oracle(ts, aggregate=min):
+    d = {}
+    for r, c, v in ts:
+        if (r, c) in d:
+            d[(r, c)] = aggregate(d[(r, c)], v)
+        else:
+            d[(r, c)] = v
+    return {k: v for k, v in d.items() if v != 0}
+
+
+def make(ts, aggregate=min):
+    if not ts:
+        return Assoc()
+    r, c, v = zip(*ts)
+    return Assoc(list(r), list(c), np.asarray(v, dtype=np.float64),
+                 aggregate=aggregate)
+
+
+@given(triples)
+def test_constructor_min_agg(ts):
+    assert make(ts).to_dict() == pytest.approx(oracle(ts))
+
+
+@given(triples)
+def test_constructor_sum_agg(ts):
+    got = make(ts, aggregate="sum").to_dict()
+    want = oracle(ts, aggregate=lambda a, b: a + b)
+    assert got == pytest.approx(want)
+
+
+@given(triples, triples)
+def test_add(ts1, ts2):
+    a, b = make(ts1), make(ts2)
+    got = (a + b).to_dict()
+    o1, o2 = oracle(ts1), oracle(ts2)
+    want = {}
+    for k in set(o1) | set(o2):
+        s = o1.get(k, 0.0) + o2.get(k, 0.0)
+        if abs(s) > 1e-9:
+            want[k] = s
+    assert got == pytest.approx(want)
+
+
+@given(triples, triples)
+def test_elementwise_mul(ts1, ts2):
+    a, b = make(ts1), make(ts2)
+    got = (a * b).to_dict()
+    o1, o2 = oracle(ts1), oracle(ts2)
+    want = {k: o1[k] * o2[k] for k in set(o1) & set(o2)
+            if abs(o1[k] * o2[k]) > 1e-12}
+    assert got == pytest.approx(want)
+
+
+@given(triples, triples)
+def test_matmul(ts1, ts2):
+    a, b = make(ts1), make(ts2)
+    got = (a @ b).to_dict()
+    o1, o2 = oracle(ts1), oracle(ts2)
+    want = {}
+    for (r, k1), v1 in o1.items():
+        for (k2, c), v2 in o2.items():
+            if k1 == k2:
+                want[(r, c)] = want.get((r, c), 0.0) + v1 * v2
+    want = {k: v for k, v in want.items() if abs(v) > 1e-9}
+    assert got == pytest.approx(want, rel=1e-6, abs=1e-9)
+
+
+@given(triples)
+def test_transpose_involution(ts):
+    a = make(ts)
+    assert a.T.T == a
+
+
+@given(triples)
+def test_logical(ts):
+    a = make(ts)
+    assert a.logical().to_dict() == {k: 1.0 for k in oracle(ts)}
+
+
+def test_paper_fig_1_2_example():
+    """The exact associative array of Fig. 1 and its Fig. 2 storage."""
+    row = ["0294.mp3"] * 3 + ["1829.mp3"] * 3 + ["7802.mp3"] * 3
+    col = ["artist", "duration", "genre"] * 3
+    val = ["Pink Floyd", "6:53", "rock", "Samuel Barber", "8:01",
+           "classical", "Taylor Swift", "10:12", "pop"]
+    a = Assoc(row, col, val)
+    assert a.row.tolist() == ["0294.mp3", "1829.mp3", "7802.mp3"]
+    assert a.col.tolist() == ["artist", "duration", "genre"]
+    # A.val is the sorted unique values; adj holds 1-based pointers
+    assert a.val.tolist() == sorted(val)
+    assert not a.numeric
+    adj = a.adj.toarray()
+    for i, r in enumerate(a.row):
+        for j, c in enumerate(a.col):
+            k = int(adj[i, j]) - 1
+            assert a.val[k] == a.get(r, c)
+    assert a.get("1829.mp3", "artist") == "Samuel Barber"
+
+
+def test_getitem_string_slice_right_inclusive():
+    a = Assoc(["a", "b", "c", "d"], ["x"] * 4, [1.0, 2.0, 3.0, 4.0])
+    sub = a["a,:,c,", ":"]
+    assert set(sub.row.tolist()) == {"a", "b", "c"}  # right-INCLUSIVE
+
+
+def test_getitem_positional_ints():
+    a = Assoc(["a", "b", "c"], ["x", "y", "z"], [1.0, 2.0, 3.0])
+    sub = a[0:2, [0, 1]]  # slices/ints are POSITIONS (paper §II.B rule 2)
+    assert sub.get("a", "x") == 1.0 and sub.get("b", "y") == 2.0
+    assert sub.get("c", "z") is None
+
+
+def test_setitem():
+    a = Assoc(["r"], ["c"], [1.0])
+    a["r2", "c2"] = 5.0
+    assert a.get("r2", "c2") == 5.0
+    a["r", "c"] = 9.0   # overwrite (aggregate=last semantics)
+    assert a.get("r", "c") == 9.0
+
+
+def test_condense_removes_empty():
+    a = Assoc(["a", "b"], ["x", "y"], [1.0, 2.0])
+    b = Assoc(["a"], ["x"], [-1.0])
+    s = a + b  # (a,x) cancels to zero → row a / col x become empty
+    assert s.to_dict() == {("b", "y"): 2.0}
+    assert s.row.tolist() == ["b"] and s.col.tolist() == ["y"]
+
+
+def test_string_add_concat_and_min_combine():
+    a = Assoc(["r"], ["c"], ["ab"])
+    b = Assoc(["r"], ["c"], ["cd"])
+    assert (a + b).get("r", "c") == "abcd"
+    assert a.min(b).get("r", "c") == "ab"
+    assert a.max(b).get("r", "c") == "cd"
+
+
+def test_mixed_mul_mask_semantics():
+    s = Assoc(["r1", "r2"], ["c", "c"], ["hello", "world"])
+    m = Assoc(["r1"], ["c"], [1.0])
+    masked = s * m                       # numeric masks string
+    assert masked.to_dict() == {("r1", "c"): "hello"}
+    num = Assoc(["r1", "r2"], ["c", "c"], [3.0, 4.0])
+    out = num * s                        # string → logical() → numeric
+    assert out.to_dict() == {("r1", "c"): 3.0, ("r2", "c"): 4.0}
+
+
+def test_matmul_with_string_operand_uses_logical():
+    s = Assoc(["r"], ["k"], ["word"])
+    n = Assoc(["k"], ["c"], [7.0])
+    assert (s @ n).to_dict() == {("r", "c"): 7.0}
+
+
+def test_sqin_sqout():
+    a = Assoc(["d1", "d1", "d2"], ["t1", "t2", "t1"], [1.0, 1.0, 1.0])
+    co = a.sqin()   # AᵀA: term co-occurrence
+    assert co.get("t1", "t1") == 2.0 and co.get("t1", "t2") == 1.0
+    sim = a.sqout()  # AAᵀ: doc similarity
+    assert sim.get("d1", "d2") == 1.0
+
+
+def test_sum_axes():
+    a = Assoc(["r1", "r1", "r2"], ["c1", "c2", "c1"], [1.0, 2.0, 3.0])
+    assert a.sum() == 6.0
+    cols = a.sum(axis=0)
+    assert cols.get("sum", "c1") == 4.0 and cols.get("sum", "c2") == 2.0
+    rows = a.sum(axis=1)
+    assert rows.get("r1", "sum") == 3.0

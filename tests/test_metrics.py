@@ -1,0 +1,45 @@
+"""D4M telemetry: idempotent merges, series extraction."""
+import numpy as np
+
+from repro.distributed import MetricsStore
+
+
+def test_log_and_series():
+    ms = MetricsStore("last")
+    ms.log(0, {"loss": 4.0, "lr": 0.1})
+    ms.log(1, {"loss": 3.5, "lr": 0.1})
+    steps, losses = ms.series("loss")
+    np.testing.assert_array_equal(steps, [0.0, 1.0])
+    np.testing.assert_array_equal(losses, [4.0, 3.5])
+
+
+def test_merge_idempotent_under_retry():
+    """Re-reporting the same step after a restart can't corrupt history —
+    ⊕ = max is idempotent (the D4M argument for semiring telemetry)."""
+    a = MetricsStore("max")
+    a.log(5, {"tokens": 100.0})
+    b = MetricsStore("max")
+    b.log(5, {"tokens": 100.0})   # duplicated retry report
+    merged = a.merge(b)
+    _, v = merged.series("tokens")
+    np.testing.assert_array_equal(v, [100.0])
+    again = merged.merge(b)
+    _, v2 = again.series("tokens")
+    np.testing.assert_array_equal(v2, [100.0])
+
+
+def test_cross_host_sum_merge():
+    h0, h1 = MetricsStore("sum"), MetricsStore("sum")
+    h0.log(1, {"examples": 8.0})
+    h1.log(1, {"examples": 8.0})
+    merged = h0.merge(h1)
+    _, v = merged.series("examples")
+    np.testing.assert_array_equal(v, [16.0])
+
+
+def test_serialization_roundtrip():
+    ms = MetricsStore("last")
+    ms.log(2, {"loss": 1.5})
+    ms2 = MetricsStore.from_dict(ms.to_dict())
+    s, v = ms2.series("loss")
+    np.testing.assert_array_equal(v, [1.5])

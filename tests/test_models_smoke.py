@@ -1,0 +1,210 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU asserting output shapes + finiteness, plus a decode step against the
+static cache.  The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke, shapes_for
+from repro.models import model as M
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=64):
+    tokens = jax.random.randint(RNG, (b, s), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.encdec:
+        batch["enc_inputs"] = jax.random.normal(
+            RNG, (b, cfg.encdec["enc_frames"], cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_grad(arch):
+    cfg = get_smoke(arch).replace(remat="none")
+    params, specs = M.init(RNG, cfg)
+    # specs mirror params structurally
+    jax.tree.map(lambda p, s: None, params,
+                 jax.tree.map(lambda x: x, specs,
+                              is_leaf=lambda t: isinstance(t, tuple)))
+    batch = _batch(cfg)
+    loss, aux = M.lm_loss(params, cfg, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    grads = jax.grad(lambda p: M.lm_loss(p, cfg, batch)[0])(params)
+    gn = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_logits_shape(arch):
+    cfg = get_smoke(arch).replace(remat="none")
+    params, _ = M.init(RNG, cfg)
+    batch = _batch(cfg, b=2, s=32)
+    logits, _, _ = M.forward(params, cfg, batch["tokens"], mode="train",
+                             enc_inputs=batch.get("enc_inputs"))
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_smoke(arch).replace(remat="none")
+    params, _ = M.init(RNG, cfg)
+    b, cache_len = 2, 32
+    cache = M.init_cache(cfg, b, cache_len)
+    tok = jax.random.randint(RNG, (b, 1), 0, cfg.vocab)
+    logits, _, new_cache = M.forward(
+        params, cfg, tok, mode="decode", cache=cache,
+        positions=jnp.zeros((1,), jnp.int32))
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "mamba2_130m"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode logits ≈ full forward logits (same prefix)."""
+    cfg = get_smoke(arch).replace(remat="none")
+    params, _ = M.init(RNG, cfg)
+    b, s = 1, 8
+    tokens = jax.random.randint(RNG, (b, s), 0, cfg.vocab)
+    full_logits, _, _ = M.forward(params, cfg, tokens, mode="train")
+    cache = M.init_cache(cfg, b, s)
+    outs = []
+    for t in range(s):
+        lg, _, cache = M.forward(params, cfg, tokens[:, t:t + 1],
+                                 mode="decode", cache=cache,
+                                 positions=jnp.asarray([t], jnp.int32))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=0.15, atol=0.15)  # bf16 accumulation drift
+
+
+def test_shapes_for_skips():
+    # long_500k only for sub-quadratic decode archs
+    assert "long_500k" not in [s.name for s in shapes_for("qwen3_1_7b")]
+    assert "long_500k" in [s.name for s in shapes_for("mamba2_130m")]
+    assert "long_500k" in [s.name for s in shapes_for("mixtral_8x22b")]  # SWA
+    assert "long_500k" in [s.name for s in shapes_for("zamba2_7b")]
+
+
+def test_full_configs_match_assignment():
+    """The published numbers from the assignment block, verbatim."""
+    c = get_config("chatglm3-6b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (28, 4096, 32, 2, 13696, 65024)
+    c = get_config("qwen3-1.7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (28, 2048, 16, 8, 6144, 151936)
+    c = get_config("starcoder2-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (32, 4608, 36, 4, 18432, 49152)
+    c = get_config("minicpm-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (40, 2304, 36, 5760, 122753)
+    c = get_config("whisper-medium")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (24, 1024, 16, 4096, 51865)
+    c = get_config("deepseek-v3-671b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) == (61, 7168, 128, 129280)
+    assert c.moe["n_experts"] == 256 and c.moe["top_k"] == 8
+    assert c.mla["kv_lora_rank"] == 512
+    c = get_config("mixtral-8x22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == \
+        (56, 6144, 48, 8, 32768)
+    assert c.moe["n_experts"] == 8 and c.moe["top_k"] == 2
+    c = get_config("chameleon-34b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (48, 8192, 64, 8, 22016, 65536)
+    c = get_config("mamba2-130m")
+    assert (c.n_layers, c.d_model, c.vocab) == (24, 768, 50280)
+    assert c.ssm["d_state"] == 128
+    c = get_config("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (81, 3584, 32, 14336, 32000)
+    assert c.ssm["d_state"] == 64
+
+
+def test_moe_load_balance_and_dispatch():
+    """MoE dispatch ≈ dense per-token expert mixture (high capacity)."""
+    from repro.models import moe as moe_lib
+    cfg = get_smoke("mixtral_8x22b")
+    cfg = cfg.replace(moe={**cfg.moe, "capacity_factor": 8.0})
+    key = jax.random.PRNGKey(1)
+    p, _ = moe_lib.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    y, aux, load = moe_lib.apply_moe(p, cfg, x)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+    assert float(load.sum()) == 2 * 16 * cfg.moe["top_k"]
+    # oracle: route manually, compute experts densely
+    gates, idx, _, _ = moe_lib._route(p, cfg, x)
+    def ffn(e, v):
+        h = jax.nn.silu(v @ p["gate"][e]) * (v @ p["up"][e])
+        return h @ p["down"][e]
+    want = jnp.zeros_like(x)
+    for b in range(2):
+        for t in range(16):
+            acc = jnp.zeros((cfg.d_model,), x.dtype)
+            for k in range(cfg.moe["top_k"]):
+                acc += gates[b, t, k] * ffn(int(idx[b, t, k]), x[b, t])
+            want = want.at[b, t].set(acc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ssd_chunked_equals_stepwise():
+    """Chunk-parallel SSD == exact per-token recurrence."""
+    from repro.models import ssm as ssm_lib
+    cfg = get_smoke("mamba2_130m")
+    key = jax.random.PRNGKey(2)
+    p, _ = ssm_lib.init_mamba2(key, cfg)
+    x = jax.random.normal(key, (1, 32, cfg.d_model), jnp.float32) * 0.3
+    y_chunk, _ = ssm_lib.mamba2_block(p, cfg, x, mode="train")
+    # stepwise decode over the same inputs
+    cache = ssm_lib.init_ssm_cache(cfg, 1)
+    cache = jax.tree.map(lambda a: a.astype(jnp.float32), cache)
+    outs = []
+    for t in range(32):
+        o, cache = ssm_lib.mamba2_block(p, cfg, x[:, t:t + 1], mode="decode",
+                                        cache=cache)
+        outs.append(o[:, 0])
+    y_step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_step, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_deepseek_mtp_head():
+    """MTP: extra block + shared head predicting t+2, train-time aux loss."""
+    cfg = get_smoke("deepseek_v3_671b").replace(remat="none", mtp=True)
+    params, _ = M.init(RNG, cfg)
+    assert "mtp" in params
+    tok = jax.random.randint(RNG, (2, 32), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    loss, m = M.lm_loss(params, cfg, batch)
+    assert "mtp" in m and bool(jnp.isfinite(m["mtp"]))
+    g = jax.grad(lambda p: M.lm_loss(p, cfg, batch)[0])(params)
+    gn = sum(jnp.sum(x.astype(jnp.float32) ** 2)
+             for x in jax.tree.leaves(g["mtp"]))
+    assert float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "deepseek_v3_671b",
+                                  "mamba2_130m", "zamba2_7b"])
+def test_chunked_prefill_matches_one_shot(arch):
+    """Window-wise cache build == one-shot prefill (long-context path)."""
+    from repro.launch import steps as S
+    cfg = get_smoke(arch).replace(remat="none")
+    if cfg.moe:  # avoid capacity-drop divergence between window sizes
+        cfg = cfg.replace(moe={**cfg.moe, "capacity_factor": 32.0})
+    params, _ = M.init(RNG, cfg)
+    toks = jax.random.randint(RNG, (2, 32), 0, cfg.vocab)
+    l1, _ = S.make_prefill_step(cfg)(params, toks)
+    l2, _ = S.make_prefill_step(cfg.replace(prefill_chunk=8))(params, toks)
+    d = np.abs(np.asarray(l1, np.float32) - np.asarray(l2, np.float32)).max()
+    assert d / (np.abs(np.asarray(l1)).max() + 1e-6) < 0.05, (arch, d)

@@ -1,0 +1,70 @@
+"""Property tests: the registered semirings satisfy the §I.A axioms."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import semiring as SR
+
+SEMIRINGS = [SR.PLUS_TIMES, SR.MAX_PLUS, SR.MIN_PLUS, SR.MAX_MIN, SR.MAX_TIMES]
+
+# magnitudes ≥ 1e-6 (or exactly 0): XLA CPU flushes f32 subnormals to zero,
+# which would falsify max(u, 0) == u for u ≈ 1e-40 — an FTZ artifact, not an
+# algebra violation.
+_mag = st.floats(min_value=2.0 ** -20, max_value=1e6, allow_nan=False,
+                 allow_subnormal=False, width=32)
+finite = st.one_of(st.just(0.0), _mag, _mag.map(lambda x: -x))
+nonneg = st.one_of(st.just(0.0), _mag)
+
+
+def _vals_for(sr):
+    # max_times needs nonnegative values for ⊗-associativity w/ max
+    return nonneg if sr.name == "max_times" else finite
+
+
+@pytest.mark.parametrize("sr", SEMIRINGS, ids=lambda s: s.name)
+class TestAxioms:
+    @given(data=st.data())
+    def test_add_assoc_comm(self, sr, data):
+        u, v, w = (data.draw(_vals_for(sr)) for _ in range(3))
+        assert np.isclose(sr.add_py(sr.add_py(u, v), w),
+                          sr.add_py(u, sr.add_py(v, w)), rtol=1e-5, atol=1e-4)
+        assert sr.add_py(u, v) == sr.add_py(v, u)
+
+    @given(data=st.data())
+    def test_mul_assoc(self, sr, data):
+        u, v, w = (data.draw(_vals_for(sr)) for _ in range(3))
+        assert np.isclose(sr.mul_py(sr.mul_py(u, v), w),
+                          sr.mul_py(u, sr.mul_py(v, w)), rtol=1e-4, atol=1e-3)
+
+    @given(data=st.data())
+    def test_identities_annihilator(self, sr, data):
+        u = data.draw(_vals_for(sr))
+        assert sr.add_py(u, sr.zero) == u
+        assert np.isclose(sr.mul_py(u, sr.one), u, rtol=1e-6, atol=1e-6)
+        assert sr.mul_py(u, sr.zero) in (sr.zero,) or np.isclose(
+            sr.mul_py(u, sr.zero), sr.zero)
+
+    @given(data=st.data())
+    def test_distributivity(self, sr, data):
+        u, v, w = (data.draw(_vals_for(sr)) for _ in range(3))
+        lhs = sr.mul_py(u, sr.add_py(v, w))
+        rhs = sr.add_py(sr.mul_py(u, v), sr.mul_py(u, w))
+        assert np.isclose(lhs, rhs, rtol=1e-4, atol=1e-3)
+
+
+def test_string_algebra():
+    s = SR.STRING
+    assert s.add_py("ab", "cd") == "abcd"          # ⊕ = concatenation
+    assert s.mul_py("ab", "cd") == "ab"            # ⊗ = min (dict order)
+    assert s.add_py("x", s.zero) == "x"            # ε identity
+    # nonunital: no claimed ⊗ identity
+
+
+def test_matmul_dense_matches_numpy():
+    rng = np.random.default_rng(0)
+    a, b = rng.normal(size=(5, 7)), rng.normal(size=(7, 3))
+    out = np.asarray(SR.PLUS_TIMES.matmul_dense(a, b))
+    np.testing.assert_allclose(out, a @ b, rtol=1e-5)
+    mp = np.asarray(SR.MAX_PLUS.matmul_dense(a, b))
+    ref = (a[:, :, None] + b[None, :, :]).max(axis=1)
+    np.testing.assert_allclose(mp, ref, rtol=1e-5)

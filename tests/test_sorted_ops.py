@@ -1,0 +1,57 @@
+"""Padded sorted-set primitives vs numpy ground truth."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import (INT_SENTINEL, sorted_intersect, sorted_intersect_padded,
+                        sorted_union, sorted_union_padded)
+
+sets = st.lists(st.integers(min_value=0, max_value=50), min_size=0,
+                max_size=20).map(lambda xs: np.unique(xs).astype(np.int32))
+
+
+def _pad(a, cap):
+    out = np.full(cap, INT_SENTINEL, np.int32)
+    out[:len(a)] = a
+    return jnp.asarray(out)
+
+
+@given(sets, sets)
+def test_union_padded(i, j):
+    cap_i, cap_j = 24, 24
+    k, nk, imap, jmap = sorted_union_padded(_pad(i, cap_i), _pad(j, cap_j))
+    k, nk = np.asarray(k), int(nk)
+    want = np.union1d(i, j)
+    assert nk == len(want)
+    np.testing.assert_array_equal(k[:nk], want)
+    # index maps: k[imap] == i elementwise
+    imap = np.asarray(imap)[:len(i)]
+    jmap = np.asarray(jmap)[:len(j)]
+    np.testing.assert_array_equal(k[imap], i)
+    np.testing.assert_array_equal(k[jmap], j)
+
+
+@given(sets, sets)
+def test_intersect_padded(i, j):
+    k, nk, imap, jmap = sorted_intersect_padded(_pad(i, 24), _pad(j, 24))
+    k, nk = np.asarray(k), int(nk)
+    want = np.intersect1d(i, j)
+    assert nk == len(want)
+    np.testing.assert_array_equal(k[:nk], want)
+    imap, jmap = np.asarray(imap)[:nk], np.asarray(jmap)[:nk]
+    if nk:
+        np.testing.assert_array_equal(i[imap], want)
+        np.testing.assert_array_equal(j[jmap], want)
+
+
+@given(sets, sets)
+def test_host_union_intersect(i, j):
+    k, imap, jmap = sorted_union(i, j)
+    np.testing.assert_array_equal(k, np.union1d(i, j))
+    np.testing.assert_array_equal(k[imap], i)
+    np.testing.assert_array_equal(k[jmap], j)
+    ki, imap2, jmap2 = sorted_intersect(i, j)
+    np.testing.assert_array_equal(ki, np.intersect1d(i, j))
+    if len(ki):
+        np.testing.assert_array_equal(i[imap2], ki)
+        np.testing.assert_array_equal(j[jmap2], ki)
