@@ -119,12 +119,118 @@ FIGS = {
     "fig7_elemmul": bench_elemmul,
 }
 
+
+# ---------------------------------------------------------------------------
+# Host string-op benchmarks: vectorized canonical-COO paths vs the original
+# per-element dict-loop implementations (kept here as the reference
+# baseline the refactor is measured against).
+# ---------------------------------------------------------------------------
+
+def _mask_by_dict_loop(a: Assoc, mask: Assoc) -> Assoc:
+    """Seed implementation of string×numeric masking (per-element probing)."""
+    rm, cm, _ = mask.triples()
+    keys_mask = set(zip(rm.tolist(), cm.tolist()))
+    r, c, v = a.triples()
+    keep = np.fromiter(
+        ((ri, ci) in keys_mask for ri, ci in zip(r.tolist(), c.tolist())),
+        dtype=bool, count=len(r))
+    return Assoc(r[keep], c[keep], v[keep])
+
+
+def _mul_string_dict_loop(a: Assoc, b: Assoc) -> Assoc:
+    """Seed implementation of string ⊗ string (per-element dict loop)."""
+    r1, c1, v1 = a.triples()
+    r2, c2, v2 = b.triples()
+    d2 = {(ri, ci): vi
+          for ri, ci, vi in zip(r2.tolist(), c2.tolist(), v2.tolist())}
+    rows, cols, vals = [], [], []
+    for ri, ci, vi in zip(r1.tolist(), c1.tolist(), v1.tolist()):
+        if (ri, ci) in d2:
+            rows.append(ri)
+            cols.append(ci)
+            vals.append(min(vi, d2[(ri, ci)]))
+    return Assoc(rows, cols, vals)
+
+
+def _string_pair(n):
+    d = make_dataset(n)
+    a = Assoc(d["rows"], d["cols"], d["str_vals"])
+    b = Assoc(d["rows2"], d["cols2"], d["str_vals"][::-1])
+    mask = Assoc(d["rows2"], d["cols2"], 1.0)
+    return a, b, mask
+
+
+def bench_string_mask(n: int, impl: str = "host") -> float:
+    a, _, mask = _string_pair(n)
+    if impl == "dict_loop":
+        return _time(lambda: _mask_by_dict_loop(a, mask))
+    return _time(lambda: a * mask)     # vectorized rank-intersection path
+
+
+def bench_string_elemmul(n: int, impl: str = "host") -> float:
+    a, b, _ = _string_pair(n)
+    if impl == "dict_loop":
+        return _time(lambda: _mul_string_dict_loop(a, b))
+    return _time(lambda: a * b)        # vectorized rank-intersection path
+
+
+def _seed_combine_loop(a: Assoc, b: Assoc, fn) -> Assoc:
+    """Seed implementation of string ⊕: raw-triple re-construction with the
+    generic per-element Python fold the old ``_aggregate_sorted_runs`` used."""
+    ra, ca, va = a.triples()
+    rb, cb, vb = b.triples()
+    row = np.concatenate([ra.astype(str), rb.astype(str)])
+    col = np.concatenate([ca.astype(str), cb.astype(str)])
+    val = np.concatenate([va, vb])
+    urow, r_codes = np.unique(row, return_inverse=True)
+    ucol, c_codes = np.unique(col, return_inverse=True)
+    order = np.lexsort((c_codes, r_codes))
+    r, c, v = r_codes[order], c_codes[order], val[order]
+    new_run = np.r_[True, (r[1:] != r[:-1]) | (c[1:] != c[:-1])]
+    starts = np.flatnonzero(new_run)
+    ends = np.r_[starts[1:], len(v)]
+    out = []
+    for s, e in zip(starts, ends):          # the seed's per-element loop
+        acc = v[s]
+        for t in range(s + 1, e):
+            acc = fn(acc, v[t])
+        out.append(acc)
+    return Assoc(urow[r[starts]], ucol[c[starts]], np.asarray(out, object))
+
+
+def bench_string_concat_add(n: int, impl: str = "host") -> float:
+    """String ⊕ (concatenation) over the key-set union — union-recode + one
+    canonicalize pass vs the seed's re-construction with a Python fold."""
+    a, b, _ = _string_pair(n)
+    if impl == "dict_loop":
+        return _time(lambda: _seed_combine_loop(a, b, lambda x, y: x + y))
+    return _time(lambda: a + b)
+
+
+STRING_OPS = {
+    "host_string_mask": bench_string_mask,
+    "host_string_elemmul": bench_string_elemmul,
+    "host_string_concat_add": bench_string_concat_add,
+}
+
+
+def run_string_ops(n_lo: int = 5, n_hi: int = 12) -> List[Dict]:
+    """Rows for the host string-op benches, vectorized vs dict-loop."""
+    rows = []
+    for name, fn in STRING_OPS.items():
+        for impl in ("host", "dict_loop"):
+            for n in range(n_lo, n_hi + 1):
+                rows.append({"bench": name, "impl": impl, "n": n,
+                             "seconds": fn(n, impl), "nnz": 8 * 2 ** n})
+    return rows
+
 # device matmul densifies over the keyspace: cap its n range
 _DEVICE_MAX_N = {"fig6_matmul": 10, "fig5_add": 12, "fig7_elemmul": 12,
                  "fig3_constructor_numeric": 12, "fig4_constructor_string": 12}
 
 
-def run_all(n_lo: int = 5, n_hi: int = 12, device: bool = True) -> List[Dict]:
+def run_all(n_lo: int = 5, n_hi: int = 12, device: bool = True,
+            string_ops: bool = True) -> List[Dict]:
     rows = []
     for name, fn in FIGS.items():
         for n in range(n_lo, n_hi + 1):
@@ -137,4 +243,6 @@ def run_all(n_lo: int = 5, n_hi: int = 12, device: bool = True) -> List[Dict]:
                 t = fn(n, "device")
                 rows.append({"bench": name, "impl": "device", "n": n,
                              "seconds": t, "nnz": 8 * 2 ** n})
+    if string_ops:
+        rows.extend(run_string_ops(n_lo, min(n_hi, 12)))
     return rows

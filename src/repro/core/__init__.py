@@ -1,5 +1,8 @@
 """repro.core — the paper's contribution: D4M associative arrays in JAX.
 
+* ``coo``          — the canonical COO/semiring triple-store core every
+                     associative-array implementation builds on
+                     (host ``canonicalize_np`` / device ``dedup_sorted_coo``).
 * ``Assoc``        — paper-faithful host implementation (numpy/scipy).
 * ``AssocTensor``  — TPU-native device implementation (padded COO, semirings).
 * ``KeySpace``     — host key dictionaries backing device rank arrays.
@@ -8,16 +11,20 @@
 """
 from .assoc import Assoc
 from .assoc_tensor import AssocTensor
+from .coo import (aggregate_runs, canonicalize_np, dedup_sorted_coo,
+                  intersect_pairs_np, linearize_pairs_np, spgemm_np)
 from .keyspace import KeySpace
 from .semiring import (AND_OR, MAX_MIN, MAX_PLUS, MAX_TIMES, MIN_PLUS,
-                       PLUS_TIMES, STRING, Semiring, get_semiring)
+                       PLUS_TIMES, REGISTRY, STRING, Semiring, get_semiring)
 from .sorted_ops import (INT_SENTINEL, sorted_intersect,
                          sorted_intersect_padded, sorted_union,
                          sorted_union_padded)
 
 __all__ = [
     "Assoc", "AssocTensor", "KeySpace", "Semiring", "get_semiring",
-    "PLUS_TIMES", "MAX_PLUS", "MIN_PLUS", "MAX_MIN", "MAX_TIMES", "AND_OR",
-    "STRING", "INT_SENTINEL", "sorted_union", "sorted_intersect",
+    "REGISTRY", "PLUS_TIMES", "MAX_PLUS", "MIN_PLUS", "MAX_MIN", "MAX_TIMES",
+    "AND_OR", "STRING", "INT_SENTINEL", "sorted_union", "sorted_intersect",
     "sorted_union_padded", "sorted_intersect_padded",
+    "aggregate_runs", "canonicalize_np", "dedup_sorted_coo",
+    "intersect_pairs_np", "linearize_pairs_np", "spgemm_np",
 ]

@@ -19,6 +19,15 @@ operands onto the *sorted union* of key sets and defers to
 rows/cols via CSR/CSC ``indptr`` diffs; ``logical()`` replaces nonempty
 entries with 1.
 
+All triple canonicalization (constructor aggregation, ``combine``,
+assignment) routes through the shared canonical COO core in
+``repro.core.coo`` — the same primitive the device ``AssocTensor`` uses —
+and the algebra is semiring-generic: :meth:`Assoc.add`, :meth:`Assoc.mul`
+and :meth:`Assoc.matmul` accept any registered
+:class:`~repro.core.semiring.Semiring` (default ``(+,×)``), so graph idioms
+like ``sqin`` run under ``min_plus``/``max_min`` on host exactly as on
+device.
+
 This host class is the **reproduction baseline** benchmarked against the
 paper's Figs 3–7; the TPU-native ``AssocTensor`` lives in
 ``assoc_tensor.py``.
@@ -30,6 +39,9 @@ from typing import Callable, Iterable, Optional, Sequence, Tuple, Union
 import numpy as np
 import scipy.sparse as sp
 
+from .coo import (apply_pair, canonicalize_np, intersect_pairs_np,
+                  linearize_pairs_np, spgemm_np)
+from .semiring import PLUS_TIMES, get_semiring
 from .sorted_ops import sorted_intersect, sorted_union
 
 __all__ = ["Assoc", "is_string_array"]
@@ -83,38 +95,6 @@ def _broadcast(row, col, val):
     return out
 
 
-_AGG_UFUNC = {
-    min: np.minimum, max: np.maximum, sum: np.add,
-    "min": np.minimum, "max": np.maximum, "sum": np.add, "add": np.add,
-    "prod": np.multiply,
-}
-
-
-def _aggregate_sorted_runs(sort_idx, run_starts, vals, aggregate):
-    """Aggregate values of duplicate (row,col) runs; vals already sorted."""
-    if aggregate in ("first",):
-        return vals[run_starts]
-    if aggregate in ("last",):
-        ends = np.r_[run_starts[1:], len(vals)] - 1
-        return vals[ends]
-    ufunc = _AGG_UFUNC.get(aggregate)
-    if ufunc is not None and vals.dtype.kind in "fiu":
-        return ufunc.reduceat(vals, run_starts)
-    # generic python-callable aggregator (e.g. string concat)
-    fn: Callable = aggregate if callable(aggregate) else {
-        "min": min, "max": max, "sum": lambda a, b: a + b,
-        "concat": lambda a, b: a + b,
-    }[aggregate]
-    ends = np.r_[run_starts[1:], len(vals)]
-    out = []
-    for s, e in zip(run_starts, ends):
-        acc = vals[s]
-        for t in range(s + 1, e):
-            acc = fn(acc, vals[t])
-        out.append(acc)
-    return np.asarray(out, dtype=vals.dtype if vals.dtype.kind != "U" else object)
-
-
 class Assoc:
     """D4M associative array (paper-faithful host implementation)."""
 
@@ -155,13 +135,8 @@ class Assoc:
         self.row, row_codes = np.unique(row, return_inverse=True)
         self.col, col_codes = np.unique(col, return_inverse=True)
 
-        # sort by (row_code, col_code) and aggregate duplicate runs
-        order = np.lexsort((col_codes, row_codes))
-        r, c, v = row_codes[order], col_codes[order], val[order]
-        new_run = np.r_[True, (r[1:] != r[:-1]) | (c[1:] != c[:-1])]
-        starts = np.flatnonzero(new_run)
-        r, c = r[starts], c[starts]
-        v = _aggregate_sorted_runs(order, starts, v, aggregate)
+        # canonical COO core: lexsort + duplicate-run ⊕-merge + compaction
+        r, c, v = canonicalize_np(row_codes, col_codes, val, combine=aggregate)
 
         if numeric:
             self.val = 1.0
@@ -198,12 +173,26 @@ class Assoc:
     @classmethod
     def _from_parts(cls, row, col, val, adj) -> "Assoc":
         a = cls.__new__(cls)
-        a.row, a.col, a.val, a.adj = row, col, sp.coo_matrix(adj) if not sp.issparse(adj) else adj, None
         a.row = np.asarray(row)
         a.col = np.asarray(col)
         a.val = val
         a.adj = adj if sp.issparse(adj) else sp.coo_matrix(adj)
         return a
+
+    @classmethod
+    def _assemble(cls, row_keys, col_keys, r, c, v) -> "Assoc":
+        """Build from canonical code triples over given key arrays.
+
+        Values are stored exactly — an explicit ``0.0`` that is *not* the
+        ambient semiring's zero survives — and empty rows/cols are condensed
+        away.  This is the assembly step of the semiring-generic algebra.
+        """
+        adj = sp.coo_matrix((np.asarray(v, dtype=np.float64), (r, c)),
+                            shape=(len(row_keys), len(col_keys)))
+        out = cls._from_parts(np.asarray(row_keys), np.asarray(col_keys),
+                              1.0, adj)
+        out.condense()
+        return out
 
     # ------------------------------------------------------------------ #
     # basic properties                                                   #
@@ -306,8 +295,37 @@ class Assoc:
         if self.numeric and other.numeric:
             return self._add_numeric(other)
         if not self.numeric and not other.numeric:
-            return self.combine(other, lambda a, b: a + b)
+            return self.combine(other, "concat")
         raise TypeError("mixed numeric/string element-wise addition")
+
+    def add(self, other: "Assoc", semiring=PLUS_TIMES) -> "Assoc":
+        """Element-wise ⊕ over the union of key sets, semiring-generic.
+
+        With the default ``(+,×)`` this is exactly ``self + other`` (scipy
+        fast path, string concatenation).  Any other registered semiring
+        runs through the canonical COO core: rank both operands into union
+        keyspaces, concatenate triples, ⊕-merge duplicate pairs.
+        """
+        sr = get_semiring(semiring)
+        if not isinstance(other, Assoc):
+            raise TypeError("Assoc.add expects an Assoc")
+        if sr.name == "plus_times":
+            return self + other
+        if not (self.numeric and other.numeric):
+            raise TypeError("semiring algebra requires numeric arrays")
+        if self.nnz() == 0:
+            return other.copy()
+        if other.nnz() == 0:
+            return self.copy()
+        rec = self._union_recode(other)
+        if rec is None:
+            raise TypeError("cannot mix string and numeric key sets")
+        row_u, col_u, (ar, ac, acoo), (br, bc, bcoo) = rec
+        r, c, v = canonicalize_np(
+            np.concatenate([ar, br]), np.concatenate([ac, bc]),
+            np.concatenate([acoo.data, bcoo.data]), combine=sr.add_np)
+        keep = v != sr.zero
+        return Assoc._assemble(row_u, col_u, r[keep], c[keep], v[keep])
 
     def _add_numeric(self, other: "Assoc") -> "Assoc":
         row_union, ia, ib = sorted_union(self.row, other.row)
@@ -324,24 +342,90 @@ class Assoc:
         return sp.coo_matrix(
             (coo.data, (imap[coo.row], jmap[coo.col])), shape=shape)
 
-    def combine(self, other: "Assoc", binop: Callable) -> "Assoc":
-        """Triple-append + aggregate (paper's Assoc.combine; string ⊕ etc.)."""
-        ra, ca, va = self.triples()
-        rb, cb, vb = other.triples()
-        if _is_str_kind(va) != _is_str_kind(vb):
+    def combine(self, other: "Assoc", binop) -> "Assoc":
+        """Triple-append + one canonicalize pass (paper's ``Assoc.combine``).
+
+        ``binop`` is an aggregator understood by the canonical COO core:
+        a name (``"min"``/``"max"``/``"sum"``/``"concat"``/``"first"``/
+        ``"last"``), a numpy ufunc, or a python callable (slow path).  Both
+        operands are re-ranked onto union key spaces (their codes are
+        already ranks — no key re-sorting), triples concatenated (self
+        first, so order-sensitive ⊕ like concatenation sees self's value on
+        the left) and merged in a single vectorized canonicalization — no
+        per-element loops.
+        """
+        if self.nnz() and other.nnz() and self.numeric != other.numeric:
             raise TypeError("combine requires same value kind")
-        row = np.concatenate([ra.astype(str) if _is_str_kind(ra) else ra,
-                              rb.astype(str) if _is_str_kind(rb) else rb])
-        col = np.concatenate([ca.astype(str) if _is_str_kind(ca) else ca,
-                              cb.astype(str) if _is_str_kind(cb) else cb])
-        val = np.concatenate([va, vb])
-        return Assoc(row, col, val, aggregate=binop)
+        if self.nnz() == 0:
+            return other.copy()
+        if other.nnz() == 0:
+            return self.copy()
+        rec = self._union_recode(other)
+        if rec is None:
+            raise TypeError("cannot mix string and numeric key sets")
+        row_u, col_u, (ar, ac, acoo), (br, bc, bcoo) = rec
+        # both operands are canonical ⇒ duplicate runs have length exactly 2
+        # and are the support intersection: fold ONLY those pairs, pass the
+        # disjoint remainder through untouched.
+        ia, ib = intersect_pairs_np(linearize_pairs_np(ar, ac, len(col_u)),
+                                    linearize_pairs_np(br, bc, len(col_u)))
+        only_a = np.ones(len(ar), dtype=bool)
+        only_a[ia] = False
+        only_b = np.ones(len(br), dtype=bool)
+        only_b[ib] = False
+
+        if self.numeric:
+            merged = apply_pair(binop, acoo.data[ia], bcoo.data[ib])
+            # drop zeros only among NEWLY merged values: an explicit 0.0
+            # already stored by an operand (legit under non-(+,×)
+            # semirings) passes through untouched per _assemble's contract
+            mkeep = merged != 0.0
+            rows = np.concatenate([ar[only_a], br[only_b], ar[ia][mkeep]])
+            cols = np.concatenate([ac[only_a], bc[only_b], ac[ia][mkeep]])
+            vals = np.concatenate([acoo.data[only_a], bcoo.data[only_b],
+                                   merged[mkeep]])
+            return Assoc._assemble(row_u, col_u, rows, cols, vals)
+
+        # string case: stay in rank space — non-overlapping entries keep
+        # their pointer into the merged value dictionary; only the folded
+        # pair values are materialized as strings.
+        val_u, vam, vbm = sorted_union(self.val, other.val)
+        merged = apply_pair(binop, self.val[(acoo.data[ia] - 1).astype(np.int64)],
+                            other.val[(bcoo.data[ib] - 1).astype(np.int64)])
+        merged = np.asarray(merged, dtype=str)
+        mkeep = merged != ""  # empty string ⇒ unstored (paper rule)
+        merged = merged[mkeep]
+        # grow the value dictionary with genuinely new folded strings —
+        # a small sorted insert, never a re-sort of the full value set
+        mu = np.unique(merged)
+        pos = np.searchsorted(val_u, mu)
+        pos_c = np.clip(pos, 0, max(len(val_u) - 1, 0))
+        new_vals = mu[val_u[pos_c] != mu] if len(val_u) else mu
+        # concatenate (promotes the string width) + stable timsort merge of
+        # the two sorted runs; disjoint by construction ⇒ sorted unique
+        val_all = np.concatenate([val_u, new_vals])
+        val_all.sort(kind="stable")
+        shift = np.searchsorted(new_vals, val_u)  # old rank → new rank offset
+        a_ranks = vam[(acoo.data - 1).astype(np.int64)]
+        b_ranks = vbm[(bcoo.data - 1).astype(np.int64)]
+        a_ranks = a_ranks + shift[a_ranks]
+        b_ranks = b_ranks + shift[b_ranks]
+        m_ranks = np.searchsorted(val_all, merged)
+        rows = np.concatenate([ar[only_a], br[only_b], ar[ia][mkeep]])
+        cols = np.concatenate([ac[only_a], bc[only_b], ac[ia][mkeep]])
+        data = np.concatenate([a_ranks[only_a], b_ranks[only_b],
+                               m_ranks]).astype(np.float64) + 1.0
+        adj = sp.coo_matrix((data, (rows, cols)),
+                            shape=(len(row_u), len(col_u)))
+        out = Assoc._from_parts(row_u, col_u, val_all, adj)
+        out.condense()
+        return out
 
     def min(self, other: "Assoc") -> "Assoc":
-        return self.combine(other, min)
+        return self.combine(other, "min")
 
     def max(self, other: "Assoc") -> "Assoc":
-        return self.combine(other, max)
+        return self.combine(other, "max")
 
     def __sub__(self, other: "Assoc") -> "Assoc":
         if not (self.numeric and other.numeric):
@@ -369,6 +453,35 @@ class Assoc:
         # string * string: intersection with ⊗ = min (default aggregator)
         return self._mul_string(other)
 
+    def mul(self, other: "Assoc", semiring=PLUS_TIMES) -> "Assoc":
+        """Element-wise ⊗ over the intersection of key sets, semiring-generic.
+
+        Default ``(+,×)`` is exactly ``self * other``.  Other semirings run
+        as a rank-based sorted intersection of (row, col) pair codes with ⊗
+        applied across each matched pair.
+        """
+        sr = get_semiring(semiring)
+        if not isinstance(other, Assoc):
+            raise TypeError("Assoc.mul expects an Assoc")
+        if sr.name == "plus_times":
+            return self * other
+        if not (self.numeric and other.numeric):
+            raise TypeError("semiring algebra requires numeric arrays")
+        if self.nnz() == 0 or other.nnz() == 0:
+            return Assoc()
+        rec = self._union_recode(other)
+        if rec is None:
+            return Assoc()
+        row_u, col_u, (ar, ac, acoo), (br, bc, bcoo) = rec
+        ia, ib = intersect_pairs_np(linearize_pairs_np(ar, ac, len(col_u)),
+                                    linearize_pairs_np(br, bc, len(col_u)))
+        if len(ia) == 0:
+            return Assoc()
+        v = sr.mul_np(acoo.data[ia], bcoo.data[ib])
+        keep = v != sr.zero
+        return Assoc._assemble(row_u, col_u, ar[ia][keep], ac[ia][keep],
+                               v[keep])
+
     def _mul_numeric(self, other: "Assoc") -> "Assoc":
         row_int, ia, ib = sorted_intersect(self.row, other.row)
         col_int, ja, jb = sorted_intersect(self.col, other.col)
@@ -380,27 +493,73 @@ class Assoc:
         out._drop_zeros_and_condense()
         return out
 
+    def _union_recode(self, other: "Assoc"):
+        """Re-rank both operands' COO codes onto union key spaces.
+
+        Both arrays are canonical, so ``adj`` codes are already ranks into
+        their sorted key arrays; one ``sorted_union`` per axis plus a gather
+        re-ranks every triple without touching the (possibly string) keys
+        again.  Returns ``(row_u, col_u, (ar, ac, acoo), (br, bc, bcoo))``
+        or None when the key kinds cannot intersect.
+        """
+        if (_is_str_kind(self.row) != _is_str_kind(other.row)
+                or _is_str_kind(self.col) != _is_str_kind(other.col)):
+            return None
+        row_u, ram, rbm = sorted_union(self.row, other.row)
+        col_u, cam, cbm = sorted_union(self.col, other.col)
+        acoo = self.adj.tocoo()
+        bcoo = other.adj.tocoo()
+        return (row_u, col_u,
+                (ram[acoo.row], cam[acoo.col], acoo),
+                (rbm[bcoo.row], cbm[bcoo.col], bcoo))
+
+    def _pair_intersect(self, other: "Assoc"):
+        """Rank-based sorted intersection of both arrays' (row, col) sets.
+
+        Returns ``(ia, ib)`` positions into the two COO entry lists (or
+        None when empty/kind-mismatched) — the vectorized replacement for
+        per-element dictionary probing in mask/string multiplication.
+        """
+        if self.nnz() == 0 or other.nnz() == 0:
+            return None
+        rec = self._union_recode(other)
+        if rec is None:
+            return None
+        _, col_u, (ar, ac, _), (br, bc, _) = rec
+        return intersect_pairs_np(linearize_pairs_np(ar, ac, len(col_u)),
+                                  linearize_pairs_np(br, bc, len(col_u)))
+
     def _mask_by(self, mask: "Assoc") -> "Assoc":
         """Restrict a string array to the support of a numeric mask."""
-        rm, cm, _ = mask.triples()
-        keys_mask = set(zip(rm.tolist(), cm.tolist()))
-        r, c, v = self.triples()
-        keep = np.fromiter(
-            ((ri, ci) in keys_mask for ri, ci in zip(r.tolist(), c.tolist())),
-            dtype=bool, count=len(r))
-        return Assoc(r[keep], c[keep], v[keep])
+        hit = self._pair_intersect(mask)
+        if hit is None:
+            return Assoc()
+        ia, _ = hit
+        # the result is a sub-array of self: same key/value spaces, subset
+        # of adj entries — no re-canonicalization needed
+        coo = self.adj.tocoo()
+        sub = sp.coo_matrix((coo.data[ia], (coo.row[ia], coo.col[ia])),
+                            shape=self.adj.shape)
+        out = Assoc._from_parts(
+            self.row.copy(), self.col.copy(),
+            self.val if self.numeric else self.val.copy(), sub)
+        out.condense()
+        return out
 
     def _mul_string(self, other: "Assoc") -> "Assoc":
-        r1, c1, v1 = self.triples()
-        r2, c2, v2 = other.triples()
-        d2 = {(ri, ci): vi for ri, ci, vi in zip(r2.tolist(), c2.tolist(), v2.tolist())}
-        rows, cols, vals = [], [], []
-        for ri, ci, vi in zip(r1.tolist(), c1.tolist(), v1.tolist()):
-            if (ri, ci) in d2:
-                rows.append(ri)
-                cols.append(ci)
-                vals.append(min(vi, d2[(ri, ci)]))
-        return Assoc(rows, cols, vals)
+        """String ⊗ string: pair intersection with ⊗ = min (dict order)."""
+        hit = self._pair_intersect(other)
+        if hit is None:
+            return Assoc()
+        ia, ib = hit
+        coo_a = self.adj.tocoo()
+        coo_b = other.adj.tocoo()
+        # decode values only for the matched pairs (the intersection is
+        # typically far smaller than either operand), ⊗ = dictionary min
+        va = self.val[(coo_a.data[ia] - 1).astype(np.int64)]
+        vb = other.val[(coo_b.data[ib] - 1).astype(np.int64)]
+        return Assoc(self.row[coo_a.row[ia]], self.col[coo_a.col[ia]],
+                     np.where(va <= vb, va, vb))
 
     # ------------------------------------------------------------------ #
     # array multiplication (paper §II.C.3)                               #
@@ -420,13 +579,49 @@ class Assoc:
         out._drop_zeros_and_condense()
         return out
 
-    def sqin(self) -> "Assoc":
-        """AᵀA — the paper's correlation idiom (column-key graph)."""
-        return self.transpose() @ self
+    def matmul(self, other: "Assoc", semiring=PLUS_TIMES) -> "Assoc":
+        """Array multiplication ``⊗.⊕`` contracting over ``A.col ∩ B.row``.
 
-    def sqout(self) -> "Assoc":
+        Default ``(+,×)`` is exactly ``self @ other`` (native CSR matmul).
+        Other semirings contract through the canonical COO core's
+        vectorized sort-merge join (``spgemm_np``) with ⊗ on matched pairs
+        and a single ⊕-canonicalize of the expanded products.
+        """
+        sr = get_semiring(semiring)
+        if not isinstance(other, Assoc):
+            raise TypeError("Assoc.matmul expects an Assoc")
+        if sr.name == "plus_times":
+            return self @ other
+        a = self.logical() if not self.numeric else self
+        b = other.logical() if not other.numeric else other
+        inner, ia, ib = sorted_intersect(a.col, b.row)
+        if len(inner) == 0:
+            return Assoc()
+        acoo = a.adj.tocoo()
+        bcoo = b.adj.tocoo()
+        # restrict both operands to the contraction key set, re-coded 0..k-1
+        amap = np.full(len(a.col), -1, dtype=np.int64)
+        amap[ia] = np.arange(len(inner))
+        bmap = np.full(len(b.row), -1, dtype=np.int64)
+        bmap[ib] = np.arange(len(inner))
+        ak, bk = amap[acoo.col], bmap[bcoo.row]
+        am, bm = ak >= 0, bk >= 0
+        a_row, a_k, a_val = acoo.row[am], ak[am], acoo.data[am]
+        b_k, b_col, b_val = bk[bm], bcoo.col[bm], bcoo.data[bm]
+        order = np.lexsort((b_col, b_k))  # join requires b grouped by k
+        r, c, v = spgemm_np(a_row, a_k, a_val,
+                            b_k[order], b_col[order], b_val[order],
+                            sr.mul_np, sr.add_np)
+        keep = v != sr.zero
+        return Assoc._assemble(a.row, b.col, r[keep], c[keep], v[keep])
+
+    def sqin(self, semiring=PLUS_TIMES) -> "Assoc":
+        """AᵀA — the paper's correlation idiom (column-key graph)."""
+        return self.transpose().matmul(self, semiring)
+
+    def sqout(self, semiring=PLUS_TIMES) -> "Assoc":
         """AAᵀ — row-key graph."""
-        return self @ self.transpose()
+        return self.matmul(self.transpose(), semiring)
 
     # ------------------------------------------------------------------ #
     # structural ops                                                     #
@@ -446,6 +641,23 @@ class Assoc:
             self.row.copy(), self.col.copy(),
             self.val if self.numeric else self.val.copy(),
             self.adj.copy())
+
+    def to_tensor(self, *, capacity: Optional[int] = None,
+                  row_space=None, col_space=None):
+        """Upload to the device :class:`~repro.core.assoc_tensor.AssocTensor`.
+
+        Inverse of ``AssocTensor.to_assoc()``: the round trip is lossless
+        for string values (rank pointer scheme) and for numeric values
+        representable in float32 — EXCEPT explicit ``0.0`` entries (as
+        produced by non-(+,×) semiring algebra, e.g. a zero-cost
+        ``min_plus`` path), which the device's 0-is-empty storage drops.
+        Pass explicit keyspaces to align the result with other device
+        arrays without a re-rank.
+        """
+        from .assoc_tensor import AssocTensor
+        return AssocTensor.from_assoc(self, capacity,
+                                      row_space=row_space,
+                                      col_space=col_space)
 
     def sum(self, axis: Optional[int] = None):
         a = self if self.numeric else self.logical()
@@ -478,8 +690,9 @@ class Assoc:
                 return np.arange(lo_i, hi_i)
             sel = parts
         arr = np.asarray(sel)
-        if arr.dtype.kind in "iu" and not isinstance(sel, np.ndarray):
-            arr = arr  # lists of ints are positional too (paper rule 2)
+        if arr.dtype.kind in "iu":
+            # integer selectors are POSITIONS (paper rule 2) — uniformly,
+            # whether given as a python list or a numpy array
             return arr.ravel()
         if _is_str_kind(arr):
             pos = np.searchsorted(keys.astype(str), arr.astype(str))
@@ -508,7 +721,9 @@ class Assoc:
     def __setitem__(self, ij, value):
         i, j = ij
         if isinstance(value, Assoc):
-            merged = self.combine(value, lambda a, b: b) if self.nnz() else value.copy()
+            # "last" wins: one canonicalize pass with the assigned triples
+            # appended after self's (stable sort keeps them last in each run)
+            merged = self.combine(value, "last") if self.nnz() else value.copy()
             self.row, self.col = merged.row, merged.col
             self.val, self.adj = merged.val, merged.adj
             return
@@ -548,17 +763,31 @@ class Assoc:
         return "\n".join(lines)
 
     def printfull(self) -> str:
-        """Tabular rendering like the paper's Fig. 1."""
-        d = self.to_dict()
+        """Tabular rendering like the paper's Fig. 1.
+
+        Per-column widths come from a single scatter-max pass over the
+        nonempty triples (linear in nnz + columns, robust to single-row and
+        empty arrays).
+        """
+        rows = [str(x) for x in self.row.tolist()]
         cols = [str(x) for x in self.col.tolist()]
-        widths = {c: max(len(c), *(len(str(d.get((r, rc), ""))) for r, rc in
-                  ((rr, cc) for rr in self.row.tolist() for cc in [c2 for c2 in self.col.tolist() if str(c2) == c])))
-                  for c in cols} if len(self.row) else {c: len(c) for c in cols}
-        rw = max((len(str(r)) for r in self.row.tolist()), default=0)
-        out = [" " * rw + "  " + "  ".join(c.ljust(widths[c]) for c in cols)]
-        for r in self.row.tolist():
-            cells = [str(d.get((r, c), "")).ljust(widths[str(c)]) for c in self.col.tolist()]
-            out.append(str(r).ljust(rw) + "  " + "  ".join(cells))
+        coo = self.adj.tocoo()
+        _, _, vals = self.triples()
+        cells = np.asarray([str(x) for x in vals.tolist()], dtype=object)
+        widths = np.asarray([len(c) for c in cols], dtype=np.int64)
+        if len(cells) and len(widths):
+            np.maximum.at(widths, coo.col,
+                          np.asarray([len(s) for s in cells], dtype=np.int64))
+        grid = np.full((len(rows), len(cols)), "", dtype=object)
+        if len(cells):
+            grid[coo.row, coo.col] = cells
+        rw = max((len(r) for r in rows), default=0)
+        out = [" " * rw + "  "
+               + "  ".join(c.ljust(int(w)) for c, w in zip(cols, widths))]
+        for i, rl in enumerate(rows):
+            body = "  ".join(str(grid[i, j]).ljust(int(widths[j]))
+                             for j in range(len(cols)))
+            out.append(rl.ljust(rw) + "  " + body)
         s = "\n".join(out)
         print(s)
         return s

@@ -31,114 +31,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from .assoc import Assoc
+from .coo import SENT, dedup_sorted_coo
 from .keyspace import KeySpace
 from .semiring import PLUS_TIMES, Semiring, get_semiring
 from .sorted_ops import INT_SENTINEL
 
+# ``dedup_sorted_coo`` — the canonical COO merge shared with the host Assoc —
+# lives in repro.core.coo; re-exported here for backward compatibility.
 __all__ = ["AssocTensor", "dedup_sorted_coo"]
-
-SENT = jnp.int32(INT_SENTINEL)
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
-
-
-# ---------------------------------------------------------------------------
-# The core device primitive: sort + duplicate-run aggregation.
-#
-# Given COO triples (possibly with duplicates and sentinel padding), produce
-# the canonical form: lexicographically sorted by (row, col), duplicates
-# merged with ⊕, valid entries compacted to the front, tail sentinel-padded.
-# This one primitive implements the paper's constructor aggregation AND both
-# element-wise ops (union-with-⊕ and run-length-2 intersection-with-⊗).
-# ---------------------------------------------------------------------------
-
-def dedup_sorted_coo(rows, cols, vals, combine, *, zero: float = 0.0,
-                     require_pair: bool = False, pair_op=None,
-                     src: Optional[jnp.ndarray] = None):
-    """Canonicalize COO triples on device.
-
-    Parameters
-    ----------
-    rows, cols: int32[cap] rank arrays; sentinel-padded entries are dropped.
-    vals:       float[cap] values.
-    combine:    ⊕ used to merge duplicate (row, col) runs (semiring add or an
-                aggregation op).  Must be associative & commutative.
-    require_pair: if True, keep ONLY entries forming a cross-source duplicate
-                pair (element-wise intersection); ``src`` flags the source
-                array (0/1) and ``pair_op`` is the ⊗ applied across the pair.
-    Returns (rows, cols, vals, nnz) in canonical sorted/padded form.
-    """
-    cap = rows.shape[0]
-    valid = rows != SENT
-    # lexsort by (row, col); sentinels sort last because SENT is max int32
-    order = jnp.lexsort((cols, rows))
-    r, c, v = rows[order], cols[order], vals[order]
-    ok = valid[order]
-    if src is not None:
-        s = src[order]
-
-    same_as_prev = jnp.concatenate([
-        jnp.array([False]),
-        (r[1:] == r[:-1]) & (c[1:] == c[:-1]) & ok[1:],
-    ])
-
-    if require_pair:
-        # intersection: inputs are individually dedup'd, so runs have length
-        # ≤ 2 and a pair always spans both sources.
-        same_as_next = jnp.concatenate([same_as_prev[1:], jnp.array([False])])
-        is_pair_head = same_as_next
-        nxt = jnp.clip(jnp.arange(cap) + 1, 0, cap - 1)
-        a_val = jnp.where(s == 0, v, v[nxt])   # value from source 0
-        b_val = jnp.where(s == 0, v[nxt], v)   # value from source 1
-        out_v = pair_op(a_val, b_val)
-        keep = is_pair_head & ok
-        r = jnp.where(keep, r, SENT)
-        c = jnp.where(keep, c, SENT)
-        v = jnp.where(keep, out_v, zero)
-    else:
-        # union/aggregate: segment-combine runs onto the run head.
-        # Runs are short in practice (2 sources ⇒ ≤2; constructor ⇒ small),
-        # but we handle arbitrary lengths with a log-step doubling scan.
-        seg_id = jnp.cumsum((~same_as_prev).astype(jnp.int32)) - 1
-        # segment-reduce via sort-order associativity: combine progressively
-        step = 1
-        acc = v
-        alive = ok
-        while step < cap:
-            shifted = jnp.roll(acc, step)
-            shifted_seg = jnp.roll(seg_id, step)
-            shifted_alive = jnp.roll(alive, step)
-            same_seg = (shifted_seg == seg_id) & (jnp.arange(cap) >= step)
-            contrib = same_seg & shifted_alive & alive
-            acc = jnp.where(contrib, combine(acc, shifted), acc)
-            step *= 2
-        # run tail now holds the full combine; move it to the head via the
-        # trick of flipping: easier — recompute head as combine over run by
-        # taking the value at the run's LAST element.
-        is_head = ~same_as_prev & ok
-        run_last = jnp.concatenate([(~same_as_prev[1:]), jnp.array([True])])
-        # index of last element of the run each head starts
-        head_pos = jnp.flatnonzero(is_head, size=cap, fill_value=cap - 1)
-        last_pos = jnp.flatnonzero(run_last & ok, size=cap, fill_value=cap - 1)
-        v_heads = acc[last_pos]
-        r = jnp.where(is_head, r, SENT)
-        c = jnp.where(is_head, c, SENT)
-        v = jnp.zeros_like(v).at[head_pos].set(v_heads)
-        v = jnp.where(is_head, v, zero)
-
-    # drop zeros ("empty" values are unstored, matching the paper)
-    nonzero = v != zero
-    keepmask = (r != SENT) & nonzero
-    r = jnp.where(keepmask, r, SENT)
-    c = jnp.where(keepmask, c, SENT)
-    v = jnp.where(keepmask, v, zero)
-    # compact to front: stable sort on validity
-    order2 = jnp.lexsort((c, r))  # sentinels (SENT) go last; order preserved
-    r, c, v = r[order2], c[order2], v[order2]
-    nnz = (r != SENT).sum().astype(jnp.int32)
-    return r, c, v, nnz
 
 
 @jax.tree_util.register_pytree_node_class
@@ -214,9 +118,16 @@ class AssocTensor:
         return AssocTensor(rows, cols, vals, nnz, row_space, col_space, val_space)
 
     @staticmethod
-    def from_assoc(a: Assoc, capacity: Optional[int] = None) -> "AssocTensor":
+    def from_assoc(a: Assoc, capacity: Optional[int] = None, *,
+                   row_space: Optional[KeySpace] = None,
+                   col_space: Optional[KeySpace] = None) -> "AssocTensor":
+        """Upload a host Assoc; inverse of :meth:`to_assoc` (lossless for
+        string values and f32-representable numeric values; explicit 0.0
+        entries are dropped — the device stores 0 as empty)."""
         r, c, v = a.triples()
-        return AssocTensor.from_triples(r, c, v, capacity=capacity)
+        return AssocTensor.from_triples(r, c, v, capacity=capacity,
+                                        row_space=row_space,
+                                        col_space=col_space)
 
     def to_assoc(self) -> Assoc:
         """Download to the host paper-faithful representation."""
@@ -416,7 +327,7 @@ class AssocTensor:
             return vec.at[jnp.where(ok, self.rows, nr)].add(
                 jnp.where(ok, self.vals, 0.0), mode="drop")
         vec = jnp.full((nr,), sr.zero, self.vals.dtype)
-        if sr.name in ("max_plus", "max_min", "max_times"):
+        if sr.name in ("max_plus", "max_min", "max_times", "and_or"):
             return vec.at[jnp.where(ok, self.rows, nr)].max(
                 jnp.where(ok, self.vals, sr.zero), mode="drop")
         return vec.at[jnp.where(ok, self.rows, nr)].min(

@@ -29,9 +29,13 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .assoc_tensor import SENT, AssocTensor, dedup_sorted_coo
+from .assoc_tensor import AssocTensor
+from .coo import SENT, dedup_sorted_coo
 from .keyspace import KeySpace
 from .semiring import PLUS_TIMES, get_semiring
+
+# semirings whose ⊕ is max (vs min) — picks the scatter/collective pair
+_MAX_LIKE = ("max_plus", "max_min", "max_times", "and_or")
 
 __all__ = ["DistAssoc"]
 
@@ -79,6 +83,15 @@ class DistAssoc:
                 x, NamedSharding(mesh, P(*( ("data",) + (None,) * (x.ndim - 1))))),
             stacked)
         return DistAssoc(sharded, mesh, row_bounds=bounds)
+
+    @staticmethod
+    def from_assoc(a, mesh: Mesh, *, aggregate="min",
+                   capacity_per_shard: Optional[int] = None) -> "DistAssoc":
+        """Shard a host Assoc over the mesh (host ⇄ device ⇄ dist pipeline)."""
+        r, c, v = a.triples()
+        return DistAssoc.from_triples(
+            r, c, v, mesh, aggregate=aggregate,
+            capacity_per_shard=capacity_per_shard)
 
     # -- conversions -----------------------------------------------------------
     def to_assoc(self):
@@ -157,15 +170,19 @@ class DistAssoc:
                  out_specs=P(), check_rep=False)
         def go(cols, vals, rows):
             ok = rows[0] != SENT
-            vec = jnp.zeros((nc,), jnp.float32)
             if sr.name == "plus_times":
+                vec = jnp.zeros((nc,), jnp.float32)
                 vec = vec.at[jnp.where(ok, cols[0], nc)].add(
                     jnp.where(ok, vals[0], 0.0), mode="drop")
                 return jax.lax.psum(vec, "data")
             vec = jnp.full((nc,), sr.zero, jnp.float32)
-            vec = vec.at[jnp.where(ok, cols[0], nc)].max(
+            if sr.name in _MAX_LIKE:
+                vec = vec.at[jnp.where(ok, cols[0], nc)].max(
+                    jnp.where(ok, vals[0], sr.zero), mode="drop")
+                return jax.lax.pmax(vec, "data")
+            vec = vec.at[jnp.where(ok, cols[0], nc)].min(
                 jnp.where(ok, vals[0], sr.zero), mode="drop")
-            return jax.lax.pmax(vec, "data")
+            return jax.lax.pmin(vec, "data")
 
         return go(self.local.cols, self.local.vals, self.local.rows)
 
@@ -192,8 +209,12 @@ class DistAssoc:
                     jnp.where(ok, rows[0], nr)].add(
                     jnp.where(ok, contrib, 0.0), mode="drop")
                 return jax.lax.psum(y, "data")
-            y = y.at[jnp.where(ok, rows[0], nr)].max(
+            if sr.name in _MAX_LIKE:
+                y = y.at[jnp.where(ok, rows[0], nr)].max(
+                    jnp.where(ok, contrib, sr.zero), mode="drop")
+                return jax.lax.pmax(y, "data")
+            y = y.at[jnp.where(ok, rows[0], nr)].min(
                 jnp.where(ok, contrib, sr.zero), mode="drop")
-            return jax.lax.pmax(y, "data")
+            return jax.lax.pmin(y, "data")
 
         return go(self.local.rows, self.local.cols, self.local.vals, x)

@@ -50,6 +50,11 @@ class Semiring:
     one:        identity of ⊗ (python float).
     add_reduce: jnp reduction implementing ⊕ along an axis (used by matmul
                 contractions and aggregation).
+    add_np:     numpy ufunc mirror of ⊕ — the host ``Assoc`` routes its
+                semiring-generic algebra (and the canonical COO merge's
+                ``reduceat`` fast path) through this, keeping host code off
+                the device entirely.
+    mul_np:     numpy ufunc mirror of ⊗.
     mxu:        True iff the contraction can be lowered to a plain matmul on
                 the MXU (only the plus-times algebra qualifies).
     idempotent_add: True iff ``a ⊕ a == a`` (max/min-style algebras); such
@@ -62,15 +67,17 @@ class Semiring:
     zero: float
     one: float
     add_reduce: Callable[..., Any]
+    add_np: Callable[[Any, Any], Any] = np.add
+    mul_np: Callable[[Any, Any], Any] = np.multiply
     mxu: bool = False
     idempotent_add: bool = False
 
     # ---- host/scalar views (numpy-friendly; used by host Assoc + tests) ----
     def add_py(self, a, b):
-        return np.asarray(self.add(np.asarray(a), np.asarray(b)))[()]
+        return np.asarray(self.add_np(np.asarray(a), np.asarray(b)))[()]
 
     def mul_py(self, a, b):
-        return np.asarray(self.mul(np.asarray(a), np.asarray(b)))[()]
+        return np.asarray(self.mul_np(np.asarray(a), np.asarray(b)))[()]
 
     def matmul_dense(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
         """Reference dense semiring contraction ``C[i,j] = ⊕_k a[i,k] ⊗ b[k,j]``.
@@ -90,26 +97,36 @@ class Semiring:
         return x == self.zero
 
 
-def _mk(name, add, mul, zero, one, add_reduce, mxu=False, idem=False) -> Semiring:
+def _mk(name, add, mul, zero, one, add_reduce, add_np, mul_np,
+        mxu=False, idem=False) -> Semiring:
     return Semiring(
         name=name, add=add, mul=mul, zero=zero, one=one,
-        add_reduce=add_reduce, mxu=mxu, idempotent_add=idem,
+        add_reduce=add_reduce, add_np=add_np, mul_np=mul_np,
+        mxu=mxu, idempotent_add=idem,
     )
 
 
 PLUS_TIMES = _mk(
-    "plus_times", jnp.add, jnp.multiply, 0.0, 1.0, jnp.sum, mxu=True)
+    "plus_times", jnp.add, jnp.multiply, 0.0, 1.0, jnp.sum,
+    np.add, np.multiply, mxu=True)
 MAX_PLUS = _mk(
-    "max_plus", jnp.maximum, jnp.add, -jnp.inf, 0.0, jnp.max, idem=True)
+    "max_plus", jnp.maximum, jnp.add, -jnp.inf, 0.0, jnp.max,
+    np.maximum, np.add, idem=True)
 MIN_PLUS = _mk(
-    "min_plus", jnp.minimum, jnp.add, jnp.inf, 0.0, jnp.min, idem=True)
+    "min_plus", jnp.minimum, jnp.add, jnp.inf, 0.0, jnp.min,
+    np.minimum, np.add, idem=True)
 MAX_MIN = _mk(
-    "max_min", jnp.maximum, jnp.minimum, -jnp.inf, jnp.inf, jnp.max, idem=True)
+    "max_min", jnp.maximum, jnp.minimum, -jnp.inf, jnp.inf, jnp.max,
+    np.maximum, np.minimum, idem=True)
 MAX_TIMES = _mk(
-    "max_times", jnp.maximum, jnp.multiply, 0.0, 1.0, jnp.max, idem=True)
-AND_OR = _mk(  # boolean algebra on {0., 1.}
-    "and_or", jnp.logical_or, jnp.logical_and, 0.0, 1.0,
-    lambda x, axis=None: jnp.any(x, axis=axis), idem=True)
+    "max_times", jnp.maximum, jnp.multiply, 0.0, 1.0, jnp.max,
+    np.maximum, np.multiply, idem=True)
+# Boolean algebra on {0., 1.}: on this domain ∨ ≡ max and ∧ ≡ min, and the
+# max/min forms stay in floating point so one code path (and one canonical
+# COO merge) serves every semiring on host and device alike.
+AND_OR = _mk(
+    "and_or", jnp.maximum, jnp.minimum, 0.0, 1.0, jnp.max,
+    np.maximum, np.minimum, idem=True)
 
 REGISTRY: Dict[str, Semiring] = {
     s.name: s

@@ -46,10 +46,18 @@ def sorted_union(i: np.ndarray, j: np.ndarray) -> Tuple[np.ndarray, np.ndarray, 
     Returns ``(k, i_map, j_map)`` where ``k`` is the sorted union and
     ``k[i_map] == i`` and ``k[j_map] == j`` elementwise (the paper's "how I
     and J sit within K").
+
+    The concatenation of two sorted runs is merged with a *stable* sort
+    (timsort gallops through presorted runs in ~O(n)) rather than
+    ``np.union1d``'s full introsort — noticeably cheaper for the string key
+    arrays the host ``Assoc`` unions on every element-wise op.
     """
     i = np.asarray(i)
     j = np.asarray(j)
-    k = np.union1d(i, j)  # sorted unique
+    k = np.concatenate([i, j])
+    k.sort(kind="stable")  # two presorted runs: timsort merge, ~O(n)
+    if len(k):
+        k = k[np.r_[True, k[1:] != k[:-1]]]
     i_map = np.searchsorted(k, i)
     j_map = np.searchsorted(k, j)
     return k, i_map, j_map

@@ -74,7 +74,7 @@ def bsr_spgemm_pallas(a: jnp.ndarray, block_mask: jnp.ndarray,
         functools.partial(_kernel, sr=sr, nk=nk),
         grid=(m // bm, n // bn, nk),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
         ],

@@ -92,7 +92,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["extra"] = ((extra + ";") if extra else "") + overrides
 
     t0 = time.time()
-    jax.set_mesh(mesh)
+    if hasattr(jax, "set_mesh"):  # newer jax; 0.4.x relies on `with mesh:`
+        jax.set_mesh(mesh)
     with mesh:
         jitted, args = S.build_jitted(cfg, shape, mesh, opts)
         lowered = jitted.lower(*args)

@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim: property tests skip cleanly when absent.
+
+The suite's property tests use ``hypothesis`` when it is installed; this
+module degrades gracefully when it is not, so the tier-1 suite still
+collects and runs everywhere.  Import ``given`` / ``st`` from here instead
+of from ``hypothesis`` directly:
+
+* with hypothesis installed — re-exports the real objects, unchanged;
+* without it — ``st`` becomes an inert strategy stub (any attribute access
+  or call chains to another stub) and ``@given(...)`` marks the test as
+  skipped with an explanatory reason.
+"""
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade: property tests skip, plain tests still run
+    HAVE_HYPOTHESIS = False
+    HealthCheck = None
+    settings = None
+
+    class _StrategyStub:
+        """Absorbs strategy construction chains (st.lists(st.text())...)."""
+
+        def __call__(self, *args, **kwargs):
+            return _StrategyStub()
+
+        def __getattr__(self, name):
+            return _StrategyStub()
+
+    strategies = _StrategyStub()
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed; property test skipped")(fn)
+        return decorate
+
+st = strategies

@@ -5,9 +5,14 @@ import os
 assert "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
     "tests must not inherit the dry-run's 512-device XLA_FLAGS"
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "ci", deadline=None, max_examples=25,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("ci")
+# hypothesis is optional: when missing, property tests skip (see
+# tests/_hypothesis_compat.py) and the rest of the suite runs normally.
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    pass
+else:
+    settings.register_profile(
+        "ci", deadline=None, max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+    settings.load_profile("ci")

@@ -1,7 +1,7 @@
 """Host Assoc vs a dict-of-dicts oracle (the paper's semantics, §II)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core import Assoc
 
@@ -122,6 +122,67 @@ def test_getitem_positional_ints():
     sub = a[0:2, [0, 1]]  # slices/ints are POSITIONS (paper §II.B rule 2)
     assert sub.get("a", "x") == 1.0 and sub.get("b", "y") == 2.0
     assert sub.get("c", "z") is None
+
+
+def test_getitem_int_selector_list_vs_ndarray_uniform():
+    """Positional rule applies to BOTH python lists and numpy int arrays."""
+    a = Assoc(["a", "b", "c"], ["x", "y", "z"], [1.0, 2.0, 3.0])
+    want = a[[0, 2], [0, 2]].to_dict()
+    got = a[np.array([0, 2]), np.array([0, 2])].to_dict()
+    assert got == want == {("a", "x"): 1.0, ("c", "z"): 3.0}
+    # numeric-KEYED array: float selectors are key lookups, int positional
+    b = Assoc([10.0, 20.0, 30.0], [1.0, 1.0, 1.0], [5.0, 6.0, 7.0])
+    assert b[np.array([20.0]), :].to_dict() == {(20.0, 1.0): 6.0}
+    assert b[np.array([1]), :].to_dict() == {(20.0, 1.0): 6.0}  # position 1
+
+
+def test_printfull_fig1_layout():
+    """The paper's Fig. 1 table: per-column widths from one scatter-max pass."""
+    row = ["0294.mp3"] * 3 + ["1829.mp3"] * 3 + ["7802.mp3"] * 3
+    col = ["artist", "duration", "genre"] * 3
+    val = ["Pink Floyd", "6:53", "rock", "Samuel Barber", "8:01",
+           "classical", "Taylor Swift", "10:12", "pop"]
+    s = Assoc(row, col, val).printfull()
+    lines = s.splitlines()
+    assert len(lines) == 4
+    # header: row-label gutter then column keys padded to column width
+    assert lines[0].startswith(" " * len("0294.mp3") + "  artist")
+    assert lines[1].split() == ["0294.mp3", "Pink", "Floyd", "6:53", "rock"]
+    assert lines[2].split() == ["1829.mp3", "Samuel", "Barber", "8:01",
+                                "classical"]
+    # columns align: every "genre"-column cell starts at the same offset
+    off = lines[0].index("genre")
+    assert lines[1][off:].startswith("rock")
+    assert lines[3][off:].startswith("pop")
+
+
+def test_printfull_single_row_and_empty():
+    one = Assoc(["r"], ["c"], [1.0]).printfull()
+    assert one.splitlines()[1].split() == ["r", "1.0"]
+    assert Assoc().printfull() == "  "  # header gutter only, no crash
+
+
+def test_setitem_assoc_value_overwrites():
+    a = Assoc(["r1", "r2"], ["c", "c"], [1.0, 2.0])
+    patch = Assoc(["r2", "r3"], ["c", "c"], [9.0, 3.0])
+    a[:, :] = patch
+    assert a.to_dict() == {("r1", "c"): 1.0, ("r2", "c"): 9.0,
+                           ("r3", "c"): 3.0}
+
+
+def test_host_semiring_algebra():
+    """sqin/graph idioms run under registry semirings on host (paper §I.A)."""
+    from repro.core import MAX_MIN, MIN_PLUS
+    # min_plus matmul = one relaxation step of shortest paths
+    e = Assoc(["a", "a", "b"], ["b", "c", "c"], [1.0, 5.0, 1.0])
+    two_hop = e.matmul(e, MIN_PLUS)
+    assert two_hop.get("a", "c") == 2.0       # a→b→c beats direct 5
+    # max_min sqin = bottleneck similarity on column keys
+    bn = e.sqin(MAX_MIN)
+    assert bn.get("b", "c") == 1.0
+    # element-wise min_plus add keeps the smaller entry
+    m = e.add(Assoc(["a"], ["b"], [0.5]), MIN_PLUS)
+    assert m.get("a", "b") == 0.5
 
 
 def test_setitem():

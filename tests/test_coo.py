@@ -1,0 +1,197 @@
+"""The canonical COO/semiring core: host backend, and host ⇄ device parity.
+
+Three contracts pinned here:
+
+1. ``canonicalize_np`` (lexsort + duplicate-run ⊕-merge + compaction) matches
+   a dict-of-dicts oracle for numeric and string values and every aggregator.
+2. Round trip: ``AssocTensor.from_assoc(A).to_assoc() == A`` for numeric and
+   string arrays (the host ⇄ device pipeline is lossless).
+3. Host ``Assoc.add/mul/matmul`` agree with device ``AssocTensor`` on ALL
+   registry semirings — one algebra, two backends.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (REGISTRY, Assoc, AssocTensor, canonicalize_np,
+                        intersect_pairs_np, spgemm_np)
+
+# ---------------------------------------------------------------------------
+# 1. canonicalize_np vs oracle
+# ---------------------------------------------------------------------------
+
+
+def _oracle(rows, cols, vals, combine):
+    d = {}
+    for r, c, v in zip(rows, cols, vals):
+        d[(r, c)] = combine(d[(r, c)], v) if (r, c) in d else v
+    return d
+
+
+def _as_dict(r, c, v):
+    return dict(zip(zip(r.tolist(), c.tolist()), v.tolist()))
+
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("agg,fn", [
+    ("min", min), ("max", max), ("sum", lambda a, b: a + b),
+    (min, min), (sum, lambda a, b: a + b),
+])
+def test_canonicalize_numeric(agg, fn):
+    rows = RNG.integers(0, 6, size=200)
+    cols = RNG.integers(0, 6, size=200)
+    vals = RNG.uniform(1, 9, size=200)
+    r, c, v = canonicalize_np(rows, cols, vals, combine=agg)
+    assert _as_dict(r, c, v) == pytest.approx(_oracle(rows, cols, vals, fn))
+    # canonical: sorted by (row, col), unique pairs
+    lin = r.astype(np.int64) * 6 + c
+    assert (np.diff(lin) > 0).all()
+
+
+@pytest.mark.parametrize("agg,fn", [
+    ("concat", lambda a, b: a + b),
+    ("min", min), ("max", max),
+    ("first", lambda a, b: a), ("last", lambda a, b: b),
+])
+def test_canonicalize_string(agg, fn):
+    rows = RNG.integers(0, 4, size=60)
+    cols = RNG.integers(0, 4, size=60)
+    vals = np.asarray(RNG.choice(list("abcdef"), size=60))
+    r, c, v = canonicalize_np(rows, cols, vals, combine=agg)
+    assert _as_dict(r, c, v) == _oracle(rows, cols, vals, fn)
+
+
+def test_canonicalize_python_callable_fallback():
+    rows = np.array([0, 0, 0, 1])
+    cols = np.array([0, 0, 0, 0])
+    vals = np.array([1.0, 2.0, 4.0, 8.0])
+    r, c, v = canonicalize_np(rows, cols, vals,
+                              combine=lambda a, b: a + 2 * b)
+    # left-fold in sorted (stable) order: (1 + 2·2) + 2·4 = 13
+    assert _as_dict(r, c, v) == {(0, 0): 13.0, (1, 0): 8.0}
+
+
+def test_canonicalize_empty():
+    r, c, v = canonicalize_np(np.empty(0, np.int64), np.empty(0, np.int64),
+                              np.empty(0))
+    assert len(r) == len(c) == len(v) == 0
+
+
+def test_intersect_pairs():
+    a = np.array([1, 5, 9, 40], np.int64)
+    b = np.array([2, 5, 40], np.int64)
+    ia, ib = intersect_pairs_np(a, b)
+    np.testing.assert_array_equal(a[ia], [5, 40])
+    np.testing.assert_array_equal(b[ib], [5, 40])
+
+
+def test_spgemm_matches_dense():
+    na, nb, nk = 5, 4, 6
+    A = np.where(RNG.uniform(size=(na, nk)) < 0.5, RNG.uniform(1, 9, (na, nk)), 0)
+    B = np.where(RNG.uniform(size=(nk, nb)) < 0.5, RNG.uniform(1, 9, (nk, nb)), 0)
+    ar, ak = np.nonzero(A)
+    bk, bc = np.nonzero(B)
+    r, c, v = spgemm_np(ar, ak, A[ar, ak], bk, bc, B[bk, bc],
+                        np.multiply, np.add)
+    got = np.zeros((na, nb))
+    got[r, c] = v
+    np.testing.assert_allclose(got, A @ B)
+
+
+# ---------------------------------------------------------------------------
+# 2. host ⇄ device round trip
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_numeric():
+    a = Assoc(["a", "b", "c", "a"], ["x", "y", "x", "y"],
+              [1.5, 2.0, -3.25, 4.0])
+    assert AssocTensor.from_assoc(a).to_assoc() == a
+    assert a.to_tensor().to_assoc() == a
+
+
+def test_roundtrip_string():
+    a = Assoc(["0294.mp3", "1829.mp3", "1829.mp3"],
+              ["artist", "artist", "genre"],
+              ["Pink Floyd", "Samuel Barber", "classical"])
+    assert AssocTensor.from_assoc(a).to_assoc() == a
+    assert a.to_tensor().to_assoc() == a
+
+
+def test_roundtrip_empty():
+    a = Assoc()
+    assert a.to_tensor().to_assoc() == a
+
+
+def test_roundtrip_random_numeric():
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        n = int(rng.integers(1, 40))
+        a = Assoc(rng.integers(0, 9, n).astype(str),
+                  rng.integers(0, 9, n).astype(str),
+                  rng.integers(1, 100, n).astype(np.float64))
+        assert a.to_tensor().to_assoc() == a
+
+
+# ---------------------------------------------------------------------------
+# 3. host vs device agreement on every registry semiring
+# ---------------------------------------------------------------------------
+
+
+def _random_pair(seed):
+    rng = np.random.default_rng(seed)
+    def one():
+        n = 20
+        return Assoc(rng.integers(0, 6, n).astype(str),
+                     rng.integers(0, 6, n).astype(str),
+                     rng.integers(1, 9, n).astype(np.float64),
+                     aggregate="min")
+    return one(), one()
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_add_host_device_agree(name):
+    sr = REGISTRY[name]
+    a, b = _random_pair(11)
+    host = a.add(b, sr).to_dict()
+    dev = a.to_tensor(capacity=64).add(b.to_tensor(capacity=64), sr) \
+           .to_assoc().to_dict()
+    assert dev == pytest.approx(host)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_mul_host_device_agree(name):
+    sr = REGISTRY[name]
+    a, b = _random_pair(13)
+    host = a.mul(b, sr).to_dict()
+    dev = a.to_tensor(capacity=64).mul(b.to_tensor(capacity=64), sr) \
+           .to_assoc().to_dict()
+    assert dev == pytest.approx(host)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_matmul_host_device_agree(name):
+    sr = REGISTRY[name]
+    a, b = _random_pair(17)
+    host = a.matmul(b, sr).to_dict()
+    dev = a.to_tensor(capacity=64) \
+           .matmul(b.to_tensor(capacity=64), sr, use_kernel=False) \
+           .to_assoc().to_dict()
+    assert dev == pytest.approx(host, rel=1e-5, abs=1e-5)
+
+
+def test_semiring_algebra_preserves_stored_zero():
+    """Under non-(+,×) semirings an explicit 0.0 is a legitimate stored
+    value (e.g. a zero-cost min_plus path) and must survive host algebra."""
+    e = Assoc(["a", "b"], ["b", "c"], [1.0, -1.0])
+    m = e.matmul(e, "min_plus")          # a→b→c costs 1 + (-1) = 0.0
+    assert m.get("a", "c") == 0.0
+    # survives a union ⊕-merge with a disjoint operand
+    out = m.add(Assoc(["z"], ["z"], [1.0]), "min_plus")
+    assert out.get("a", "c") == 0.0 and out.get("z", "z") == 1.0
+    # survives combine when the 0.0 entry is outside the fold intersection
+    patched = m.combine(Assoc(["q"], ["q"], [7.0]), "min")
+    assert patched.get("a", "c") == 0.0 and patched.get("q", "q") == 7.0
+    # documented limitation: the device's 0-is-empty storage drops it
+    assert m.to_tensor().to_assoc().get("a", "c") is None

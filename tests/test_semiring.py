@@ -1,7 +1,7 @@
 """Property tests: the registered semirings satisfy the §I.A axioms."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core import semiring as SR
 

@@ -1,7 +1,7 @@
 """Padded sorted-set primitives vs numpy ground truth."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core import (INT_SENTINEL, sorted_intersect, sorted_intersect_padded,
                         sorted_union, sorted_union_padded)
@@ -55,3 +55,32 @@ def test_host_union_intersect(i, j):
     if len(ki):
         np.testing.assert_array_equal(i[imap2], ki)
         np.testing.assert_array_equal(j[jmap2], ki)
+
+
+def test_host_union_intersect_deterministic():
+    """Plain (non-hypothesis) coverage of the host merge primitives."""
+    rng = np.random.default_rng(5)
+    for kind in ("int", "str"):
+        for _ in range(10):
+            i = np.unique(rng.integers(0, 40, rng.integers(0, 15)))
+            j = np.unique(rng.integers(0, 40, rng.integers(0, 15)))
+            if kind == "str":  # re-sort: "26" < "7" lexicographically
+                i, j = np.sort(i.astype(str)), np.sort(j.astype(str))
+            k, imap, jmap = sorted_union(i, j)
+            np.testing.assert_array_equal(k, np.union1d(i, j))
+            np.testing.assert_array_equal(k[imap], i)
+            np.testing.assert_array_equal(k[jmap], j)
+            ki, im2, jm2 = sorted_intersect(i, j)
+            np.testing.assert_array_equal(ki, np.intersect1d(i, j))
+            if len(ki):
+                np.testing.assert_array_equal(i[im2], ki)
+                np.testing.assert_array_equal(j[jm2], ki)
+
+
+def test_host_union_mixed_string_widths():
+    i = np.array(["ab", "zz"])
+    j = np.array(["abcd"])
+    k, imap, jmap = sorted_union(i, j)
+    assert k.tolist() == ["ab", "abcd", "zz"]  # widths promote, no truncation
+    np.testing.assert_array_equal(k[imap], i)
+    np.testing.assert_array_equal(k[jmap], j)
