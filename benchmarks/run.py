@@ -1,19 +1,24 @@
 """Benchmark entry point: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--no-device]
+                                            [--select-only] [--n-hi N]
 
 Prints ``name,us_per_call,derived`` CSV rows:
   * the paper's five benchmarks (Figs 3–7), host (paper-faithful) and
     device (TPU-native) implementations, n in [5, N];
+  * selector-query benches (explicit-list vs range vs StartsWith) on host
+    and device — also dumped to ``BENCH_select.json``;
   * roofline summary rows derived from the dry-run artifacts (if
     dryrun_results.jsonl exists): per-cell dominant-term seconds.
 
 ``--full`` extends n to the paper's full 18 (minutes of runtime);
-default stops at 12 to keep the harness fast.
+default stops at 12 to keep the harness fast.  ``--select-only`` runs just
+the selector benches (the CI kernel-regression smoke); ``--n-hi`` caps n.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -22,19 +27,31 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--no-device", action="store_true")
+    ap.add_argument("--select-only", action="store_true")
+    ap.add_argument("--n-hi", type=int, default=None)
+    ap.add_argument("--select-json", default="BENCH_select.json")
     ap.add_argument("--results", default="dryrun_results.jsonl")
     args = ap.parse_args()
 
-    from benchmarks.paper_benchmarks import run_all
+    from benchmarks.paper_benchmarks import run_all, run_select
 
-    n_hi = 18 if args.full else 12
+    n_hi = args.n_hi if args.n_hi is not None else (18 if args.full else 12)
     print("name,us_per_call,derived")
-    rows = run_all(5, n_hi, device=not args.no_device)
-    for r in rows:
-        name = f"{r['bench']}[{r['impl']},n={r['n']}]"
-        us = r["seconds"] * 1e6
-        derived = f"nnz={r['nnz']};ns_per_nnz={1e9 * r['seconds'] / r['nnz']:.1f}"
-        print(f"{name},{us:.1f},{derived}")
+
+    def emit(rows):
+        for r in rows:
+            name = f"{r['bench']}[{r['impl']},n={r['n']}]"
+            us = r["seconds"] * 1e6
+            derived = f"nnz={r['nnz']};ns_per_nnz={1e9 * r['seconds'] / r['nnz']:.1f}"
+            print(f"{name},{us:.1f},{derived}")
+
+    if not args.select_only:
+        emit(run_all(5, n_hi, device=not args.no_device))
+
+    select_rows = run_select(5, min(n_hi, 12), device=not args.no_device)
+    emit(select_rows)
+    with open(args.select_json, "w") as f:
+        json.dump(select_rows, f, indent=1)
 
     if os.path.exists(args.results):
         from benchmarks.roofline import load, table

@@ -13,7 +13,10 @@ from .assoc import Assoc
 from .assoc_tensor import AssocTensor
 from .coo import (aggregate_runs, canonicalize_np, dedup_sorted_coo,
                   intersect_pairs_np, linearize_pairs_np, spgemm_np)
+from .dist_assoc import DistAssoc
 from .keyspace import KeySpace
+from .select import (All, Keys, Mask, Match, Positions, Range, Selector,
+                     StartsWith, Where, as_selector, compile_selector)
 from .semiring import (AND_OR, MAX_MIN, MAX_PLUS, MAX_TIMES, MIN_PLUS,
                        PLUS_TIMES, REGISTRY, STRING, Semiring, get_semiring)
 from .sorted_ops import (INT_SENTINEL, sorted_intersect,
@@ -21,10 +24,13 @@ from .sorted_ops import (INT_SENTINEL, sorted_intersect,
                          sorted_union_padded)
 
 __all__ = [
-    "Assoc", "AssocTensor", "KeySpace", "Semiring", "get_semiring",
+    "Assoc", "AssocTensor", "DistAssoc", "KeySpace", "Semiring",
+    "get_semiring",
     "REGISTRY", "PLUS_TIMES", "MAX_PLUS", "MIN_PLUS", "MAX_MIN", "MAX_TIMES",
     "AND_OR", "STRING", "INT_SENTINEL", "sorted_union", "sorted_intersect",
     "sorted_union_padded", "sorted_intersect_padded",
     "aggregate_runs", "canonicalize_np", "dedup_sorted_coo",
     "intersect_pairs_np", "linearize_pairs_np", "spgemm_np",
+    "Selector", "Keys", "Range", "StartsWith", "Match", "Where", "Mask",
+    "Positions", "All", "as_selector", "compile_selector",
 ]

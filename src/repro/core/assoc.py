@@ -41,16 +41,15 @@ import scipy.sparse as sp
 
 from .coo import (apply_pair, canonicalize_np, intersect_pairs_np,
                   linearize_pairs_np, spgemm_np)
+from .keyspace import KeySpace
+from .select import (Selector, compile_selector, sanitize_keys,
+                     split_string_list)
 from .semiring import PLUS_TIMES, get_semiring
 from .sorted_ops import sorted_intersect, sorted_union
 
 __all__ = ["Assoc", "is_string_array"]
 
-KeyLike = Union[str, float, int, Sequence, np.ndarray, slice]
-
-# D4M string-list convention: a string whose final character is a separator
-# encodes a list, e.g. "a,b,c," == ["a","b","c"];  "a,:,b," is a range.
-_SEPARATORS = (",", ";", "\t", "|")
+KeyLike = Union[str, float, int, Sequence, np.ndarray, slice, Selector]
 
 
 def _is_str_kind(arr: np.ndarray) -> bool:
@@ -61,23 +60,8 @@ def is_string_array(arr: np.ndarray) -> bool:
     return _is_str_kind(np.asarray(arr))
 
 
-def _sanitize_keys(keys) -> np.ndarray:
-    """Coerce a key argument to a 1-D numpy array of str or float."""
-    if isinstance(keys, str):
-        keys = _split_string_list(keys)
-    arr = np.asarray(keys)
-    if arr.ndim == 0:
-        arr = arr.reshape(1)
-    if _is_str_kind(arr):
-        return arr.astype(str)
-    return arr.astype(np.float64)
-
-
-def _split_string_list(s: str):
-    if len(s) > 0 and s[-1] in _SEPARATORS:
-        sep = s[-1]
-        return [p for p in s.split(sep) if p != ""]
-    return [s]
+# the key-coercion rule is shared with selector parsing (select.Keys)
+_sanitize_keys = sanitize_keys
 
 
 def _broadcast(row, col, val):
@@ -669,41 +653,37 @@ class Assoc:
         return Assoc(a.row, ["sum"], m)  # row sums → column vector
 
     # ------------------------------------------------------------------ #
-    # extraction & assignment (paper §II.B)                              #
+    # extraction & assignment (paper §II.B) — via the selector algebra   #
     # ------------------------------------------------------------------ #
+    def _axis_space(self, keys: np.ndarray) -> KeySpace:
+        """Lazy per-axis KeySpace (row/col arrays are already sorted-unique).
+
+        Cached by array identity: mutation replaces ``self.row``/``self.col``
+        wholesale, so an ``is`` check detects staleness.  The KeySpace
+        content hash is what makes selector compilation cacheable across
+        repeated queries on the same key dictionary.
+        """
+        cache = getattr(self, "_space_cache", None)
+        if cache is None:
+            cache = self._space_cache = {}
+        slot = "row" if keys is self.row else "col"
+        hit = cache.get(slot)
+        if hit is not None and hit.keys is keys:
+            return hit
+        ks = KeySpace.from_sorted_unique(keys)
+        cache[slot] = ks
+        return ks
+
     def _resolve_keys(self, sel, keys: np.ndarray) -> np.ndarray:
-        """Resolve a selector to integer positions into ``keys``."""
-        n = len(keys)
-        if isinstance(sel, slice):          # positional (paper rule 2)
-            return np.arange(n)[sel]
-        if isinstance(sel, (int, np.integer)) and not isinstance(sel, bool):
-            return np.asarray([int(sel)])
-        if isinstance(sel, str):
-            if sel == ":":
-                return np.arange(n)
-            parts = _split_string_list(sel)
-            if len(parts) == 3 and parts[1] == ":":
-                lo, hi = parts[0], parts[2]
-                # right-INCLUSIVE string slice (paper rule 1)
-                lo_i = np.searchsorted(keys.astype(str), lo, side="left")
-                hi_i = np.searchsorted(keys.astype(str), hi, side="right")
-                return np.arange(lo_i, hi_i)
-            sel = parts
-        arr = np.asarray(sel)
-        if arr.dtype.kind in "iu":
-            # integer selectors are POSITIONS (paper rule 2) — uniformly,
-            # whether given as a python list or a numpy array
-            return arr.ravel()
-        if _is_str_kind(arr):
-            pos = np.searchsorted(keys.astype(str), arr.astype(str))
-            pos = np.clip(pos, 0, max(n - 1, 0))
-            hit = keys.astype(str)[pos] == arr.astype(str) if n else np.zeros(arr.shape, bool)
-            return pos[hit]
-        # numeric key membership
-        pos = np.searchsorted(keys, arr)
-        pos = np.clip(pos, 0, max(n - 1, 0))
-        hit = keys[pos] == arr if n else np.zeros(arr.shape, bool)
-        return pos[hit]
+        """Resolve any selector to sorted integer positions into ``keys``.
+
+        Accepts every D4M index form — explicit lists, positional
+        slices/ints, ``'a,:,b,'`` ranges — plus first-class
+        :class:`~repro.core.select.Selector` objects
+        (``StartsWith``/``Match``/``Where``/``Mask`` and ``&``/``|``/``~``
+        compositions), all through one cached compilation path.
+        """
+        return compile_selector(sel, self._axis_space(keys)).positions()
 
     def __getitem__(self, ij) -> "Assoc":
         i, j = ij
@@ -718,14 +698,52 @@ class Assoc:
         out.condense()
         return out
 
+    @staticmethod
+    def _is_selector_arg(sel) -> bool:
+        """Index forms that *select existing keys* (vs. name new ones).
+
+        Must agree with ``__getitem__``'s reading of the same argument:
+        2-tuples are inclusive ranges and bool arrays are masks on both
+        sides, so get/set never diverge.  Plain key lists (including
+        ``'a,b,'`` strings and numeric arrays) stay on the legacy
+        assignment path, which may introduce new keys.
+        """
+        if isinstance(sel, (Selector, slice)):
+            return True
+        if isinstance(sel, tuple) and len(sel) == 2:
+            return True
+        if isinstance(sel, str):
+            parts = split_string_list(sel)
+            return sel == ":" or (len(parts) == 3 and parts[1] == ":")
+        arr = np.asarray(sel)
+        return arr.ndim > 0 and arr.dtype.kind == "b"  # mask (list or array)
+
+    def _commit(self, merged: "Assoc") -> None:
+        """Adopt another Assoc's state (the single assignment commit step)."""
+        self.row, self.col = merged.row, merged.col
+        self.val, self.adj = merged.val, merged.adj
+
     def __setitem__(self, ij, value):
         i, j = ij
         if isinstance(value, Assoc):
             # "last" wins: one canonicalize pass with the assigned triples
             # appended after self's (stable sort keeps them last in each run)
-            merged = self.combine(value, "last") if self.nnz() else value.copy()
-            self.row, self.col = merged.row, merged.col
-            self.val, self.adj = merged.val, merged.adj
+            self._commit(self.combine(value, "last") if self.nnz()
+                         else value.copy())
+            return
+        if self._is_selector_arg(i) or self._is_selector_arg(j):
+            # selector-targeted fill: resolve each axis against the existing
+            # keys and assign the scalar over the selection's cross product
+            rk = (self.row[self._resolve_keys(i, self.row)]
+                  if self._is_selector_arg(i) else _sanitize_keys(i))
+            ck = (self.col[self._resolve_keys(j, self.col)]
+                  if self._is_selector_arg(j) else _sanitize_keys(j))
+            if len(rk) == 0 or len(ck) == 0:
+                return
+            rr, cc = np.meshgrid(rk, ck, indexing="ij")
+            patch = Assoc(rr.ravel(), cc.ravel(), np.full(rr.size, value))
+            self._commit(self.combine(patch, "last") if self.nnz()
+                         else patch.copy())
             return
         r, c, v = self.triples()
         rows = np.concatenate([r.astype(str) if _is_str_kind(r) else r,
@@ -733,9 +751,7 @@ class Assoc:
         cols = np.concatenate([c.astype(str) if _is_str_kind(c) else c,
                                _sanitize_keys(j)]) if len(c) else _sanitize_keys(j)
         vals = np.concatenate([v, np.asarray([value])]) if len(r) else np.asarray([value])
-        merged = Assoc(rows, cols, vals, aggregate="last")
-        self.row, self.col = merged.row, merged.col
-        self.val, self.adj = merged.val, merged.adj
+        self._commit(Assoc(rows, cols, vals, aggregate="last"))
 
     # ------------------------------------------------------------------ #
     # comparison / display                                               #
@@ -762,18 +778,28 @@ class Assoc:
             lines.append(f"  ({ri!r}, {ci!r}) : {vi!r}")
         return "\n".join(lines)
 
+    @staticmethod
+    def _labels(arr) -> list:
+        """Render keys/values for display: MATLAB ``num2str`` semantics for
+        numerics (``1`` not ``1.0``), plain ``str`` for strings."""
+        if is_string_array(arr):
+            return [str(x) for x in arr.tolist()]
+        return ["%.11g" % x for x in arr.tolist()]
+
     def printfull(self) -> str:
         """Tabular rendering like the paper's Fig. 1.
 
         Per-column widths come from a single scatter-max pass over the
         nonempty triples (linear in nnz + columns, robust to single-row and
-        empty arrays).
+        empty arrays).  Numeric arrays render exactly like string arrays —
+        left-justified cells, MATLAB ``num2str`` number formatting — so the
+        output matches the MATLAB D4M rendering for both value kinds.
         """
-        rows = [str(x) for x in self.row.tolist()]
-        cols = [str(x) for x in self.col.tolist()]
+        rows = self._labels(self.row)
+        cols = self._labels(self.col)
         coo = self.adj.tocoo()
         _, _, vals = self.triples()
-        cells = np.asarray([str(x) for x in vals.tolist()], dtype=object)
+        cells = np.asarray(self._labels(vals), dtype=object)
         widths = np.asarray([len(c) for c in cols], dtype=np.int64)
         if len(cells) and len(widths):
             np.maximum.at(widths, coo.col,

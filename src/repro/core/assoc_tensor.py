@@ -18,7 +18,8 @@ the TPU demands static shapes and bulk vector ops, so:
   block-sparse variant for large sparse operands.
 
 All methods are pure functions of array state (registered pytree) and safe
-under ``jax.jit`` / ``pjit``; keyspaces ride in the static aux.
+under ``jax.jit`` / ``pjit``; keyspaces ride in the static aux.  The one
+exception is the eager-only in-place ``__setitem__`` (see its docstring).
 """
 from __future__ import annotations
 
@@ -43,6 +44,38 @@ __all__ = ["AssocTensor", "dedup_sorted_coo"]
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+# -- selection primitives on raw COO rank arrays ------------------------------
+#
+# Shared by AssocTensor's methods AND DistAssoc's shard_map bodies (which
+# operate on raw per-shard arrays, not pytree objects): one implementation
+# of the keep mask and the sentinel-blank + lexsort compaction, so the
+# layers cannot drift apart.
+
+def coo_range_keep(rows: jnp.ndarray, cols: jnp.ndarray,
+                   bounds: jnp.ndarray) -> jnp.ndarray:
+    """Keep mask for a rank box — the Pallas range-mask kernel."""
+    from repro.kernels.range_extract import range_mask
+    return range_mask(rows, cols, bounds) != 0
+
+
+def coo_mask_keep(rows: jnp.ndarray, cols: jnp.ndarray,
+                  row_mask: jnp.ndarray, col_mask: jnp.ndarray) -> jnp.ndarray:
+    """Keep mask for keyspace membership masks (one gather each)."""
+    ok = rows != SENT
+    return (ok & row_mask[jnp.clip(rows, 0, row_mask.shape[0] - 1)]
+            & col_mask[jnp.clip(cols, 0, col_mask.shape[0] - 1)])
+
+
+def coo_compact(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+                keep: jnp.ndarray):
+    """Keep-masked triples → canonical sorted/sentinel-padded form."""
+    r = jnp.where(keep, rows, SENT)
+    c = jnp.where(keep, cols, SENT)
+    v = jnp.where(keep, vals, 0.0)
+    order = jnp.lexsort((c, r))
+    return r[order], c[order], v[order], keep.sum().astype(jnp.int32)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -285,36 +318,91 @@ class AssocTensor:
         return self.matmul(other)
 
     # -- extraction -------------------------------------------------------------
+    #
+    # All __getitem__ selection routes through the selector algebra
+    # (repro.core.select): the selector compiles once on host against the
+    # keyspaces, then executes on device against the padded COO triples —
+    # a contiguous rank box goes through the Pallas range-mask kernel, a
+    # general index set through one membership gather.  Selection never
+    # densifies.
+
+    def _compact(self, keep: jnp.ndarray) -> "AssocTensor":
+        """Keep-masked triples → canonical sorted/sentinel-padded form."""
+        r, c, v, nnz = coo_compact(self.rows, self.cols, self.vals, keep)
+        return AssocTensor(r, c, v, nnz,
+                           self.row_space, self.col_space, self.val_space)
+
+    def _range_keep(self, row_range: Tuple[int, int],
+                    col_range: Tuple[int, int]) -> jnp.ndarray:
+        """Keep mask for a rank box, via the shared Pallas range kernel."""
+        bounds = jnp.asarray([row_range[0], row_range[1],
+                              col_range[0], col_range[1]], dtype=jnp.int32)
+        return coo_range_keep(self.rows, self.cols, bounds)
+
+    def _mask_keep(self, row_mask: jnp.ndarray,
+                   col_mask: jnp.ndarray) -> jnp.ndarray:
+        """Keep mask for keyspace membership masks (one gather each)."""
+        return coo_mask_keep(self.rows, self.cols, row_mask, col_mask)
+
     def extract_ranges(self, row_range: Tuple[int, int],
                        col_range: Tuple[int, int]) -> "AssocTensor":
         """Sub-array by rank ranges (host resolves key slices → ranks)."""
-        ok = self.valid_mask()
-        keep = (ok & (self.rows >= row_range[0]) & (self.rows < row_range[1])
-                & (self.cols >= col_range[0]) & (self.cols < col_range[1]))
-        rows = jnp.where(keep, self.rows, SENT)
-        cols = jnp.where(keep, self.cols, SENT)
-        vals = jnp.where(keep, self.vals, 0.0)
-        order = jnp.lexsort((cols, rows))
-        return AssocTensor(rows[order], cols[order], vals[order],
-                           keep.sum().astype(jnp.int32),
-                           self.row_space, self.col_space, self.val_space)
+        return self._compact(self._range_keep(row_range, col_range))
 
-    def __getitem__(self, ij):
-        i, j = ij
-        rr = self._resolve(i, self.row_space)
-        cr = self._resolve(j, self.col_space)
-        return self.extract_ranges(rr, cr)
+    def extract_mask(self, row_mask: jnp.ndarray,
+                     col_mask: jnp.ndarray) -> "AssocTensor":
+        """Sub-array by keyspace membership masks (gather path, jit-safe).
 
-    @staticmethod
-    def _resolve(sel, space: KeySpace) -> Tuple[int, int]:
-        if sel == slice(None) or (isinstance(sel, str) and sel == ":"):
-            return (0, len(space))
-        if isinstance(sel, tuple) and len(sel) == 2:
-            return space.rank_range(sel[0], sel[1])
-        ranks, found = space.rank(np.asarray([sel]), strict=False)
-        if len(ranks) == 0:
-            return (0, 0)
-        return (int(ranks[0]), int(ranks[0]) + 1)
+        ``row_mask``/``col_mask`` are bool arrays over the row/col
+        keyspaces — the compiled form of a non-contiguous selector.
+        """
+        return self._compact(self._mask_keep(row_mask, col_mask))
+
+    def _compiled_pair(self, ij):
+        from .select import compile_selector
+        return (compile_selector(ij[0], self.row_space),
+                compile_selector(ij[1], self.col_space))
+
+    def _device_masks(self, rc, cc) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        rm = (np.ascontiguousarray(rc.mask()) if len(self.row_space)
+              else np.zeros(1, bool))
+        cm = (np.ascontiguousarray(cc.mask()) if len(self.col_space)
+              else np.zeros(1, bool))
+        return jnp.asarray(rm), jnp.asarray(cm)
+
+    def _selection_keep(self, ij) -> jnp.ndarray:
+        """Compile (row_sel, col_sel) and evaluate the device keep mask.
+
+        The single dispatch point between the range fast path and the
+        membership-gather path — both ``__getitem__`` and ``__setitem__``
+        go through here.
+        """
+        rc, cc = self._compiled_pair(ij)
+        if rc.is_range and cc.is_range:
+            return self._range_keep((rc.lo, rc.hi), (cc.lo, cc.hi))
+        return self._mask_keep(*self._device_masks(rc, cc))
+
+    def __getitem__(self, ij) -> "AssocTensor":
+        return self._compact(self._selection_keep(ij))
+
+    def __setitem__(self, ij, value) -> None:
+        """Selector-targeted value update (in place, numeric scalar).
+
+        Overwrites the values of *stored* entries inside the selection;
+        the support is unchanged (inserting new entries is a host-side
+        ``from_triples`` — the device layout is fixed-capacity).
+
+        Eager/host-driven only: this mutates the Python object, which is
+        the one exception to the module's pure-pytree contract — inside a
+        ``jax.jit`` trace use ``extract_*``/functional updates instead.
+        """
+        if (not isinstance(value, (int, float, np.integer, np.floating))
+                or isinstance(value, (bool, np.bool_))):
+            raise TypeError("device __setitem__ takes a numeric scalar")
+        if not self.numeric:
+            raise TypeError("device __setitem__ requires numeric values")
+        keep = self._selection_keep(ij)
+        self.vals = jnp.where(keep, jnp.float32(value), self.vals)
 
     # -- reductions ---------------------------------------------------------------
     def reduce_rows(self, semiring=PLUS_TIMES) -> jnp.ndarray:

@@ -105,13 +105,18 @@ class DistAssoc:
             merged = a if merged is None else merged + a if a.nnz() else merged
         return merged
 
-    # -- element-wise (alignment-free: row ranges are disjoint) -----------------
-    def _ewise(self, other: "DistAssoc", op: str, semiring) -> "DistAssoc":
-        sr = get_semiring(semiring)
+    def _local_spec(self):
+        """Per-shard COO dict + its shard_map PartitionSpec tree."""
         a_dict = {"rows": self.local.rows, "cols": self.local.cols,
                   "vals": self.local.vals, "nnz": self.local.nnz}
         spec = {k: P(*(("data",) + (None,) * (v.ndim - 1)))
                 for k, v in a_dict.items()}
+        return a_dict, spec
+
+    # -- element-wise (alignment-free: row ranges are disjoint) -----------------
+    def _ewise(self, other: "DistAssoc", op: str, semiring) -> "DistAssoc":
+        sr = get_semiring(semiring)
+        a_dict, spec = self._local_spec()
 
         @partial(shard_map, mesh=self.mesh,
                  in_specs=(spec, spec), out_specs=spec,
@@ -158,6 +163,56 @@ class DistAssoc:
 
     def mul(self, other, semiring=PLUS_TIMES):
         return self._ewise(other, "mul", semiring)
+
+    # -- selection (the D4M query surface, sharded) ------------------------------
+    def __getitem__(self, ij) -> "DistAssoc":
+        """D4M selection ``A[row_sel, col_sel]`` on a sharded array.
+
+        The selector compiles **once on host** against the (replicated)
+        keyspaces — every selector form the host ``Assoc`` takes works
+        here — then executes shard-locally with zero collectives: row
+        partitions are disjoint, so each shard masks and compacts its own
+        COO triples.  Contiguous rank boxes run the shared Pallas
+        range-mask kernel (``repro.kernels.range_extract``); general index
+        sets run one membership gather per shard.  Nothing densifies.
+        """
+        from .assoc_tensor import coo_compact, coo_mask_keep, coo_range_keep
+        from .select import compile_selector
+
+        rc = compile_selector(ij[0], self.local.row_space)
+        cc = compile_selector(ij[1], self.local.col_space)
+        as_range = rc.is_range and cc.is_range
+        if as_range:
+            row_arg = jnp.asarray([rc.lo, rc.hi, cc.lo, cc.hi], jnp.int32)
+            col_arg = jnp.zeros((1,), jnp.int32)  # unused placeholder
+        else:
+            nr = max(len(self.local.row_space), 1)
+            nc = max(len(self.local.col_space), 1)
+            row_arg = jnp.asarray(np.pad(rc.mask(), (0, nr - rc.n)))
+            col_arg = jnp.asarray(np.pad(cc.mask(), (0, nc - cc.n)))
+
+        a_dict, spec = self._local_spec()
+
+        @partial(shard_map, mesh=self.mesh,
+                 in_specs=(spec, P(), P()), out_specs=spec,
+                 check_rep=False)
+        def go(a, rsel, csel):
+            a0 = jax.tree.map(lambda x: x[0], a)
+            # same raw-array primitives as AssocTensor — layers cannot drift
+            if as_range:
+                keep = coo_range_keep(a0["rows"], a0["cols"], rsel)
+            else:
+                keep = coo_mask_keep(a0["rows"], a0["cols"], rsel, csel)
+            r, c, v, nnz = coo_compact(a0["rows"], a0["cols"], a0["vals"],
+                                       keep)
+            out = {"rows": r, "cols": c, "vals": v, "nnz": nnz}
+            return {k: x[None] for k, x in out.items()}
+
+        out = go(a_dict, row_arg, col_arg)
+        new_local = AssocTensor(out["rows"], out["cols"], out["vals"],
+                                out["nnz"], self.local.row_space,
+                                self.local.col_space, self.local.val_space)
+        return DistAssoc(new_local, self.mesh, row_bounds=self.row_bounds)
 
     # -- global reductions --------------------------------------------------------
     def col_reduce(self, semiring=PLUS_TIMES) -> jnp.ndarray:

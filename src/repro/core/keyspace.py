@@ -14,11 +14,29 @@ on host to a rank interval, executed on device as an integer mask.
 from __future__ import annotations
 
 import hashlib
+from collections import OrderedDict
 from typing import Optional, Tuple, Union
 
 import numpy as np
 
-__all__ = ["KeySpace"]
+__all__ = ["KeySpace", "UNION_STATS", "clear_union_cache"]
+
+# Memoized keyspace unions: keyspaces are immutable and content-hashed, so
+# (digest_a, digest_b) fully determines (merged, self_map, other_map).
+# Repeated ops on the same array pair — the common case in iterated algebra
+# and selector queries — skip the merge entirely (ROADMAP "amortize
+# keyspace unions").  LRU-evicted: entries pin full merged keyspaces, so
+# the bound must shed cold pairs without a clear-all cliff.
+_UNION_CACHE: "OrderedDict" = OrderedDict()
+_UNION_CACHE_CAP = 256
+
+UNION_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_union_cache() -> None:
+    _UNION_CACHE.clear()
+    UNION_STATS["hits"] = 0
+    UNION_STATS["misses"] = 0
 
 
 class KeySpace:
@@ -31,9 +49,31 @@ class KeySpace:
         else:
             arr = arr.astype(np.float64)
         self.keys = np.unique(arr)  # sorted unique
-        self._digest = hashlib.sha1(
-            self.keys.tobytes() if self.keys.dtype.kind != "U"
-            else "\x00".join(self.keys.tolist()).encode()).hexdigest()
+        self._digest = self._compute_digest(self.keys)
+
+    @staticmethod
+    def _compute_digest(keys: np.ndarray) -> str:
+        return hashlib.sha1(
+            keys.tobytes() if keys.dtype.kind != "U"
+            else "\x00".join(keys.tolist()).encode()).hexdigest()
+
+    @classmethod
+    def from_sorted_unique(cls, keys: np.ndarray) -> "KeySpace":
+        """Wrap an array that is already sorted-unique (skips ``np.unique``).
+
+        The array object is kept by reference, so callers (e.g. the host
+        ``Assoc``'s lazy per-axis keyspaces) can validate cache freshness
+        with an identity check.
+        """
+        ks = cls.__new__(cls)
+        ks.keys = keys
+        ks._digest = cls._compute_digest(keys)
+        return ks
+
+    @property
+    def digest(self) -> str:
+        """Content hash — the compilation-cache key for this keyspace."""
+        return self._digest
 
     # -- container protocol -------------------------------------------------
     def __len__(self) -> int:
@@ -100,9 +140,23 @@ class KeySpace:
             return self, eye, eye
         if self.is_string != other.is_string:
             raise TypeError("cannot merge string and numeric keyspaces")
+        cache_key = (self._digest, other._digest)
+        hit = _UNION_CACHE.get(cache_key)
+        if hit is not None:
+            UNION_STATS["hits"] += 1
+            _UNION_CACHE.move_to_end(cache_key)
+            return hit
+        UNION_STATS["misses"] += 1
         merged = KeySpace(np.concatenate([self.keys, other.keys]))
         self_map = np.searchsorted(merged.keys, self.keys).astype(np.int32)
         other_map = np.searchsorted(merged.keys, other.keys).astype(np.int32)
+        # cached tuples are shared across callers: freeze the maps so an
+        # in-place tweak cannot poison later unions of the same pair
+        self_map.setflags(write=False)
+        other_map.setflags(write=False)
+        while len(_UNION_CACHE) >= _UNION_CACHE_CAP:
+            _UNION_CACHE.popitem(last=False)
+        _UNION_CACHE[cache_key] = (merged, self_map, other_map)
         return merged, self_map, other_map
 
     @staticmethod

@@ -68,10 +68,18 @@ def sorted_intersect(i: np.ndarray, j: np.ndarray) -> Tuple[np.ndarray, np.ndarr
 
     Returns ``(k, i_map, j_map)`` with ``i[i_map] == k`` and ``j[j_map] == k``
     (the paper records how K sits within I and J).
+
+    Same timsort trick as :func:`sorted_union`: the concatenation of two
+    sorted repetition-free runs is merged with a *stable* sort (timsort
+    gallops through presorted runs in ~O(n)); an element appears twice in
+    the merge iff it lies in both inputs, so adjacent duplicates ARE the
+    intersection — no ``np.intersect1d`` re-sort.
     """
     i = np.asarray(i)
     j = np.asarray(j)
-    k = np.intersect1d(i, j, assume_unique=True)
+    k = np.concatenate([i, j])
+    k.sort(kind="stable")  # two presorted runs: timsort merge, ~O(n)
+    k = k[:-1][k[1:] == k[:-1]] if len(k) else k
     i_map = np.searchsorted(i, k)
     j_map = np.searchsorted(j, k)
     return k, i_map, j_map

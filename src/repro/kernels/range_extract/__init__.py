@@ -1,0 +1,3 @@
+from .ops import range_mask
+
+__all__ = ["range_mask"]

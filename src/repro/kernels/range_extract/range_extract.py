@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: COO selection masks for rank-range queries.
+
+Device selection must never densify: a D4M range query ``A['a,:,b,', :]``
+compiles on host to rank bounds and executes on device as a *mask over the
+padded COO triples* — four vector compares per entry, no scatter onto a
+dense adjacency.  This kernel tiles the (rows, cols) rank arrays through
+VMEM and emits the keep mask; the dynamic bounds ride in SMEM as a
+``(1, 4)`` scalar block (``row_lo, row_hi, col_lo, col_hi``).
+
+The same kernel serves every layer: ``AssocTensor.extract_ranges`` calls
+it directly, and ``DistAssoc.__getitem__``'s shard-local extraction runs
+it per shard (bounds are shard-invariant, compiled once on host).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sorted_ops import INT_SENTINEL
+
+
+def _kernel(bounds_ref, rows_ref, cols_ref, keep_ref):
+    r = rows_ref[...]                       # [1, bn] int32
+    c = cols_ref[...]
+    row_lo = bounds_ref[0, 0]
+    row_hi = bounds_ref[0, 1]
+    col_lo = bounds_ref[0, 2]
+    col_hi = bounds_ref[0, 3]
+    valid = r != jnp.int32(INT_SENTINEL)
+    keep = (valid & (r >= row_lo) & (r < row_hi)
+            & (c >= col_lo) & (c < col_hi))
+    keep_ref[...] = keep.astype(jnp.int32)
+
+
+def range_mask_pallas(rows: jnp.ndarray, cols: jnp.ndarray,
+                      bounds: jnp.ndarray, *, bn: int = 1024,
+                      interpret: bool = False) -> jnp.ndarray:
+    """keep[t] = rows[t] ∈ [row_lo, row_hi) ∧ cols[t] ∈ [col_lo, col_hi).
+
+    ``rows``/``cols``: int32[N] sentinel-padded rank arrays (N % bn == 0);
+    ``bounds``: int32[1, 4] = (row_lo, row_hi, col_lo, col_hi).
+    Returns int32[N] (1 = kept).  Sentinel entries are never kept.
+    """
+    n = rows.shape[0]
+    bn = min(bn, n)
+    assert n % bn == 0
+    keep = pl.pallas_call(
+        _kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda b: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bn), lambda b: (0, b)),
+            pl.BlockSpec((1, bn), lambda b: (0, b)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda b: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        interpret=interpret,
+    )(bounds, rows[None], cols[None])
+    return keep[0]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the range-mask kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sorted_ops import INT_SENTINEL
+
+
+def range_mask_ref(rows: jnp.ndarray, cols: jnp.ndarray,
+                   bounds: jnp.ndarray) -> jnp.ndarray:
+    """keep[t] = rows[t] ∈ [b[0], b[1]) ∧ cols[t] ∈ [b[2], b[3])."""
+    b = bounds.reshape(-1)
+    valid = rows != jnp.int32(INT_SENTINEL)
+    keep = (valid & (rows >= b[0]) & (rows < b[1])
+            & (cols >= b[2]) & (cols < b[3]))
+    return keep.astype(jnp.int32)

@@ -157,9 +157,26 @@ def test_printfull_fig1_layout():
 
 
 def test_printfull_single_row_and_empty():
+    # numeric values render num2str-style (MATLAB D4M): "1", not "1.0"
     one = Assoc(["r"], ["c"], [1.0]).printfull()
-    assert one.splitlines()[1].split() == ["r", "1.0"]
+    assert one.splitlines()[1].split() == ["r", "1"]
     assert Assoc().printfull() == "  "  # header gutter only, no crash
+
+
+def test_printfull_numeric_left_justified():
+    """Numeric arrays align exactly like string arrays: left-justified
+    cells, widths from the widest cell/label per column (ROADMAP item)."""
+    a = Assoc(["r1", "r2"], ["c1", "c1"], [1.0, 123456.75])
+    a["r1", "c2"] = 2.5
+    lines = a.printfull().splitlines()
+    # the wide value "123456.75" sets column c1's width
+    off_c2 = lines[0].index("c2")
+    assert off_c2 > len("r1") + 2 + len("123456.75")
+    # every c2 cell starts at the same offset, left-justified
+    assert lines[1][off_c2:].startswith("2.5")
+    # integral floats drop the trailing ".0" (num2str), fractions keep it
+    assert lines[1].split() == ["r1", "1", "2.5"]
+    assert lines[2].split() == ["r2", "123456.75"]
 
 
 def test_setitem_assoc_value_overwrites():

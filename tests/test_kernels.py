@@ -122,6 +122,31 @@ def test_aggregate_runs_sums():
     assert v[0] == 3.0 and v[2] == 5.0 and v[3] == 3.0
 
 
+# --------------------------- range extract ----------------------------------
+from repro.kernels.range_extract.ops import range_mask
+from repro.kernels.range_extract.ref import range_mask_ref
+
+
+@pytest.mark.parametrize("n,box", [(64, (2, 9, 0, 50)), (300, (0, 300, 10, 20)),
+                                   (1024, (5, 5, 0, 1)), (8, (0, 8, 0, 8))])
+def test_range_mask(n, box):
+    from repro.core.sorted_ops import INT_SENTINEL
+    rows = np.sort(rng.integers(0, 32, n)).astype(np.int32)
+    cols = rng.integers(0, 32, n).astype(np.int32)
+    rows[-n // 4:] = INT_SENTINEL  # sentinel tail never kept
+    cols[-n // 4:] = INT_SENTINEL
+    bounds = jnp.asarray(box, jnp.int32)
+    out = range_mask(jnp.asarray(rows), jnp.asarray(cols), bounds,
+                     impl="interpret")
+    ref = range_mask_ref(jnp.asarray(rows), jnp.asarray(cols),
+                         bounds.reshape(1, 4))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    valid = rows != INT_SENTINEL
+    want = (valid & (rows >= box[0]) & (rows < box[1])
+            & (cols >= box[2]) & (cols < box[3])).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
 # --------------------------- bsr spgemm -------------------------------------
 from repro.kernels.bsr_spgemm.ops import bsr_spgemm, make_block_mask
 from repro.kernels.bsr_spgemm.ref import bsr_spgemm_ref

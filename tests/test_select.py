@@ -1,0 +1,399 @@
+"""The unified selector algebra: compilation, composition, 3-layer parity.
+
+One D4M query language across the stack: every selector compiles against a
+KeySpace (range or index-set form) and must return the same entries on the
+host ``Assoc``, the device ``AssocTensor``, and the sharded ``DistAssoc``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (All, Assoc, AssocTensor, Keys, KeySpace, Mask, Match,
+                        Positions, Range, StartsWith, Where)
+from repro.core import keyspace as keyspace_mod
+from repro.core import select
+from repro.core.dist_assoc import DistAssoc
+from repro.core.select import as_selector, compile_selector
+
+
+# ---------------------------------------------------------------------------
+# compilation against a KeySpace
+# ---------------------------------------------------------------------------
+
+KEYS = ["alpha", "beta", "bet", "gamma", "delta", "log-01", "log-02", "zz"]
+
+
+@pytest.fixture
+def space():
+    return KeySpace(KEYS)
+
+
+def _keys_of(comp, ks):
+    return ks.keys[comp.positions()].tolist()
+
+
+def test_keys_compile(space):
+    c = compile_selector(Keys(["beta", "zz", "nope"]), space)
+    assert _keys_of(c, space) == ["beta", "zz"]
+
+
+def test_range_compile_right_inclusive(space):
+    c = compile_selector(Range("bet", "delta"), space)
+    assert _keys_of(c, space) == ["bet", "beta", "delta"]
+    assert c.is_range
+
+
+def test_range_exclusive_bounds(space):
+    c = compile_selector(Range("bet", "delta", inclusive=(False, False)),
+                         space)
+    assert _keys_of(c, space) == ["beta"]
+
+
+def test_range_open_ends(space):
+    assert _keys_of(compile_selector(Range(None, "bet"), space), space) == \
+        ["alpha", "bet"]
+    assert _keys_of(compile_selector(Range("log-01", None), space), space) == \
+        ["log-01", "log-02", "zz"]
+
+
+def test_startswith_compile(space):
+    c = compile_selector(StartsWith("log-"), space)
+    assert _keys_of(c, space) == ["log-01", "log-02"]
+    assert c.is_range  # prefix block is contiguous in sorted order
+    # prefix list (D4M string-list form) → union of ranges
+    c2 = compile_selector(StartsWith("bet,log-,"), space)
+    assert _keys_of(c2, space) == ["bet", "beta", "log-01", "log-02"]
+
+
+def test_startswith_next_string_carry():
+    # a prefix ending in the maximal code point carries into the shorter one
+    top = chr(0x10FFFF)
+    ks = KeySpace(["a" + top, "a" + top + "x", "b"])
+    c = compile_selector(StartsWith("a" + top), ks)
+    assert _keys_of(c, ks) == ["a" + top, "a" + top + "x"]
+
+
+def test_match_where_mask(space):
+    assert _keys_of(compile_selector(Match(r"^log-\d+$"), space), space) == \
+        ["log-01", "log-02"]
+    assert _keys_of(compile_selector(Where(lambda k: k.endswith("a")), space),
+                    space) == ["alpha", "beta", "delta", "gamma"]
+    bits = np.zeros(len(space), bool)
+    bits[[0, 3]] = True
+    assert compile_selector(Mask(bits), space).positions().tolist() == [0, 3]
+
+
+def test_mask_wrong_length_raises(space):
+    with pytest.raises(ValueError):
+        compile_selector(Mask(np.zeros(3, bool)), space)
+
+
+def test_positions_and_slice(space):
+    assert compile_selector(Positions([1, 3]), space).positions().tolist() == \
+        [1, 3]
+    assert compile_selector(slice(0, 3), space).positions().tolist() == \
+        [0, 1, 2]
+    assert compile_selector(Positions(-1), space).positions().tolist() == \
+        [len(space) - 1]
+    with pytest.raises(IndexError):
+        compile_selector(Positions([99]), space)
+
+
+def test_composition(space):
+    sw = StartsWith("be")
+    assert _keys_of(compile_selector(sw & Keys(["beta"]), space), space) == \
+        ["beta"]
+    assert _keys_of(compile_selector(sw | Keys(["zz"]), space), space) == \
+        ["bet", "beta", "zz"]
+    inv = compile_selector(~All(), space)
+    assert inv.count == 0
+    assert compile_selector(~Keys([]), space).count == len(space)
+
+
+def test_contiguous_set_normalizes_to_range(space):
+    # an index set that happens to be contiguous compiles to a rank range
+    c = compile_selector(Keys(["log-01", "log-02"]), space)
+    assert c.is_range
+
+
+def test_as_selector_forms():
+    assert isinstance(as_selector(":"), All)
+    assert isinstance(as_selector(slice(None)), All)
+    assert isinstance(as_selector("a,:,b,"), Range)
+    assert isinstance(as_selector("a,b,"), Keys)
+    assert isinstance(as_selector(("a", "b")), Range)
+    assert isinstance(as_selector(np.array([1, 2])), Positions)
+    assert isinstance(as_selector(np.array([1.5])), Keys)
+    assert isinstance(as_selector(np.array([True, False])), Mask)
+
+
+# ---------------------------------------------------------------------------
+# compilation + union caches
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_hits_on_repeat(space):
+    select.clear_compile_cache()
+    select.reset_cache_stats()
+    sel = StartsWith("log-")
+    compile_selector(sel, space)
+    misses = select.CACHE_STATS["misses"]
+    assert misses >= 1 and select.CACHE_STATS["hits"] == 0
+    compile_selector(sel, space)
+    assert select.CACHE_STATS["hits"] == 1
+    assert select.CACHE_STATS["misses"] == misses
+    # an equal-content KeySpace (different object) still hits: content hash
+    compile_selector(sel, KeySpace(KEYS))
+    assert select.CACHE_STATS["hits"] == 2
+
+
+def test_assoc_repeated_query_hits_cache():
+    a = Assoc(["a", "b", "c"], ["x", "y", "z"], [1.0, 2.0, 3.0])
+    a["a,:,b,", :]
+    select.reset_cache_stats()
+    a["a,:,b,", :]
+    assert select.CACHE_STATS["hits"] >= 2   # row range + col ":" both cached
+    assert select.CACHE_STATS["misses"] == 0
+
+
+def test_keys_cache_no_itemsize_collision(space):
+    # ['ab'] and ['a','b'] have identical UTF-32 payloads; the cache key
+    # must include the itemsize so they never share an entry
+    select.clear_compile_cache()
+    c1 = compile_selector(Keys(["ab"]), space)
+    c2 = compile_selector(Keys(["a", "b"]), space)
+    assert c1.positions().tolist() != c2.positions().tolist() or \
+        c1.count == c2.count == 0
+    ks = KeySpace(["a", "b", "ab"])
+    assert _keys_of(compile_selector(Keys(["ab"]), ks), ks) == ["ab"]
+    assert _keys_of(compile_selector(Keys(["a", "b"]), ks), ks) == ["a", "b"]
+
+
+def test_cached_results_are_immutable(space):
+    # cached Compiled index sets and union maps are shared process-wide;
+    # caller mutation must fail loudly instead of poisoning the cache
+    select.clear_compile_cache()
+    c = compile_selector(Keys(["alpha", "bet", "zz"]), space)
+    with pytest.raises(ValueError):
+        c.positions()[:] = 0
+    keyspace_mod.clear_union_cache()
+    x, y = KeySpace(["a", "q"]), KeySpace(["b", "r"])
+    _, s_map, _ = x.union(y)
+    with pytest.raises(ValueError):
+        s_map[:] = 99
+    assert x.union(y)[1].tolist() == s_map.tolist()
+
+
+def test_int_tuple_is_positions_not_range():
+    # (0, 1) keeps the paper's ints-are-positions rule (like [0, 1]);
+    # key-payload tuples are inclusive ranges
+    a = Assoc(["r1", "r2", "r3"], ["c"] * 3, [1.0, 2.0, 3.0])
+    assert a[(0, 1), :].to_dict() == a[[0, 1], :].to_dict()
+    assert isinstance(as_selector((0, 1)), Positions)
+    assert isinstance(as_selector(("a", "b")), Range)
+    assert isinstance(as_selector((1.5, 2.5)), Range)
+
+
+def test_range_open_bound_no_none_key_collision():
+    # a keyspace containing the literal key "None" must not share a cache
+    # entry with an open-bound Range
+    select.clear_compile_cache()
+    ks = KeySpace(["Alpha", "Beta", "None", "Zed"])
+    open_lo = compile_selector(Range(None, "Zed"), ks)
+    closed = compile_selector(Range("None", "Zed"), ks)
+    assert open_lo.positions().tolist() == [0, 1, 2, 3]
+    assert closed.positions().tolist() == [2, 3]
+
+
+def test_setitem_tuple_and_mask_match_getitem_semantics():
+    # 2-tuples mean inclusive Range and bool arrays mean Mask on BOTH the
+    # get and set sides
+    a = Assoc(["a", "b", "c"], ["x", "x", "x"], [1.0, 2.0, 3.0])
+    a[("a", "c"), :] = 9.0
+    assert a.to_dict() == {("a", "x"): 9.0, ("b", "x"): 9.0, ("c", "x"): 9.0}
+    b = Assoc(["a", "b", "c"], ["x", "x", "x"], [1.0, 2.0, 3.0])
+    b[np.array([True, False, True]), :] = 5.0
+    assert b.get("a", "x") == 5.0 and b.get("c", "x") == 5.0
+    assert b.get("b", "x") == 2.0
+    # plain python bool LISTS are masks on both sides too
+    c = Assoc(["a", "b", "c"], ["x", "x", "x"], [1.0, 2.0, 3.0])
+    assert c[[True, False, True], :].to_dict() == \
+        {("a", "x"): 1.0, ("c", "x"): 3.0}
+    c[[True, False, True], :] = 7.0
+    assert c.get("a", "x") == 7.0 and c.get("b", "x") == 2.0
+
+
+def test_where_compiles_uncached(space):
+    # per-query lambdas must not fill (or periodically wipe) the cache
+    select.clear_compile_cache()
+    select.reset_cache_stats()
+    for _ in range(3):
+        compile_selector(Where(lambda k: True), space)
+    assert select.CACHE_STATS == {"hits": 0, "misses": 0}
+    assert len(select._COMPILE_CACHE) == 0
+
+
+def test_union_memo():
+    keyspace_mod.clear_union_cache()
+    x = KeySpace(["a", "b"])
+    y = KeySpace(["b", "c"])
+    x.union(y)
+    assert keyspace_mod.UNION_STATS == {"hits": 0, "misses": 1}
+    x.union(y)
+    assert keyspace_mod.UNION_STATS == {"hits": 1, "misses": 1}
+    # repeated device adds on the same keyspace pair reuse the merge
+    d1 = AssocTensor.from_triples(["a"], ["x"], [1.0], capacity=8)
+    d2 = AssocTensor.from_triples(["b"], ["y"], [2.0], capacity=8)
+    d1.add(d2)
+    before = keyspace_mod.UNION_STATS["hits"]
+    d1.add(d2)
+    assert keyspace_mod.UNION_STATS["hits"] > before
+
+
+# ---------------------------------------------------------------------------
+# 3-layer parity: Assoc == AssocTensor == DistAssoc for every selector form
+# ---------------------------------------------------------------------------
+
+ROWS = ["apple", "apricot", "banana", "cherry", "date", "fig", "grape",
+        "kiwi", "lemon", "mango"]
+
+
+def _triple_set():
+    rng = np.random.default_rng(7)
+    rows = np.asarray(ROWS * 3)
+    cols = np.asarray([f"c{i % 5}" for i in range(len(rows))])
+    vals = np.round(rng.uniform(0.5, 9.5, len(rows)), 2)
+    return rows, cols, vals
+
+
+@pytest.fixture(scope="module")
+def layers():
+    rows, cols, vals = _triple_set()
+    host = Assoc(rows, cols, vals, aggregate="sum")
+    dev = AssocTensor.from_triples(rows, cols, vals, aggregate="sum",
+                                   capacity=64)
+    mesh = jax.make_mesh((1,), ("data",))
+    dist = DistAssoc.from_triples(rows, cols, vals, mesh, aggregate="sum")
+    return host, dev, dist
+
+
+def _dict_close(a, b):
+    if set(a) != set(b):
+        return False
+    return all(abs(a[k] - b[k]) < 1e-3 * (1 + abs(a[k])) for k in a)
+
+
+MASK_BITS = np.zeros(len(set(ROWS)), bool)
+MASK_BITS[[0, 4, 7]] = True
+
+PARITY_SELECTORS = [
+    ("explicit-keys", Keys(["banana", "kiwi", "nope"])),
+    ("string-list", "banana,kiwi,"),
+    ("range-string", "banana,:,fig,"),
+    ("range-obj", Range("banana", "fig")),
+    ("startswith", StartsWith("ap,")),
+    ("match", Match("an")),
+    ("where", Where(lambda k: len(k) == 4)),
+    ("mask", Mask(MASK_BITS)),
+    ("all", ":"),
+    ("composed-or", StartsWith("ap,") | Keys(["mango"])),
+    ("composed-and-not", StartsWith("a,b,") & ~Keys(["banana"])),
+    ("empty", Keys(["nothing-matches"])),
+]
+
+
+@pytest.mark.parametrize("name,sel", PARITY_SELECTORS,
+                         ids=[n for n, _ in PARITY_SELECTORS])
+def test_three_layer_parity(layers, name, sel):
+    host, dev, dist = layers
+    want = host[sel, :].to_dict()
+    got_dev = dev[sel, :].to_assoc().to_dict()
+    got_dist = dist[sel, :].to_assoc().to_dict()
+    assert _dict_close(got_dev, want), (name, got_dev, want)
+    assert _dict_close(got_dist, want), (name, got_dist, want)
+
+
+def test_parity_col_selector_and_both_axes(layers):
+    host, dev, dist = layers
+    want = host[StartsWith("ap,"), "c0,c3,"].to_dict()
+    got_dev = dev[StartsWith("ap,"), "c0,c3,"].to_assoc().to_dict()
+    got_dist = dist[StartsWith("ap,"), "c0,c3,"].to_assoc().to_dict()
+    assert _dict_close(got_dev, want) and _dict_close(got_dist, want)
+
+
+def test_parity_full_range_is_identity(layers):
+    host, dev, dist = layers
+    want = host.to_dict()
+    assert _dict_close(host[":", ":"].to_dict(), want)
+    assert _dict_close(dev[":", ":"].to_assoc().to_dict(), want)
+    assert _dict_close(dist[":", ":"].to_assoc().to_dict(), want)
+
+
+def test_parity_empty_result(layers):
+    host, dev, dist = layers
+    assert host["zzz,:,zzzz,", :].to_dict() == {}
+    assert dev["zzz,:,zzzz,", :].to_assoc().to_dict() == {}
+    assert dist["zzz,:,zzzz,", :].to_assoc().to_dict() == {}
+
+
+# ---------------------------------------------------------------------------
+# device specifics
+# ---------------------------------------------------------------------------
+
+def test_device_getitem_under_jit():
+    dev = AssocTensor.from_triples(["a", "b", "c"], ["x", "x", "y"],
+                                   [1.0, 2.0, 3.0], capacity=8)
+
+    @jax.jit
+    def q(t):
+        return t[StartsWith("a,b,"), :]
+
+    out = q(dev)
+    assert out.to_assoc().to_dict() == {("a", "x"): 1.0, ("b", "x"): 2.0}
+    # non-contiguous set → gather path, still jit-safe
+    @jax.jit
+    def q2(t):
+        return t[Keys(["a", "c"]), :]
+
+    assert q2(dev).to_assoc().to_dict() == {("a", "x"): 1.0, ("c", "y"): 3.0}
+
+
+def test_device_setitem_scalar():
+    dev = AssocTensor.from_triples(["a", "b"], ["x", "y"], [1.0, 2.0],
+                                   capacity=8)
+    dev[Keys(["b"]), :] = 9.0
+    assert dev.to_assoc().to_dict() == {("a", "x"): 1.0, ("b", "y"): 9.0}
+    with pytest.raises(TypeError):
+        dev[Keys(["b"]), :] = "str"
+
+
+def test_host_setitem_selector_fill():
+    a = Assoc(["r1", "r2"], ["c1", "c2"], [1.0, 2.0])
+    a[Keys(["r1", "r2"]), "c1,"] = 5.0
+    assert a.get("r1", "c1") == 5.0 and a.get("r2", "c1") == 5.0
+    assert a.get("r2", "c2") == 2.0
+    a["r1,:,r2,", ":"] = 0.5     # range-string selector fill
+    assert a.get("r2", "c2") == 0.5
+
+
+def test_empty_assoc_and_numeric_keyspace_edges():
+    assert Assoc()["a,:,b,", :].to_dict() == {}
+    assert Assoc()[:, :].to_dict() == {}
+    b = Assoc([10.0, 20.0, 30.0], [1.0, 1.0, 1.0], [5.0, 6.0, 7.0])
+    # range syntax on numeric keys compares numerically (not lexically)
+    assert b["10.0,:,20.0,", :].to_dict() == {(10.0, 1.0): 5.0,
+                                              (20.0, 1.0): 6.0}
+    assert b[Keys(["abc"]), :].to_dict() == {}   # unparseable → empty
+
+
+def test_sorted_intersect_string_and_empty():
+    """The timsort-merge intersection (satellite) on string + empty inputs."""
+    from repro.core import sorted_intersect
+    i = np.asarray(["ab", "cd", "zz"])
+    j = np.asarray(["abcd", "cd", "zz"])
+    k, im, jm = sorted_intersect(i, j)
+    assert k.tolist() == ["cd", "zz"]
+    np.testing.assert_array_equal(i[im], k)
+    np.testing.assert_array_equal(j[jm], k)
+    k2, _, _ = sorted_intersect(np.asarray([], dtype=np.int64),
+                                np.asarray([1, 2]))
+    assert len(k2) == 0
