@@ -281,6 +281,103 @@ def run_select(n_lo: int = 5, n_hi: int = 12, device: bool = True) -> List[Dict]
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Array-multiplication strategy benchmarks: dense-tile vs BSR vs fused-reduce
+# (the Graphulo pushdown engine, repro.core.spgemm), sweeping nnz density.
+#
+# Two regimes per n, same nnz = 8·2^n, sweeping density:
+#   * sparse — a clustered adjacency over a 2^n keyspace (entries grouped in
+#     ~2^(n-7) communities of ≲128×128 keys, the Graphulo graph workload):
+#     global density ≈ 8/2^n, present 128×128 tiles ≪ the dense footprint.
+#     Uniform scatter (the paper's fig6 workload, benchmarked there) is the
+#     BSR worst case — every tile is occupied until n ≳ 17; community
+#     structure is what block-sparsity exists to exploit;
+#   * dense  — uniform keys over a 2^(n//2) space (density O(1)): the
+#     dense-tile MXU path's home turf.
+# Keys are zero-padded decimal strings so lexicographic rank order ==
+# numeric order and the community structure survives rank tiling.
+# Plus the fused epilogue pair: sqout(reduce=1) vs sqout()-then-reduce.
+# ---------------------------------------------------------------------------
+
+def _matmul_setup(n: int, regime: str):
+    rng = np.random.default_rng(77 + n)
+    m = 8 * 2 ** n
+
+    def pad(a):
+        return np.char.zfill(a.astype(str), 7)
+
+    if regime == "sparse":
+        nb = max(2 ** n // 128, 1)           # 128-key blocks in the keyspace
+        n_clusters = max(2 ** (n - 7), 4)
+
+        def clustered():
+            cr = rng.integers(0, nb, n_clusters)
+            cc = rng.integers(0, nb, n_clusters)
+            pick = rng.integers(0, n_clusters, m)
+            r = cr[pick] * 128 + rng.integers(0, 128, m)
+            c = cc[pick] * 128 + rng.integers(0, 128, m)
+            return pad(r), pad(c)
+
+        rows, cols = clustered()
+        rows2, cols2 = clustered()
+    else:
+        ns = 2 ** max(n // 2, 3)
+        rows, cols, rows2, cols2 = (
+            pad(rng.integers(0, ns, m)) for _ in range(4))
+    host_a = Assoc(rows, cols, 1.0)
+    host_b = Assoc(rows2, cols2, 1.0)
+    cap = int(np.ceil(len(rows) / 8) * 8)
+    ones = np.ones(len(rows))
+    dev_a = AssocTensor.from_triples(rows, cols, ones, capacity=cap)
+    dev_b = AssocTensor.from_triples(rows2, cols2, ones, capacity=cap)
+    return host_a, host_b, dev_a, dev_b
+
+
+# the dense strategy materializes |rowspace|×|colspace|: cap its n range
+_MATMUL_DENSE_MAX_N = 10
+
+
+def run_matmul(n_lo: int = 5, n_hi: int = 12, device: bool = True
+               ) -> List[Dict]:
+    """Rows for the matmul-strategy benches (BENCH_matmul.json schema)."""
+    from repro.core.spgemm import matmul_reduce
+
+    rows = []
+    for regime in ("sparse", "dense"):
+        for n in range(n_lo, n_hi + 1):
+            host_a, host_b, dev_a, dev_b = _matmul_setup(n, regime)
+            bench = f"matmul_{regime}"
+            nnz = 8 * 2 ** n
+            rows.append({"bench": bench, "impl": "host", "n": n,
+                         "seconds": _time(lambda: host_a @ host_b),
+                         "nnz": nnz})
+            if not device:
+                continue
+            if n <= _MATMUL_DENSE_MAX_N:
+                def dd():
+                    dev_a.matmul(dev_b, impl="dense").nnz.block_until_ready()
+                dd()
+                rows.append({"bench": bench, "impl": "device_dense", "n": n,
+                             "seconds": _time(dd), "nnz": nnz})
+            def db():
+                dev_a.matmul(dev_b, impl="bsr").nnz.block_until_ready()
+            db()
+            rows.append({"bench": bench, "impl": "device_bsr", "n": n,
+                         "seconds": _time(db), "nnz": nnz})
+            if regime == "sparse":
+                def fused():
+                    dev_a.sqout(reduce=1).block_until_ready()
+                def unfused():
+                    c = dev_a.sqout()
+                    c.reduce_rows().block_until_ready()
+                fused(), unfused()
+                rows.append({"bench": "sqout_reduce", "impl": "device_fused",
+                             "n": n, "seconds": _time(fused), "nnz": nnz})
+                rows.append({"bench": "sqout_reduce", "impl": "device_unfused",
+                             "n": n, "seconds": _time(unfused), "nnz": nnz})
+    return rows
+
+
 # device matmul densifies over the keyspace: cap its n range
 _DEVICE_MAX_N = {"fig6_matmul": 10, "fig5_add": 12, "fig7_elemmul": 12,
                  "fig3_constructor_numeric": 12, "fig4_constructor_string": 12}

@@ -18,7 +18,9 @@ from .keyspace import KeySpace
 from .select import (All, Keys, Mask, Match, Positions, Range, Selector,
                      StartsWith, Where, as_selector, compile_selector)
 from .semiring import (AND_OR, MAX_MIN, MAX_PLUS, MAX_TIMES, MIN_PLUS,
-                       PLUS_TIMES, REGISTRY, STRING, Semiring, get_semiring)
+                       PLUS_TIMES, REGISTRY, STRING, Semiring, get_semiring,
+                       mesh_combine, scatter_combine)
+from .spgemm import matmul_reduce, plan_matmul
 from .sorted_ops import (INT_SENTINEL, sorted_intersect,
                          sorted_intersect_padded, sorted_union,
                          sorted_union_padded)
@@ -31,6 +33,7 @@ __all__ = [
     "sorted_union_padded", "sorted_intersect_padded",
     "aggregate_runs", "canonicalize_np", "dedup_sorted_coo",
     "intersect_pairs_np", "linearize_pairs_np", "spgemm_np",
+    "matmul_reduce", "plan_matmul", "mesh_combine", "scatter_combine",
     "Selector", "Keys", "Range", "StartsWith", "Match", "Where", "Mask",
     "Positions", "All", "as_selector", "compile_selector",
 ]

@@ -40,7 +40,7 @@ import numpy as np
 import scipy.sparse as sp
 
 from .coo import (apply_pair, canonicalize_np, intersect_pairs_np,
-                  linearize_pairs_np, spgemm_np)
+                  linearize_pairs_np, spgemm_np, spgemm_reduce_np)
 from .keyspace import KeySpace
 from .select import (Selector, compile_selector, sanitize_keys,
                      split_string_list)
@@ -599,13 +599,70 @@ class Assoc:
         keep = v != sr.zero
         return Assoc._assemble(a.row, b.col, r[keep], c[keep], v[keep])
 
-    def sqin(self, semiring=PLUS_TIMES) -> "Assoc":
-        """AᵀA — the paper's correlation idiom (column-key graph)."""
-        return self.transpose().matmul(self, semiring)
+    def matmul_reduce(self, other: "Assoc", axis: int = 1,
+                      semiring=PLUS_TIMES) -> np.ndarray:
+        """Fused ``⊕-reduce(self ⊗.⊕ other, axis)`` — C never materializes.
 
-    def sqout(self, semiring=PLUS_TIMES) -> "Assoc":
-        """AAᵀ — row-key graph."""
-        return self.matmul(self.transpose(), semiring)
+        The host half of the Graphulo pushdown: since ⊕ is associative and
+        commutative, ``⊕_j C[i,j]`` folds directly over the expanded
+        semiring products — one CSR-style segment scatter
+        (:func:`repro.core.coo.spgemm_reduce_np`) instead of the full
+        canonicalize that builds C's triples.  ``(+,×)`` collapses further
+        to two sparse matvecs (``A @ (B @ 1)``).  Returns a dense vector
+        aligned with ``self.row`` (``axis=1``) or ``other.col``
+        (``axis=0``).
+        """
+        sr = get_semiring(semiring)
+        if not isinstance(other, Assoc):
+            raise TypeError("Assoc.matmul_reduce expects an Assoc")
+        if axis not in (0, 1):
+            raise ValueError(f"axis must be 0 or 1, got {axis!r}")
+        a = self.logical() if not self.numeric else self
+        b = other.logical() if not other.numeric else other
+        n_out = len(a.row) if axis == 1 else len(b.col)
+        out = np.full(n_out, sr.zero, dtype=np.float64)
+        inner, ia, ib = sorted_intersect(a.col, b.row)
+        if len(inner) == 0 or n_out == 0:
+            return out
+        if sr.name == "plus_times":
+            a_m = a.adj.tocsr()[:, ia]
+            b_m = b.adj.tocsr()[ib, :]
+            if axis == 1:
+                return np.asarray(a_m @ (b_m @ np.ones(b_m.shape[1]))).ravel()
+            return np.asarray((np.ones(a_m.shape[0]) @ a_m) @ b_m).ravel()
+        acoo = a.adj.tocoo()
+        bcoo = b.adj.tocoo()
+        amap = np.full(len(a.col), -1, dtype=np.int64)
+        amap[ia] = np.arange(len(inner))
+        bmap = np.full(len(b.row), -1, dtype=np.int64)
+        bmap[ib] = np.arange(len(inner))
+        ak, bk = amap[acoo.col], bmap[bcoo.row]
+        am, bm = ak >= 0, bk >= 0
+        a_row, a_k, a_val = acoo.row[am], ak[am], acoo.data[am]
+        b_k, b_col, b_val = bk[bm], bcoo.col[bm], bcoo.data[bm]
+        order = np.lexsort((b_col, b_k))
+        return spgemm_reduce_np(a_row, a_k, a_val,
+                                b_k[order], b_col[order], b_val[order],
+                                sr.mul_np, sr.add_np, sr.zero, axis, n_out)
+
+    def sqin(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
+        """AᵀA — the paper's correlation idiom (column-key graph).
+
+        ``reduce=0/1`` returns the fused ⊕-reduction of the square
+        (a dense vector over ``self.col``) instead of the square itself.
+        """
+        t = self.transpose()
+        if reduce is None:
+            return t.matmul(self, semiring)
+        return t.matmul_reduce(self, reduce, semiring)
+
+    def sqout(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
+        """AAᵀ — row-key graph; ``reduce=0/1`` for the fused reduction
+        (a dense vector over ``self.row``)."""
+        t = self.transpose()
+        if reduce is None:
+            return self.matmul(t, semiring)
+        return self.matmul_reduce(t, reduce, semiring)
 
     # ------------------------------------------------------------------ #
     # structural ops                                                     #

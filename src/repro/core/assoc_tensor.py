@@ -34,7 +34,7 @@ import numpy as np
 from .assoc import Assoc
 from .coo import SENT, dedup_sorted_coo
 from .keyspace import KeySpace
-from .semiring import PLUS_TIMES, Semiring, get_semiring
+from .semiring import PLUS_TIMES, Semiring, get_semiring, scatter_combine
 from .sorted_ops import INT_SENTINEL
 
 # ``dedup_sorted_coo`` — the canonical COO merge shared with the host Assoc —
@@ -68,6 +68,20 @@ def coo_mask_keep(rows: jnp.ndarray, cols: jnp.ndarray,
             & col_mask[jnp.clip(cols, 0, col_mask.shape[0] - 1)])
 
 
+def coo_axis_mask_keep(idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Single-axis membership gather (the set half of a hybrid selection)."""
+    ok = idx != SENT
+    return ok & mask[jnp.clip(idx, 0, mask.shape[0] - 1)]
+
+
+# Selection-path dispatch counters (eager queries only): which execution
+# path compiled selections take — ``range`` (Pallas range kernel, both axes
+# contiguous), ``hybrid`` (one contiguous axis through the range kernel +
+# one membership gather), ``gather`` (both axes scattered).  Mirrors
+# select.CACHE_STATS; tests and benchmarks read these to pin the fast path.
+DISPATCH_STATS = {"range": 0, "hybrid": 0, "gather": 0}
+
+
 def coo_compact(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
                 keep: jnp.ndarray):
     """Keep-masked triples → canonical sorted/sentinel-padded form."""
@@ -90,6 +104,12 @@ class AssocTensor:
     row_space: KeySpace = dataclasses.field(metadata={"static": True})
     col_space: KeySpace = dataclasses.field(metadata={"static": True})
     val_space: Optional[KeySpace] = None  # None ⇒ numeric values
+
+    # eager-only metadata, NOT part of the pytree: capacity-producing ops
+    # (matmul, from_dense_adj) set an instance attribute when the result was
+    # truncated; after any tree_map/jit round trip it falls back to this
+    # class default rather than raising
+    overflow = False
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
@@ -267,8 +287,16 @@ class AssocTensor:
 
     @staticmethod
     def from_dense_adj(dense, row_space: KeySpace, col_space: KeySpace,
-                       capacity: int, *, zero: float = 0.0) -> "AssocTensor":
-        """Top-|capacity| nonzeros of a dense adj back to padded COO."""
+                       capacity: int, *, zero: float = 0.0,
+                       warn_overflow: bool = True) -> "AssocTensor":
+        """Top-|capacity| nonzeros of a dense adj back to padded COO.
+
+        When the true nonzero count exceeds ``capacity`` the excess entries
+        (latest in (row, col) order) are dropped; the result records that
+        as an eager ``overflow`` attribute (bool device scalar) and, on
+        host-driven (untraced) paths, emits a ``RuntimeWarning`` — a silent
+        truncation here corrupts every downstream ⊕ without a trace.
+        """
         nr, nc = dense.shape
         flat = dense.reshape(-1)
         ok = flat != zero
@@ -280,39 +308,75 @@ class AssocTensor:
         rows = jnp.where(taken_ok, order // nc, SENT).astype(jnp.int32)
         cols = jnp.where(taken_ok, order % nc, SENT).astype(jnp.int32)
         vals = jnp.where(taken_ok, flat[order], zero)
-        nnz = jnp.minimum(ok.sum(), capacity).astype(jnp.int32)
-        return AssocTensor(rows, cols, vals, nnz, row_space, col_space, None)
+        true_nnz = ok.sum()
+        nnz = jnp.minimum(true_nnz, capacity).astype(jnp.int32)
+        out = AssocTensor(rows, cols, vals, nnz, row_space, col_space, None)
+        overflow = true_nnz > capacity
+        out.overflow = overflow
+        if warn_overflow and not isinstance(dense, jax.core.Tracer) \
+                and bool(overflow):
+            import warnings
+            warnings.warn(
+                f"from_dense_adj: {int(true_nnz)} nonzeros exceed capacity "
+                f"{capacity}; {int(true_nnz) - capacity} entries dropped",
+                RuntimeWarning, stacklevel=2)
+        return out
+
+    def transpose(self) -> "AssocTensor":
+        """Swap rows/cols and restore canonical (row, col) order."""
+        ok = self.valid_mask()
+        r = jnp.where(ok, self.cols, SENT)
+        c = jnp.where(ok, self.rows, SENT)
+        order = jnp.lexsort((c, r))
+        return AssocTensor(r[order], c[order], self.vals[order], self.nnz,
+                           self.col_space, self.row_space, self.val_space)
+
+    @property
+    def T(self) -> "AssocTensor":
+        return self.transpose()
 
     def matmul(self, other: "AssocTensor", semiring=PLUS_TIMES,
                out_capacity: Optional[int] = None,
-               use_kernel: bool = True) -> "AssocTensor":
+               use_kernel: bool = True, impl: str = "auto") -> "AssocTensor":
         """Array multiplication ``⊗.⊕`` contracting over col/row keys.
 
-        Strings are first reduced via ``logical()`` (paper rule).  The
-        contraction runs on dense MXU-aligned adj tiles through the Pallas
-        semiring matmul; for large sparse operands use
-        :mod:`repro.kernels.bsr_spgemm` via the data-pipeline BSR path.
+        Strings are first reduced via ``logical()`` (paper rule).  Planned
+        and executed by :mod:`repro.core.spgemm` — the dense strategy
+        contracts MXU-aligned adj tiles through the Pallas semiring matmul;
+        the BSR strategy packs only the present 128×128 tiles and emits the
+        result COO directly, never materializing the dense product; ``impl``
+        overrides the auto heuristic (``"dense"`` / ``"bsr"`` / ``"coo"``).
         """
-        sr = get_semiring(semiring)
-        a = self.logical() if not self.numeric else self
-        b = other.logical() if not other.numeric else other
-        # contraction space: a.col_space ∪ b.row_space (ranks aligned)
-        ks, am, bm = a.col_space.union(b.row_space)
-        a = a.reranked(a.row_space, ks, np.arange(len(a.row_space), dtype=np.int32), am)
-        b = b.reranked(ks, b.col_space, bm, np.arange(len(b.col_space), dtype=np.int32))
-        da = a.to_dense_adj(zero=sr.zero)
-        db = b.to_dense_adj(zero=sr.zero)
-        k = max(da.shape[1], db.shape[0])
-        da = jnp.pad(da, ((0, 0), (0, k - da.shape[1])), constant_values=sr.zero)
-        db = jnp.pad(db, ((0, k - db.shape[0]), (0, 0)), constant_values=sr.zero)
-        if use_kernel:
-            from repro.kernels.semiring_matmul.ops import semiring_matmul
-            dc = semiring_matmul(da, db, semiring=sr)
-        else:
-            dc = sr.matmul_dense(da, db)
-        cap = out_capacity or (a.capacity + b.capacity)
-        return AssocTensor.from_dense_adj(
-            dc, a.row_space, b.col_space, cap, zero=sr.zero)
+        from .spgemm import matmul as _planned_matmul
+        return _planned_matmul(self, other, semiring, impl=impl,
+                               out_capacity=out_capacity,
+                               use_kernel=use_kernel)
+
+    def matmul_reduce(self, other: "AssocTensor", axis: int,
+                      semiring=PLUS_TIMES, *, impl: str = "auto"
+                      ) -> jnp.ndarray:
+        """Fused ``⊕-reduce(self ⊗.⊕ other, axis)`` — skips materializing
+        the product entirely (Graphulo pushdown; see
+        :func:`repro.core.spgemm.matmul_reduce`).  Returns a dense vector
+        over ``self.row_space`` (``axis=1``) or ``other.col_space``
+        (``axis=0``)."""
+        from .spgemm import matmul_reduce as _planned_reduce
+        return _planned_reduce(self, other, axis, semiring, impl=impl)
+
+    def sqin(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
+        """AᵀA — the correlation idiom.  ``reduce=0/1`` returns the fused
+        ⊕-reduction of the square instead (vector over the col keyspace)."""
+        t = self.transpose()
+        if reduce is None:
+            return t.matmul(self, semiring)
+        return t.matmul_reduce(self, reduce, semiring)
+
+    def sqout(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
+        """AAᵀ — row-key graph; ``reduce=0/1`` for the fused reduction."""
+        t = self.transpose()
+        if reduce is None:
+            return self.matmul(t, semiring)
+        return self.matmul_reduce(t, reduce, semiring)
 
     def __matmul__(self, other):
         return self.matmul(other)
@@ -373,13 +437,40 @@ class AssocTensor:
     def _selection_keep(self, ij) -> jnp.ndarray:
         """Compile (row_sel, col_sel) and evaluate the device keep mask.
 
-        The single dispatch point between the range fast path and the
-        membership-gather path — both ``__getitem__`` and ``__setitem__``
-        go through here.
+        The single dispatch point between three execution paths — both
+        ``__getitem__`` and ``__setitem__`` go through here:
+
+        * both axes contiguous → the Pallas range-mask kernel alone;
+        * one axis contiguous (e.g. a ``Match``/``StartsWith`` whose hits
+          happen to be one rank interval — ``Compiled.from_indices``
+          normalizes those to ranges) → the range kernel for that axis
+          (the other bound left open) AND one membership gather for the
+          scattered axis.  First slice of the ROADMAP rank-interval
+          decomposition: a single-interval regex no longer drags the whole
+          selection onto the gather path;
+        * both axes scattered → two membership gathers (no kernel).
         """
         rc, cc = self._compiled_pair(ij)
         if rc.is_range and cc.is_range:
+            DISPATCH_STATS["range"] += 1
             return self._range_keep((rc.lo, rc.hi), (cc.lo, cc.hi))
+        if rc.is_range or cc.is_range:
+            DISPATCH_STATS["hybrid"] += 1
+            row_rng = ((rc.lo, rc.hi) if rc.is_range
+                       else (0, max(len(self.row_space), 1)))
+            col_rng = ((cc.lo, cc.hi) if cc.is_range
+                       else (0, max(len(self.col_space), 1)))
+            keep = self._range_keep(row_rng, col_rng)
+            # membership mask built (and uploaded) ONLY for the set axis —
+            # the range axis is already handled by the kernel bounds
+            if not rc.is_range:
+                keep = keep & coo_axis_mask_keep(
+                    self.rows, jnp.asarray(np.ascontiguousarray(rc.mask())))
+            if not cc.is_range:
+                keep = keep & coo_axis_mask_keep(
+                    self.cols, jnp.asarray(np.ascontiguousarray(cc.mask())))
+            return keep
+        DISPATCH_STATS["gather"] += 1
         return self._mask_keep(*self._device_masks(rc, cc))
 
     def __getitem__(self, ij) -> "AssocTensor":
@@ -410,16 +501,9 @@ class AssocTensor:
         sr = get_semiring(semiring)
         nr = len(self.row_space)
         ok = self.valid_mask()
-        if sr.name == "plus_times":
-            vec = jnp.zeros((nr,), self.vals.dtype)
-            return vec.at[jnp.where(ok, self.rows, nr)].add(
-                jnp.where(ok, self.vals, 0.0), mode="drop")
         vec = jnp.full((nr,), sr.zero, self.vals.dtype)
-        if sr.name in ("max_plus", "max_min", "max_times", "and_or"):
-            return vec.at[jnp.where(ok, self.rows, nr)].max(
-                jnp.where(ok, self.vals, sr.zero), mode="drop")
-        return vec.at[jnp.where(ok, self.rows, nr)].min(
-            jnp.where(ok, self.vals, sr.zero), mode="drop")
+        return scatter_combine(vec, jnp.where(ok, self.rows, nr),
+                               jnp.where(ok, self.vals, sr.zero), sr)
 
     def nnz_host(self) -> int:
         return int(self.nnz)

@@ -38,6 +38,8 @@ __all__ = [
     "intersect_pairs_np",
     "linearize_pairs_np",
     "spgemm_np",
+    "spgemm_reduce_np",
+    "expand_join_coo",
     "dedup_sorted_coo",
     "SENT",
 ]
@@ -217,6 +219,37 @@ def spgemm_np(a_row, a_k, a_val, b_k, b_col, b_val,
     return canonicalize_np(rows, cols, vals, combine=add)
 
 
+def spgemm_reduce_np(a_row, a_k, a_val, b_k, b_col, b_val,
+                     mul: Callable, add_np: np.ufunc, zero: float,
+                     axis: int, n_out: int) -> np.ndarray:
+    """Fused host contraction + ⊕-reduction: never materializes C.
+
+    Computes ``⊕_j C[i, j]`` (``axis=1``, vector over A's row codes) or
+    ``⊕_i C[i, j]`` (``axis=0``, vector over B's col codes) for
+    ``C = A ⊗.⊕ B`` — since ⊕ is associative and commutative the reduction
+    folds directly over the expanded products, so the canonicalize pass (and
+    C's triples) are skipped entirely.  Same operand layout as
+    :func:`spgemm_np`; ``add_np`` must be a true ufunc (``.at`` scatter).
+    Graphulo's server-side combine, on host: one segment scatter per product.
+    """
+    out = np.full(n_out, zero, dtype=np.float64)
+    if len(a_row) == 0 or len(b_k) == 0:
+        return out
+    lo = np.searchsorted(b_k, a_k, side="left")
+    hi = np.searchsorted(b_k, a_k, side="right")
+    counts = hi - lo
+    total = int(counts.sum())
+    if total == 0:
+        return out
+    a_idx = np.repeat(np.arange(len(a_row)), counts)
+    run_base = np.repeat(np.cumsum(counts) - counts, counts)
+    b_idx = np.repeat(lo, counts) + (np.arange(total) - run_base)
+    keys = a_row[a_idx] if axis == 1 else b_col[b_idx]
+    vals = np.asarray(mul(a_val[a_idx], b_val[b_idx]), dtype=np.float64)
+    add_np.at(out, keys, vals)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Device backend: sort + duplicate-run aggregation on fixed-capacity,
 # sentinel-padded rank triples.
@@ -313,3 +346,42 @@ def dedup_sorted_coo(rows, cols, vals, combine, *, zero: float = 0.0,
     r, c, v = r[order2], c[order2], v[order2]
     nnz = (r != SENT).sum().astype(jnp.int32)
     return r, c, v, nnz
+
+
+def expand_join_coo(a_rows, a_cols, a_vals, b_rows, b_cols, b_vals,
+                    mul, *, zero: float, expand: int):
+    """Device sort-merge join of two COO operands — jit/shard_map-safe.
+
+    The device mirror of :func:`spgemm_np`'s expansion step: contraction
+    codes are A's cols and B's rows; B must be in canonical (row, col) order
+    (every canonical COO already is, and rank translation onto merged
+    keyspaces is monotone, so reranked operands stay sorted).  Each A entry
+    expands against its B run via two ``searchsorted`` calls; the expansion
+    is laid out into a **static** ``expand``-sized buffer (products beyond it
+    are dropped — callers size ``expand`` from host-side exact counts, see
+    ``DistAssoc.matmul``).  Returns pre-⊕ product triples
+    ``(rows, cols, vals, total)`` with sentinel padding; ⊕-merging them is
+    one :func:`dedup_sorted_coo` pass (or a direct segment scatter for the
+    fused reduce epilogues, where no merge is needed at all).
+
+    Never densifies: peak memory is the two operands plus ``expand``
+    product slots.
+    """
+    cap_a = a_rows.shape[0]
+    cap_b = b_rows.shape[0]
+    lo = jnp.searchsorted(b_rows, a_cols, side="left")
+    hi = jnp.searchsorted(b_rows, a_cols, side="right")
+    ok = a_rows != SENT
+    counts = jnp.where(ok, hi - lo, 0)
+    cum = jnp.cumsum(counts)
+    total = cum[cap_a - 1] if cap_a else jnp.int32(0)
+    e = jnp.arange(expand, dtype=jnp.int32)
+    # which A entry produced product slot e: first index with cum > e
+    a_of = jnp.clip(jnp.searchsorted(cum, e, side="right"), 0, cap_a - 1)
+    start = cum[a_of] - counts[a_of]
+    b_idx = jnp.clip(lo[a_of] + (e - start), 0, cap_b - 1)
+    valid = e < total
+    rows = jnp.where(valid, a_rows[a_of], SENT)
+    cols = jnp.where(valid, b_cols[b_idx], SENT)
+    vals = jnp.where(valid, mul(a_vals[a_of], b_vals[b_idx]), zero)
+    return rows, cols, vals, total

@@ -9,19 +9,31 @@ shard), and the paper's operations decompose as:
   * element-wise ⊕ / ⊗ — row partitions are disjoint and aligned, so both
     are embarrassingly parallel ``shard_map`` calls (zero collectives);
   * array product ``A ⊗.⊕ B`` — contraction keys live on the row axis of B,
-    so each shard computes a LOCAL product against its B-rows and partial
-    results combine with a ⊕ ``psum`` over `data` — the Graphulo
-    server-side-combine pattern as one collective;
-  * global reductions (row/col ⊕-sums) — local reduce + ``psum``.
+    so with B **broadcast** (replicated triples) each shard computes a
+    LOCAL sparse product against its own rows: an expand-join on rank
+    triples (:func:`repro.core.coo.expand_join_coo`) plus one canonical
+    merge, never densifying.  Row supports are disjoint ⇒ the result is
+    row-sharded on the same boundaries with **zero collectives** — the
+    Graphulo server-side pattern with the combine elided entirely;
+  * fused reductions (``matmul_reduce`` / ``sqout(reduce=)`` / degree) —
+    each shard ⊕-folds its products straight into a dense vector and the
+    partials merge with exactly **one** psum-family collective
+    (:func:`repro.core.semiring.mesh_combine`);
+  * global reductions (row/col ⊕-sums) — local segment scatter + the same
+    one collective.
 
 Shards keep the full keyspaces (host-side, cheap) and static capacity
 ``cap / n_shards``; re-sharding for elasticity is a host-side split by
-row-rank ranges (same code path the checkpoint restore uses).
+row-rank ranges (same code path the checkpoint restore uses).  Sparse-B
+*distribution* strategies (sharding B instead of broadcasting it) are a
+ROADMAP follow-on; ``DistAssoc`` operands are transparently gathered to a
+replicated ``AssocTensor`` today.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,19 +41,129 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .assoc_tensor import AssocTensor
-from .coo import SENT, dedup_sorted_coo
+from .assoc_tensor import (AssocTensor, DISPATCH_STATS, coo_axis_mask_keep,
+                           coo_compact, coo_mask_keep, coo_range_keep)
+from .coo import SENT, dedup_sorted_coo, expand_join_coo
 from .keyspace import KeySpace
-from .semiring import PLUS_TIMES, get_semiring
-
-# semirings whose ⊕ is max (vs min) — picks the scatter/collective pair
-_MAX_LIKE = ("max_plus", "max_min", "max_times", "and_or")
+from .semiring import (PLUS_TIMES, get_semiring, mesh_combine,
+                       scatter_combine)
+from .spgemm import _round_up, pad_to_cap
 
 __all__ = ["DistAssoc"]
 
 
+# ---------------------------------------------------------------------------
+# Cached shard_map programs.  A bare shard_map call re-traces and re-lowers
+# on EVERY invocation (there is no dispatch cache outside jit) — on an
+# 8-shard CPU mesh that is seconds per call.  The matmul-family programs are
+# pure functions of (mesh, semiring, static sizes), so one lru_cache'd
+# jit(shard_map(...)) per signature makes repeated products dispatch-cheap.
+# Semiring is a frozen dataclass and Mesh is hashable: both key cleanly.
+# ---------------------------------------------------------------------------
+
+_COO_SPEC = ("rows", "cols", "vals")
+
+
+@functools.lru_cache(maxsize=256)
+def _matmul_prog(mesh: Mesh, sr, expand: int, out_cap: int):
+    spec = {k: P("data", None) for k in _COO_SPEC}
+    out_spec = {"rows": P("data", None), "cols": P("data", None),
+                "vals": P("data", None), "nnz": P("data"),
+                "true_nnz": P("data")}
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(spec, P(), P(), P()),
+             out_specs=out_spec, check_rep=False)
+    def go(a, br, bc, bv):
+        pr, pc, pv, _ = expand_join_coo(
+            a["rows"][0], a["cols"][0], a["vals"][0], br, bc, bv,
+            sr.mul, zero=sr.zero, expand=expand)
+        r, c, v, nnz = dedup_sorted_coo(pr, pc, pv, sr.add, zero=sr.zero)
+        r, c, v = pad_to_cap(r, c, v, out_cap, sr.zero)
+        # true (pre-clamp) nnz rides along so the eager caller can surface
+        # per-shard capacity overflow instead of truncating silently
+        return {"rows": r[None], "cols": c[None], "vals": v[None],
+                "nnz": jnp.minimum(nnz, out_cap)[None],
+                "true_nnz": nnz[None]}
+
+    return go
+
+
+@functools.lru_cache(maxsize=256)
+def _matmul_reduce_prog(mesh: Mesh, sr, expand: int, n_out: int, axis: int):
+    spec = {k: P("data", None) for k in _COO_SPEC}
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(spec, P(), P(), P()),
+             out_specs=P(), check_rep=False)
+    def go(a, br, bc, bv):
+        pr, pc, pv, _ = expand_join_coo(
+            a["rows"][0], a["cols"][0], a["vals"][0], br, bc, bv,
+            sr.mul, zero=sr.zero, expand=expand)
+        keys = pr if axis == 1 else pc
+        vec = jnp.full((n_out,), sr.zero, jnp.float32)
+        vec = scatter_combine(vec, keys, pv, sr)  # SENT keys drop
+        return mesh_combine(vec, "data", sr)
+
+    return go
+
+
+@functools.lru_cache(maxsize=256)
+def _col_reduce_prog(mesh: Mesh, sr, nc: int, dt):
+    @jax.jit
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P("data"), P("data"), P("data")),
+             out_specs=P(), check_rep=False)
+    def go(cols, vals, rows):
+        ok = rows[0] != SENT
+        vec = jnp.full((nc,), sr.zero, dt)
+        vec = scatter_combine(vec, jnp.where(ok, cols[0], nc),
+                              jnp.where(ok, vals[0], sr.zero), sr)
+        return mesh_combine(vec, "data", sr)
+
+    return go
+
+
+@functools.lru_cache(maxsize=256)
+def _col_degree_prog(mesh: Mesh, nc: int):
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+             out_specs=P(), check_rep=False)
+    def go(cols, rows):
+        ok = rows[0] != SENT
+        vec = jnp.zeros((nc,), jnp.int32)
+        vec = vec.at[jnp.where(ok, cols[0], nc)].add(
+            jnp.where(ok, 1, 0).astype(jnp.int32), mode="drop")
+        return jax.lax.psum(vec, "data")
+
+    return go
+
+
+@functools.lru_cache(maxsize=256)
+def _matvec_prog(mesh: Mesh, sr, nr: int, dt):
+    @jax.jit
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P("data"), P("data"), P("data"), P()),
+             out_specs=P(), check_rep=False)
+    def go(rows, cols, vals, xv):
+        ok = rows[0] != SENT
+        contrib = sr.mul(jnp.where(ok, vals[0], sr.zero).astype(dt),
+                         xv[jnp.clip(cols[0], 0, xv.shape[0] - 1)]
+                         .astype(dt))
+        y = jnp.full((nr,), sr.zero, dt)
+        y = scatter_combine(y, jnp.where(ok, rows[0], nr),
+                            jnp.where(ok, contrib, sr.zero), sr)
+        return mesh_combine(y, "data", sr)
+
+    return go
+
+
 class DistAssoc:
     """Row-partitioned AssocTensor over a mesh's ``data`` axis."""
+
+    # eager metadata default (mirrors AssocTensor.overflow): matmul sets an
+    # instance attribute when a shard truncated its result
+    overflow = False
 
     def __init__(self, local: AssocTensor, mesh: Mesh, *,
                  row_bounds: np.ndarray):
@@ -104,6 +226,23 @@ class DistAssoc:
             a = local.to_assoc()
             merged = a if merged is None else merged + a if a.nnz() else merged
         return merged
+
+    def gather_replicated(self) -> AssocTensor:
+        """All shards' triples as ONE replicated device AssocTensor.
+
+        The broadcast-B step of the distributed product: shard row supports
+        are disjoint and individually canonical, so the gather is a pure
+        re-sort + compaction (:func:`coo_compact`) of the concatenated
+        arrays — no ⊕-merge, and crucially no zero-drop: a stored ``0.0``
+        (legitimate under min/max-family semirings whose ⊕-identity is
+        ±inf) must survive chained products.
+        """
+        rows = self.local.rows.reshape(-1)
+        cols = self.local.cols.reshape(-1)
+        vals = self.local.vals.reshape(-1)
+        r, c, v, nnz = coo_compact(rows, cols, vals, rows != SENT)
+        return AssocTensor(r, c, v, nnz, self.local.row_space,
+                           self.local.col_space, self.local.val_space)
 
     def _local_spec(self):
         """Per-shard COO dict + its shard_map PartitionSpec tree."""
@@ -172,43 +311,59 @@ class DistAssoc:
         keyspaces — every selector form the host ``Assoc`` takes works
         here — then executes shard-locally with zero collectives: row
         partitions are disjoint, so each shard masks and compacts its own
-        COO triples.  Contiguous rank boxes run the shared Pallas
-        range-mask kernel (``repro.kernels.range_extract``); general index
-        sets run one membership gather per shard.  Nothing densifies.
+        COO triples.  Dispatch mirrors ``AssocTensor._selection_keep``:
+        both axes contiguous → the shared Pallas range-mask kernel
+        (``repro.kernels.range_extract``); ONE contiguous axis (e.g. a
+        single-interval ``Match``/``StartsWith``) → the range kernel for
+        that axis plus one membership gather for the other; both scattered
+        → two gathers.  Nothing densifies.
         """
-        from .assoc_tensor import coo_compact, coo_mask_keep, coo_range_keep
         from .select import compile_selector
 
         rc = compile_selector(ij[0], self.local.row_space)
         cc = compile_selector(ij[1], self.local.col_space)
-        as_range = rc.is_range and cc.is_range
-        if as_range:
-            row_arg = jnp.asarray([rc.lo, rc.hi, cc.lo, cc.hi], jnp.int32)
-            col_arg = jnp.zeros((1,), jnp.int32)  # unused placeholder
+        nr = max(len(self.local.row_space), 1)
+        nc = max(len(self.local.col_space), 1)
+        row_is_range, col_is_range = rc.is_range, cc.is_range
+        bounds = jnp.asarray(
+            [rc.lo if row_is_range else 0, rc.hi if row_is_range else nr,
+             cc.lo if col_is_range else 0, cc.hi if col_is_range else nc],
+            jnp.int32)
+        rmask = (jnp.asarray(np.pad(rc.mask(), (0, nr - rc.n)))
+                 if not row_is_range else jnp.zeros((1,), bool))
+        cmask = (jnp.asarray(np.pad(cc.mask(), (0, nc - cc.n)))
+                 if not col_is_range else jnp.zeros((1,), bool))
+        if row_is_range and col_is_range:
+            DISPATCH_STATS["range"] += 1
+        elif row_is_range or col_is_range:
+            DISPATCH_STATS["hybrid"] += 1
         else:
-            nr = max(len(self.local.row_space), 1)
-            nc = max(len(self.local.col_space), 1)
-            row_arg = jnp.asarray(np.pad(rc.mask(), (0, nr - rc.n)))
-            col_arg = jnp.asarray(np.pad(cc.mask(), (0, nc - cc.n)))
+            DISPATCH_STATS["gather"] += 1
 
         a_dict, spec = self._local_spec()
 
         @partial(shard_map, mesh=self.mesh,
-                 in_specs=(spec, P(), P()), out_specs=spec,
+                 in_specs=(spec, P(), P(), P()), out_specs=spec,
                  check_rep=False)
-        def go(a, rsel, csel):
+        def go(a, bnds, rm, cm):
             a0 = jax.tree.map(lambda x: x[0], a)
             # same raw-array primitives as AssocTensor — layers cannot drift
-            if as_range:
-                keep = coo_range_keep(a0["rows"], a0["cols"], rsel)
+            if row_is_range and col_is_range:
+                keep = coo_range_keep(a0["rows"], a0["cols"], bnds)
+            elif row_is_range or col_is_range:
+                keep = coo_range_keep(a0["rows"], a0["cols"], bnds)
+                if not row_is_range:
+                    keep = keep & coo_axis_mask_keep(a0["rows"], rm)
+                if not col_is_range:
+                    keep = keep & coo_axis_mask_keep(a0["cols"], cm)
             else:
-                keep = coo_mask_keep(a0["rows"], a0["cols"], rsel, csel)
+                keep = coo_mask_keep(a0["rows"], a0["cols"], rm, cm)
             r, c, v, nnz = coo_compact(a0["rows"], a0["cols"], a0["vals"],
                                        keep)
             out = {"rows": r, "cols": c, "vals": v, "nnz": nnz}
             return {k: x[None] for k, x in out.items()}
 
-        out = go(a_dict, row_arg, col_arg)
+        out = go(a_dict, bounds, rmask, cmask)
         new_local = AssocTensor(out["rows"], out["cols"], out["vals"],
                                 out["nnz"], self.local.row_space,
                                 self.local.col_space, self.local.val_space)
@@ -216,60 +371,156 @@ class DistAssoc:
 
     # -- global reductions --------------------------------------------------------
     def col_reduce(self, semiring=PLUS_TIMES) -> jnp.ndarray:
-        """⊕ over rows per column → dense [n_cols] (psum over data)."""
+        """⊕ over rows per column → dense [n_cols] (one collective)."""
         sr = get_semiring(semiring)
-        nc = len(self.local.col_space)
-
-        @partial(shard_map, mesh=self.mesh,
-                 in_specs=(P("data"), P("data"), P("data")),
-                 out_specs=P(), check_rep=False)
-        def go(cols, vals, rows):
-            ok = rows[0] != SENT
-            if sr.name == "plus_times":
-                vec = jnp.zeros((nc,), jnp.float32)
-                vec = vec.at[jnp.where(ok, cols[0], nc)].add(
-                    jnp.where(ok, vals[0], 0.0), mode="drop")
-                return jax.lax.psum(vec, "data")
-            vec = jnp.full((nc,), sr.zero, jnp.float32)
-            if sr.name in _MAX_LIKE:
-                vec = vec.at[jnp.where(ok, cols[0], nc)].max(
-                    jnp.where(ok, vals[0], sr.zero), mode="drop")
-                return jax.lax.pmax(vec, "data")
-            vec = vec.at[jnp.where(ok, cols[0], nc)].min(
-                jnp.where(ok, vals[0], sr.zero), mode="drop")
-            return jax.lax.pmin(vec, "data")
-
+        go = _col_reduce_prog(self.mesh, sr, len(self.local.col_space),
+                              self.local.vals.dtype)
         return go(self.local.cols, self.local.vals, self.local.rows)
+
+    def col_degree(self) -> jnp.ndarray:
+        """Stored-entry count per column → dense int32 [n_cols] (one psum).
+
+        The Graphulo degree-table idiom: the logical() + column-⊕ fusion
+        runs shard-locally (one segment scatter over the shard's triples)
+        and the per-shard partial counts merge with a single ``psum``.
+        """
+        go = _col_degree_prog(self.mesh, len(self.local.col_space))
+        return go(self.local.cols, self.local.rows)
 
     def matmul_dense_vec(self, x: jnp.ndarray, semiring=PLUS_TIMES) -> jnp.ndarray:
         """y = A ⊗.⊕ x for a dense vector over the column keyspace.
 
         Row partitions are disjoint: every shard produces its own y rows;
-        combining is a concatenation expressed as a psum of disjoint
-        supports (the Graphulo pushdown pattern).
+        combining is a concatenation expressed as one psum-family
+        collective of disjoint supports (the Graphulo pushdown pattern).
+        Accumulates in the promoted values/operand dtype rather than
+        hardcoded float32.
         """
         sr = get_semiring(semiring)
-        nr = len(self.local.row_space)
-
-        @partial(shard_map, mesh=self.mesh,
-                 in_specs=(P("data"), P("data"), P("data"), P()),
-                 out_specs=P(), check_rep=False)
-        def go(rows, cols, vals, xv):
-            ok = rows[0] != SENT
-            contrib = sr.mul(jnp.where(ok, vals[0], sr.zero),
-                             xv[jnp.clip(cols[0], 0, xv.shape[0] - 1)])
-            y = jnp.full((nr,), sr.zero, jnp.float32)
-            if sr.name == "plus_times":
-                y = jnp.zeros((nr,), jnp.float32).at[
-                    jnp.where(ok, rows[0], nr)].add(
-                    jnp.where(ok, contrib, 0.0), mode="drop")
-                return jax.lax.psum(y, "data")
-            if sr.name in _MAX_LIKE:
-                y = y.at[jnp.where(ok, rows[0], nr)].max(
-                    jnp.where(ok, contrib, sr.zero), mode="drop")
-                return jax.lax.pmax(y, "data")
-            y = y.at[jnp.where(ok, rows[0], nr)].min(
-                jnp.where(ok, contrib, sr.zero), mode="drop")
-            return jax.lax.pmin(y, "data")
-
+        dt = jnp.result_type(self.local.vals.dtype, x.dtype)
+        go = _matvec_prog(self.mesh, sr, len(self.local.row_space), dt)
         return go(self.local.rows, self.local.cols, self.local.vals, x)
+
+    # -- array multiplication (Graphulo pushdown, sharded) -----------------------
+    def _as_replicated_operand(self, other) -> AssocTensor:
+        """Coerce the B operand to a replicated device AssocTensor."""
+        from .assoc import Assoc
+        if isinstance(other, DistAssoc):
+            return other.gather_replicated()
+        if isinstance(other, AssocTensor):
+            return other
+        if isinstance(other, Assoc):
+            return other.to_tensor()
+        raise TypeError(f"cannot multiply DistAssoc by {type(other)!r}")
+
+    def _matmul_prologue(self, other):
+        """Shared setup: logical() strings, align the contraction keyspace,
+        and size the per-shard expand-join buffer from exact host counts.
+
+        (Semiring-independent: this is the sharded-A twin of
+        ``spgemm._contraction_aligned`` — alignment is pure key/rank work.)
+        Returns ``(a_rows, a_cols, a_vals, b, expand)`` where the A arrays
+        are the [n_shards, cap] sharded triples with cols reranked onto the
+        contraction space and ``b`` is the replicated, reranked B tensor.
+        """
+        a_loc = self.local.logical() if not self.local.numeric else self.local
+        b = self._as_replicated_operand(other)
+        b = b.logical() if not b.numeric else b
+        ks, a_map, b_map = a_loc.col_space.union(b.row_space)
+        b = b.reranked(ks, b.col_space, b_map,
+                       np.arange(len(b.col_space), dtype=np.int32))
+        ok = a_loc.rows != SENT
+        cm = jnp.asarray(a_map) if len(a_map) else jnp.zeros(1, jnp.int32)
+        a_cols = jnp.where(ok, cm[jnp.clip(a_loc.cols, 0, cm.shape[0] - 1)],
+                           SENT)
+        # exact per-shard product counts (host): worst shard sizes the
+        # static expansion buffer, so the main path can never overflow
+        b_rows_h = np.asarray(b.rows)
+        a_cols_h = np.asarray(a_cols)
+        a_rows_h = np.asarray(a_loc.rows)
+        lo = np.searchsorted(b_rows_h, a_cols_h.ravel(), side="left")
+        hi = np.searchsorted(b_rows_h, a_cols_h.ravel(), side="right")
+        counts = np.where(a_rows_h.ravel() != int(SENT), hi - lo, 0)
+        per_shard = counts.reshape(a_rows_h.shape).sum(axis=1)
+        expand = int(max(8, _round_up(int(per_shard.max(initial=0)) or 1, 8)))
+        return a_loc.rows, a_cols, a_loc.vals, b, expand
+
+    def matmul(self, other, semiring=PLUS_TIMES, *,
+               out_capacity_per_shard: Optional[int] = None) -> "DistAssoc":
+        """Array multiplication ``A ⊗.⊕ B`` — row-sharded × broadcast-B.
+
+        Each shard runs a LOCAL sparse product of its rows against the
+        replicated B triples (expand-join + one canonical merge — the
+        jit-safe ``coo`` strategy of :mod:`repro.core.spgemm`); because row
+        supports are disjoint the shard outputs ARE the row-sharded result:
+        **zero collectives**, the Graphulo tablet-server product.  ``other``
+        may be an ``AssocTensor``, host ``Assoc``, or another ``DistAssoc``
+        (gathered to replicated — sharded-B strategies are a ROADMAP item).
+        """
+        sr = get_semiring(semiring)
+        a_rows, a_cols, a_vals, b, expand = self._matmul_prologue(other)
+        out_cap = out_capacity_per_shard or expand
+
+        a_dict = {"rows": a_rows, "cols": a_cols, "vals": a_vals}
+        go = _matmul_prog(self.mesh, sr, expand, out_cap)
+        out = go(a_dict, b.rows, b.cols, b.vals)
+        true_nnz = np.asarray(out.pop("true_nnz"))
+        overflowed = bool((true_nnz > out_cap).any())
+        if overflowed:
+            import warnings
+            worst = int(true_nnz.max())
+            warnings.warn(
+                f"DistAssoc.matmul: a shard produced {worst} entries but "
+                f"out_capacity_per_shard is {out_cap}; excess entries were "
+                f"dropped — pass a larger out_capacity_per_shard",
+                RuntimeWarning, stacklevel=2)
+        new_local = AssocTensor(out["rows"], out["cols"], out["vals"],
+                                out["nnz"], self.local.row_space,
+                                b.col_space, None)
+        result = DistAssoc(new_local, self.mesh, row_bounds=self.row_bounds)
+        result.overflow = overflowed
+        return result
+
+    def __matmul__(self, other):
+        return self.matmul(other)
+
+    def matmul_reduce(self, other, axis: int = 1,
+                      semiring=PLUS_TIMES) -> jnp.ndarray:
+        """Fused ``⊕-reduce(A ⊗.⊕ B, axis)`` — one collective, no C.
+
+        Shards ⊕-fold their local products straight into a dense vector
+        (no merge, no sort — ⊕ over every product per row/col IS the
+        answer) and the partials combine with exactly one psum-family
+        collective.  ``axis=1`` → vector over the row keyspace (disjoint
+        supports: the collective is a concatenation); ``axis=0`` → vector
+        over B's col keyspace (true cross-shard ⊕).
+        """
+        assert axis in (0, 1), axis
+        sr = get_semiring(semiring)
+        a_rows, a_cols, a_vals, b, expand = self._matmul_prologue(other)
+        n_out = (len(self.local.row_space) if axis == 1
+                 else len(b.col_space))
+
+        a_dict = {"rows": a_rows, "cols": a_cols, "vals": a_vals}
+        go = _matmul_reduce_prog(self.mesh, sr, expand, n_out, axis)
+        return go(a_dict, b.rows, b.cols, b.vals)
+
+    def sqout(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
+        """AAᵀ — the row-key graph, sharded; ``reduce=0/1`` runs the fused
+        epilogue instead (dense vector over the row keyspace, one
+        collective)."""
+        t = self.gather_replicated().transpose()
+        if reduce is None:
+            return self.matmul(t, semiring)
+        return self.matmul_reduce(t, reduce, semiring)
+
+    def sqin(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
+        """AᵀA — the correlation idiom.  The transpose breaks the row
+        partition, so this runs as gathered-Aᵀ × broadcast-A from the
+        transposed side: exact, but re-sharding the result is the caller's
+        choice; ``reduce=0/1`` for the fused vector."""
+        me = self.gather_replicated()
+        t = me.transpose()
+        if reduce is None:
+            return t.matmul(me, semiring)
+        return t.matmul_reduce(me, reduce, semiring)

@@ -53,9 +53,13 @@ class KeySpace:
 
     @staticmethod
     def _compute_digest(keys: np.ndarray) -> str:
-        return hashlib.sha1(
-            keys.tobytes() if keys.dtype.kind != "U"
-            else "\x00".join(keys.tolist()).encode()).hexdigest()
+        # dtype.str + length disambiguate the fixed-width buffer: a plain
+        # separator join would collide for keys containing the separator
+        # (["a\x00b"] vs ["a", "b"]), and the digest is the sole identity
+        # for the union/compile caches
+        h = hashlib.sha1(f"{keys.dtype.str}:{len(keys)}:".encode())
+        h.update(keys.tobytes())
+        return h.hexdigest()
 
     @classmethod
     def from_sorted_unique(cls, keys: np.ndarray) -> "KeySpace":

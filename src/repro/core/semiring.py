@@ -33,6 +33,8 @@ __all__ = [
     "MAX_TIMES",
     "AND_OR",
     "get_semiring",
+    "scatter_combine",
+    "mesh_combine",
     "REGISTRY",
 ]
 
@@ -59,6 +61,12 @@ class Semiring:
                 the MXU (only the plus-times algebra qualifies).
     idempotent_add: True iff ``a ⊕ a == a`` (max/min-style algebras); such
                 semirings make telemetry merges retry-idempotent.
+    add_kind:   the ⊕ monoid family — ``"sum"``, ``"max"`` or ``"min"``.
+                Every registered ⊕ belongs to one of the three, which is what
+                lets segment accumulation run as a native scatter
+                (:func:`scatter_combine`) and cross-shard reduction as the
+                matching psum-family collective (:func:`mesh_combine`)
+                instead of branching on semiring names at every call site.
     """
 
     name: str
@@ -71,6 +79,7 @@ class Semiring:
     mul_np: Callable[[Any, Any], Any] = np.multiply
     mxu: bool = False
     idempotent_add: bool = False
+    add_kind: str = "sum"
 
     # ---- host/scalar views (numpy-friendly; used by host Assoc + tests) ----
     def add_py(self, a, b):
@@ -98,35 +107,65 @@ class Semiring:
 
 
 def _mk(name, add, mul, zero, one, add_reduce, add_np, mul_np,
-        mxu=False, idem=False) -> Semiring:
+        mxu=False, idem=False, kind="sum") -> Semiring:
     return Semiring(
         name=name, add=add, mul=mul, zero=zero, one=one,
         add_reduce=add_reduce, add_np=add_np, mul_np=mul_np,
-        mxu=mxu, idempotent_add=idem,
+        mxu=mxu, idempotent_add=idem, add_kind=kind,
     )
 
 
 PLUS_TIMES = _mk(
     "plus_times", jnp.add, jnp.multiply, 0.0, 1.0, jnp.sum,
-    np.add, np.multiply, mxu=True)
+    np.add, np.multiply, mxu=True, kind="sum")
 MAX_PLUS = _mk(
     "max_plus", jnp.maximum, jnp.add, -jnp.inf, 0.0, jnp.max,
-    np.maximum, np.add, idem=True)
+    np.maximum, np.add, idem=True, kind="max")
 MIN_PLUS = _mk(
     "min_plus", jnp.minimum, jnp.add, jnp.inf, 0.0, jnp.min,
-    np.minimum, np.add, idem=True)
+    np.minimum, np.add, idem=True, kind="min")
 MAX_MIN = _mk(
     "max_min", jnp.maximum, jnp.minimum, -jnp.inf, jnp.inf, jnp.max,
-    np.maximum, np.minimum, idem=True)
+    np.maximum, np.minimum, idem=True, kind="max")
 MAX_TIMES = _mk(
     "max_times", jnp.maximum, jnp.multiply, 0.0, 1.0, jnp.max,
-    np.maximum, np.multiply, idem=True)
+    np.maximum, np.multiply, idem=True, kind="max")
 # Boolean algebra on {0., 1.}: on this domain ∨ ≡ max and ∧ ≡ min, and the
 # max/min forms stay in floating point so one code path (and one canonical
 # COO merge) serves every semiring on host and device alike.
 AND_OR = _mk(
     "and_or", jnp.maximum, jnp.minimum, 0.0, 1.0, jnp.max,
-    np.maximum, np.minimum, idem=True)
+    np.maximum, np.minimum, idem=True, kind="max")
+
+
+def scatter_combine(vec: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
+                    sr: Semiring, *, mode: str = "drop") -> jnp.ndarray:
+    """Segment-⊕ ``vals`` into ``vec`` at ``idx`` with the semiring's native
+    scatter (``.add`` / ``.max`` / ``.min``) — the one segment-accumulation
+    primitive behind reductions and the fused matmul epilogues.  ``vec`` must
+    be pre-filled with ``sr.zero`` (the scatter is a pure ⊕-merge)."""
+    at = vec.at[idx]
+    if sr.add_kind == "sum":
+        return at.add(vals, mode=mode)
+    if sr.add_kind == "max":
+        return at.max(vals, mode=mode)
+    return at.min(vals, mode=mode)
+
+
+def mesh_combine(x: jnp.ndarray, axis_name: str, sr: Semiring) -> jnp.ndarray:
+    """Cross-shard ⊕ as the psum-family collective matching ``sr.add_kind``.
+
+    Inside ``shard_map`` bodies this is the single combine step of the
+    Graphulo pushdown pattern: shard-local partials (or disjoint-support
+    rows, for which ⊕-with-zero is concatenation) merge in one collective.
+    """
+    import jax
+
+    if sr.add_kind == "sum":
+        return jax.lax.psum(x, axis_name)
+    if sr.add_kind == "max":
+        return jax.lax.pmax(x, axis_name)
+    return jax.lax.pmin(x, axis_name)
 
 REGISTRY: Dict[str, Semiring] = {
     s.name: s

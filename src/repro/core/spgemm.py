@@ -1,0 +1,467 @@
+"""Graphulo-style sparse matmul planner: the one engine behind ``⊗.⊕``.
+
+"D4M: Bringing Associative Arrays to Database Engines" (Graphulo) showed
+that associative-array multiplication scales by pushing the semiring
+contraction — and the reduction that usually follows it — down to the
+sparse storage layer instead of materializing dense intermediates.  This
+module is that pushdown for the device layer: it plans every
+``A ⊗.⊕ B`` on the **host** (block structure, strategy choice, product
+counts — all cheap numpy over the operands' rank triples) and executes it
+on device under one of three strategies:
+
+``dense``
+    Densify both operands onto MXU-aligned adjacency tiles and contract
+    with the Pallas semiring matmul.  Peak memory O(M·K + K·N + M·N) —
+    unbeatable for small or genuinely dense operands, hopeless at scale.
+``bsr``
+    Block-tiled sparse path: pack only the **present** 128×128 tiles of
+    each operand (COO → block mask + packed tiles), contract tile-pairs
+    that share a contraction block (MXU einsum per chunk, VPU slabs for
+    non-MXU semirings), ⊕-scatter into packed output tiles, and emit the
+    result COO **directly from the tiles** — no |rowspace|×|colspace|
+    dense product and no full-space argsort ever exist.  Peak memory is
+    bounded by the present tiles plus the output COO.
+``coo``
+    Expand-join on raw rank triples (:func:`repro.core.coo.expand_join_coo`
+    + one canonical merge).  Fully jit/shard_map-safe — this is the
+    strategy ``DistAssoc`` shards run — and the right choice when operands
+    are tiny or the caller is inside a trace.
+
+Strategy choice (``impl="auto"``) compares modeled footprints::
+
+    dense_cost = Mp·Kp + Kp·Np + Mp·Np          (padded dense operands + C)
+    bsr_cost   = (nA + nB + nPairs + 2·nC) · T  (packed tiles, T = 128²)
+
+and picks ``bsr`` iff it is strictly cheaper — i.e. exactly when the tile
+occupancy is low enough that skipping empty tiles beats the dense MXU
+sweep.  ``impl=`` overrides the choice per call.  ``auto`` never picks
+``coo``: its sequential-expansion layout loses to tiles on device except
+under jit, where the caller knows to ask for it.
+
+The fused epilogues (:func:`matmul_reduce`) compute row/column
+⊕-reductions of ``A ⊗.⊕ B`` — the ``sqin``/``sqout``/degree family —
+without materializing C on **any** path: the dense strategy runs the fused
+``bsr_spgemm_reduce`` Pallas kernel (reduction accumulated in VMEM), the
+bsr strategy folds tile products straight into a vector of length M (or
+N).  Planning is host-side and eager by design: keyspace unions already
+happen on host, so the plan adds one numpy pass over the triples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .coo import SENT, dedup_sorted_coo, expand_join_coo
+from .semiring import PLUS_TIMES, Semiring, get_semiring, scatter_combine
+
+__all__ = ["MatmulPlan", "plan_matmul", "matmul", "matmul_reduce",
+           "bsr_matmul_coo", "pack_tiles", "TILE"]
+
+TILE = 128  # MXU-aligned block edge: bm = bk = bn = 128
+
+# tile-pairs contracted per device dispatch; the MXU einsum touches
+# chunk·(bm·bk + bk·bn + bm·bn) floats, the VPU path adds a [chunk, bm, 32,
+# bn] broadcast slab — both bounded to a few tens of MiB
+_CHUNK_MXU = 64
+_CHUNK_VPU = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class MatmulPlan:
+    """Host-side execution plan for one ``A ⊗.⊕ B``.
+
+    Block structure is expressed per *valid entry* (tile id + intra-tile
+    coords, the scatter targets for tile packing) and per *tile pair*
+    (which A tile meets which B tile, accumulating into which C tile).
+    ``products`` is the exact scalar product count — an upper bound on
+    nnz(C) used to size the output COO.
+    """
+
+    impl: str                    # chosen strategy: "dense" | "bsr"
+    m: int
+    k: int
+    n: int
+    # A entries → packed tiles
+    a_tile_of: np.ndarray
+    a_lr: np.ndarray
+    a_lc: np.ndarray
+    a_blocks: np.ndarray         # [nA, 2] (block-row, block-k)
+    # B entries → packed tiles
+    b_tile_of: np.ndarray
+    b_lr: np.ndarray
+    b_lc: np.ndarray
+    b_blocks: np.ndarray         # [nB, 2] (block-k, block-col)
+    # tile-pair contraction list
+    pair_a: np.ndarray
+    pair_b: np.ndarray
+    pair_c: np.ndarray
+    c_blocks: np.ndarray         # [nC, 2] (block-row, block-col)
+    products: int
+    dense_cost: int
+    bsr_cost: int
+
+
+def pad_to_cap(r: jnp.ndarray, c: jnp.ndarray, v: jnp.ndarray,
+               cap: int, zero: float):
+    """Slice canonical triples to ``cap`` and sentinel-pad the tail."""
+    r, c, v = r[:cap], c[:cap], v[:cap]
+    pad = cap - r.shape[0]
+    if pad > 0:
+        r = jnp.concatenate([r, jnp.full(pad, SENT, jnp.int32)])
+        c = jnp.concatenate([c, jnp.full(pad, SENT, jnp.int32)])
+        v = jnp.concatenate([v, jnp.full(pad, zero, v.dtype)])
+    return r, c, v
+
+
+def _densify_aligned(a, b, sr: Semiring):
+    """Dense-strategy prologue: both adjs on MXU tiles, K widths matched."""
+    da = a.to_dense_adj(zero=sr.zero)
+    db = b.to_dense_adj(zero=sr.zero)
+    kk = max(da.shape[1], db.shape[0])
+    da = jnp.pad(da, ((0, 0), (0, kk - da.shape[1])),
+                 constant_values=sr.zero)
+    db = jnp.pad(db, ((0, kk - db.shape[0]), (0, 0)),
+                 constant_values=sr.zero)
+    return da, db
+
+
+def _exact_products(a_k: np.ndarray, b_k: np.ndarray, k: int) -> int:
+    """Exact scalar product count: ⟨per-k nnz of A, per-k nnz of B⟩."""
+    if k == 0 or len(a_k) == 0 or len(b_k) == 0:
+        return 0
+    return int(np.bincount(a_k, minlength=k).astype(np.int64)
+               @ np.bincount(b_k, minlength=k).astype(np.int64))
+
+
+def _entry_blocks(rows: np.ndarray, cols: np.ndarray, bm: int, bk: int
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Per-entry tile assignment: (tile_of, local_r, local_c, blocks[nT, 2])."""
+    bi = rows // bm
+    bj = cols // bk
+    codes = bi.astype(np.int64) * (2 ** 31) + bj
+    uniq, tile_of = np.unique(codes, return_inverse=True)
+    blocks = np.stack([(uniq // (2 ** 31)).astype(np.int32),
+                       (uniq % (2 ** 31)).astype(np.int32)], axis=1)
+    return tile_of.astype(np.int32), (rows % bm).astype(np.int32), \
+        (cols % bk).astype(np.int32), blocks
+
+
+def plan_matmul(a_rows: np.ndarray, a_cols: np.ndarray,
+                b_rows: np.ndarray, b_cols: np.ndarray,
+                m: int, k: int, n: int, *, impl: str = "auto",
+                bm: int = TILE, bk: int = TILE, bn: int = TILE) -> MatmulPlan:
+    """Plan ``C[i,j] = ⊕_k A[i,k] ⊗ B[k,j]`` over *valid* host rank triples.
+
+    ``a_rows/a_cols`` are A's (row, contraction) codes, ``b_rows/b_cols``
+    B's (contraction, col) codes — valid entries only, no sentinels.  See
+    the module docstring for the strategy heuristic.
+    """
+    a_tile_of, a_lr, a_lc, a_blocks = _entry_blocks(a_rows, a_cols, bm, bk)
+    b_tile_of, b_lr, b_lc, b_blocks = _entry_blocks(b_rows, b_cols, bk, bn)
+
+    # tile-pair join on the contraction block: B blocks are sorted by
+    # (block-k, block-col) already (np.unique), A blocks by (block-row,
+    # block-k) — sort A's k column for the merge
+    a_k = a_blocks[:, 1]
+    b_k = b_blocks[:, 0]
+    a_ord = np.argsort(a_k, kind="stable")
+    lo = np.searchsorted(b_k, a_k[a_ord], side="left")
+    hi = np.searchsorted(b_k, a_k[a_ord], side="right")
+    counts = hi - lo
+    total = int(counts.sum())
+    pair_a = np.repeat(a_ord, counts).astype(np.int32)
+    run_base = np.repeat(np.cumsum(counts) - counts, counts)
+    pair_b = (np.repeat(lo, counts)
+              + (np.arange(total) - run_base)).astype(np.int32)
+    c_codes = (a_blocks[pair_a, 0].astype(np.int64) * (2 ** 31)
+               + b_blocks[pair_b, 1])
+    c_uniq, pair_c = np.unique(c_codes, return_inverse=True)
+    c_blocks = np.stack([(c_uniq // (2 ** 31)).astype(np.int32),
+                         (c_uniq % (2 ** 31)).astype(np.int32)], axis=1)
+
+    products = _exact_products(a_cols, b_rows, k)
+
+    t = bm * bk
+    dense_cost = (_round_up(max(m, 1), bm) * _round_up(max(k, 1), bk)
+                  + _round_up(max(k, 1), bk) * _round_up(max(n, 1), bn)
+                  + _round_up(max(m, 1), bm) * _round_up(max(n, 1), bn))
+    bsr_cost = (len(a_blocks) + len(b_blocks) + total + 2 * len(c_blocks)) * t
+    if impl == "auto":
+        impl = "bsr" if bsr_cost < dense_cost else "dense"
+    return MatmulPlan(impl=impl, m=m, k=k, n=n,
+                      a_tile_of=a_tile_of, a_lr=a_lr, a_lc=a_lc,
+                      a_blocks=a_blocks,
+                      b_tile_of=b_tile_of, b_lr=b_lr, b_lc=b_lc,
+                      b_blocks=b_blocks,
+                      pair_a=pair_a, pair_b=pair_b,
+                      pair_c=pair_c.astype(np.int32), c_blocks=c_blocks,
+                      products=products,
+                      dense_cost=dense_cost, bsr_cost=bsr_cost)
+
+
+def pack_tiles(vals: jnp.ndarray, tile_of: np.ndarray, lr: np.ndarray,
+               lc: np.ndarray, n_tiles: int, br: int, bc: int,
+               zero: float) -> jnp.ndarray:
+    """Scatter valid COO values into packed dense tiles [n_tiles, br, bc]."""
+    tiles = jnp.full((max(n_tiles, 1), br, bc), zero, jnp.float32)
+    if len(tile_of) == 0:
+        return tiles
+    return tiles.at[jnp.asarray(tile_of), jnp.asarray(lr),
+                    jnp.asarray(lc)].set(vals)
+
+
+def _chunk_products(a_part: jnp.ndarray, b_part: jnp.ndarray,
+                    sr: Semiring) -> jnp.ndarray:
+    """Batched tile contraction [c,bm,bk] ⊗.⊕ [c,bk,bn] → [c,bm,bn]."""
+    if sr.mxu:
+        return jnp.einsum("cik,ckj->cij", a_part, b_part,
+                          preferred_element_type=jnp.float32)
+    bk = a_part.shape[2]
+    out = jnp.full((a_part.shape[0], a_part.shape[1], b_part.shape[2]),
+                   sr.zero, jnp.float32)
+    for k0 in range(0, bk, 32):  # VPU slab: keep the broadcast in budget
+        prod = sr.mul(a_part[:, :, k0:k0 + 32, None],
+                      b_part[:, None, k0:k0 + 32, :])
+        out = sr.add(out, sr.add_reduce(prod, axis=2))
+    return out
+
+
+def _warn_overflow(true_nnz: int, capacity: int, what: str) -> None:
+    warnings.warn(
+        f"{what}: result has {true_nnz} entries but capacity {capacity}; "
+        f"{true_nnz - capacity} entries were dropped — pass a larger "
+        f"out_capacity", RuntimeWarning, stacklevel=3)
+
+
+def bsr_matmul_coo(plan: MatmulPlan, a_vals: jnp.ndarray, b_vals: jnp.ndarray,
+                   sr: Semiring, out_capacity: int, *,
+                   bm: int = TILE, bk: int = TILE, bn: int = TILE):
+    """Execute the BSR strategy: packed tiles in, canonical COO out.
+
+    Returns ``(rows, cols, vals, nnz, overflowed)``; the extraction lexsort
+    runs over the **present C tiles only** — never over |rowspace|×
+    |colspace| — so peak memory is tiles + the output COO.
+    """
+    if len(plan.pair_a) == 0:
+        rows = jnp.full(out_capacity, SENT, jnp.int32)
+        return rows, rows, jnp.full(out_capacity, sr.zero, jnp.float32), \
+            jnp.int32(0), False
+
+    a_tiles = pack_tiles(a_vals, plan.a_tile_of, plan.a_lr, plan.a_lc,
+                         len(plan.a_blocks), bm, bk, sr.zero)
+    b_tiles = pack_tiles(b_vals, plan.b_tile_of, plan.b_lr, plan.b_lc,
+                         len(plan.b_blocks), bk, bn, sr.zero)
+    n_c = len(plan.c_blocks)
+    c_tiles = jnp.full((n_c, bm, bn), sr.zero, jnp.float32)
+    chunk = _CHUNK_MXU if sr.mxu else _CHUNK_VPU
+    for p0 in range(0, len(plan.pair_a), chunk):
+        pa = plan.pair_a[p0:p0 + chunk]
+        pb = plan.pair_b[p0:p0 + chunk]
+        pc = plan.pair_c[p0:p0 + chunk]
+        parts = _chunk_products(a_tiles[jnp.asarray(pa)],
+                                b_tiles[jnp.asarray(pb)], sr)
+        c_tiles = scatter_combine(c_tiles, jnp.asarray(pc), parts, sr)
+
+    # tiles → canonical COO: global coords per tile cell, zero-drop,
+    # lexsort over the nC·bm·bn tile cells (bounded by present tiles)
+    ci = jnp.asarray(plan.c_blocks[:, 0], jnp.int32)
+    cj = jnp.asarray(plan.c_blocks[:, 1], jnp.int32)
+    rows_g = (ci[:, None, None] * bm
+              + jnp.arange(bm, dtype=jnp.int32)[None, :, None])
+    cols_g = (cj[:, None, None] * bn
+              + jnp.arange(bn, dtype=jnp.int32)[None, None, :])
+    rows_g = jnp.broadcast_to(rows_g, (n_c, bm, bn)).reshape(-1)
+    cols_g = jnp.broadcast_to(cols_g, (n_c, bm, bn)).reshape(-1)
+    vals_g = c_tiles.reshape(-1)
+    valid = ((vals_g != sr.zero) & (rows_g < plan.m) & (cols_g < plan.n))
+    r = jnp.where(valid, rows_g, SENT)
+    c = jnp.where(valid, cols_g, SENT)
+    v = jnp.where(valid, vals_g, sr.zero)
+    order = jnp.lexsort((c, r))[:out_capacity]
+    r, c, v = r[order], c[order], v[order]
+    true_nnz = int(valid.sum())
+    overflowed = true_nnz > out_capacity
+    if overflowed:
+        _warn_overflow(true_nnz, out_capacity, "bsr_matmul_coo")
+    r, c, v = pad_to_cap(r, c, v, out_capacity, sr.zero)
+    nnz = jnp.int32(min(true_nnz, out_capacity))
+    return r, c, v, nnz, overflowed
+
+
+def _contraction_aligned(a, b, sr: Semiring):
+    """Shared prologue: logical() strings, align the contraction keyspace."""
+    a = a.logical() if not a.numeric else a
+    b = b.logical() if not b.numeric else b
+    ks, a_map, b_map = a.col_space.union(b.row_space)
+    a = a.reranked(a.row_space, ks,
+                   np.arange(len(a.row_space), dtype=np.int32), a_map)
+    b = b.reranked(ks, b.col_space, b_map,
+                   np.arange(len(b.col_space), dtype=np.int32))
+    return a, b, ks
+
+
+def _valid_host(t) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Host copies of the valid (row, col) rank codes of an AssocTensor."""
+    nnz = int(t.nnz)
+    return (np.asarray(t.rows)[:nnz].astype(np.int64),
+            np.asarray(t.cols)[:nnz].astype(np.int64), nnz)
+
+
+def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
+           out_capacity: Optional[int] = None, use_kernel: bool = True):
+    """Array multiplication ``A ⊗.⊕ B`` for device AssocTensors, planned.
+
+    ``impl``: ``"auto"`` (heuristic), ``"dense"``, ``"bsr"`` or ``"coo"``
+    (see module docstring).  ``use_kernel=False`` keeps the dense strategy
+    on the jnp reference contraction (test oracle).  Eager/host-driven —
+    inside a jit trace use ``impl="coo"`` building blocks directly.
+    """
+    from .assoc_tensor import AssocTensor
+
+    if impl not in ("auto", "dense", "bsr", "coo"):
+        raise ValueError(f"unknown matmul impl {impl!r}; "
+                         f"expected auto/dense/bsr/coo")
+    sr = get_semiring(semiring)
+    a, b, ks = _contraction_aligned(a, b, sr)
+    m, k, n = len(a.row_space), len(ks), len(b.col_space)
+    ra, ca, na = _valid_host(a)
+    rb, cb, nb = _valid_host(b)
+
+    def _cap(products: int) -> int:
+        return out_capacity or max(8, _round_up(
+            min(products, max(m, 1) * max(n, 1)) or 8, 8))
+
+    if impl == "coo":
+        # no tile planning needed: the expansion size is the exact product
+        # count, one bincount dot over the contraction codes
+        products = _exact_products(ca, rb, k)
+        cap = _cap(products)
+        expand = max(8, _round_up(max(products, 1), 8))
+        pr, pc, pv, _ = expand_join_coo(a.rows, a.cols, a.vals,
+                                        b.rows, b.cols, b.vals,
+                                        sr.mul, zero=sr.zero, expand=expand)
+        r, c, v, nnz = dedup_sorted_coo(pr, pc, pv, sr.add, zero=sr.zero)
+        true_nnz = int(nnz)
+        overflowed = true_nnz > cap
+        if overflowed:
+            _warn_overflow(true_nnz, cap, "matmul[coo]")
+        r, c, v = pad_to_cap(r, c, v, cap, sr.zero)
+        out = AssocTensor(r, c, v, jnp.minimum(nnz, cap),
+                          a.row_space, b.col_space, None)
+        out.overflow = overflowed
+        return out
+
+    def _dense(cap: int) -> "AssocTensor":
+        da, db = _densify_aligned(a, b, sr)
+        if use_kernel:
+            from repro.kernels.semiring_matmul.ops import semiring_matmul
+            dc = semiring_matmul(da, db, semiring=sr)
+        else:
+            dc = sr.matmul_dense(da, db)
+        return AssocTensor.from_dense_adj(dc, a.row_space, b.col_space, cap,
+                                          zero=sr.zero)
+
+    if impl == "dense":
+        # explicit dense: no tile-pair planning needed, only the product
+        # count for the default capacity
+        return _dense(_cap(_exact_products(ca, rb, k)))
+
+    plan = plan_matmul(ra, ca, rb, cb, m, k, n, impl=impl)
+    cap = _cap(plan.products)
+    if plan.impl == "dense":
+        return _dense(cap)
+
+    r, c, v, nnz, overflowed = bsr_matmul_coo(plan, a.vals[:na],
+                                              b.vals[:nb], sr, cap)
+    out = AssocTensor(r, c, v, nnz, a.row_space, b.col_space, None)
+    out.overflow = overflowed
+    return out
+
+
+def matmul_reduce(a, b, axis: int, semiring=PLUS_TIMES, *,
+                  impl: str = "auto", kernel_impl: str = "auto"
+                  ) -> jnp.ndarray:
+    """Fused ``⊕-reduce(A ⊗.⊕ B, axis)`` — C is never materialized.
+
+    ``axis=1`` ⊕-folds over columns → vector over ``a.row_space``;
+    ``axis=0`` ⊕-folds over rows → vector over ``b.col_space``.  The
+    reduction monoid is the semiring's own ⊕ (the only choice for which
+    the fusion ``⊕_j ⊕_k A[i,k] ⊗ B[k,j]`` is exact).  Strategy mirrors
+    :func:`matmul`; the dense strategy runs the fused
+    ``bsr_spgemm_reduce`` Pallas kernel (``kernel_impl`` forwards to its
+    dispatch — ``"interpret"`` exercises the kernel body on CPU).
+    """
+    from repro.kernels.bsr_spgemm.ops import bsr_spgemm_reduce, make_block_mask
+
+    assert axis in (0, 1), axis
+    if impl not in ("auto", "dense", "bsr", "coo"):
+        raise ValueError(f"unknown matmul impl {impl!r}; "
+                         f"expected auto/dense/bsr/coo")
+    sr = get_semiring(semiring)
+    a, b, ks = _contraction_aligned(a, b, sr)
+    m, k, n = len(a.row_space), len(ks), len(b.col_space)
+    out_len = m if axis == 1 else n
+    ra, ca, na = _valid_host(a)
+    rb, cb, nb = _valid_host(b)
+    if na == 0 or nb == 0 or out_len == 0:
+        return jnp.full(max(out_len, 0), sr.zero, jnp.float32)
+
+    if impl == "coo":
+        # expand-join + one segment scatter: the jit-safe fused epilogue
+        # (the same shape DistAssoc shards run, minus the collective)
+        products = _exact_products(ca, rb, k)
+        expand = max(8, _round_up(max(products, 1), 8))
+        pr, pc, pv, _ = expand_join_coo(a.rows, a.cols, a.vals,
+                                        b.rows, b.cols, b.vals,
+                                        sr.mul, zero=sr.zero, expand=expand)
+        keys = pr if axis == 1 else pc
+        vec = jnp.full(out_len, sr.zero, jnp.float32)
+        return scatter_combine(vec, keys, pv, sr)  # SENT keys drop
+
+    def _dense() -> jnp.ndarray:
+        da, db = _densify_aligned(a, b, sr)
+        mask = make_block_mask(a.rows, a.cols, a.valid_mask(),
+                               da.shape[0] // TILE, da.shape[1] // TILE)
+        vec = bsr_spgemm_reduce(da, mask, db, axis=axis, semiring=sr,
+                                impl=kernel_impl)
+        return vec[:out_len]
+
+    if impl == "dense":
+        return _dense()  # uses no plan fields: skip the tile-pair join
+
+    plan = plan_matmul(ra, ca, rb, cb, m, k, n, impl=impl)
+    if plan.impl == "dense":
+        return _dense()
+
+    # bsr strategy: fold tile products straight into the output vector —
+    # no C tiles, no dedup (⊕ over all products per row/col IS the answer)
+    a_tiles = pack_tiles(a.vals[:na], plan.a_tile_of, plan.a_lr, plan.a_lc,
+                         len(plan.a_blocks), TILE, TILE, sr.zero)
+    b_tiles = pack_tiles(b.vals[:nb], plan.b_tile_of, plan.b_lr, plan.b_lc,
+                         len(plan.b_blocks), TILE, TILE, sr.zero)
+    padded = _round_up(max(out_len, 1), TILE)
+    vec = jnp.full(padded, sr.zero, jnp.float32)
+    chunk = _CHUNK_MXU if sr.mxu else _CHUNK_VPU
+    offs = jnp.arange(TILE, dtype=jnp.int32)
+    for p0 in range(0, len(plan.pair_a), chunk):
+        pa = plan.pair_a[p0:p0 + chunk]
+        pb = plan.pair_b[p0:p0 + chunk]
+        parts = _chunk_products(a_tiles[jnp.asarray(pa)],
+                                b_tiles[jnp.asarray(pb)], sr)
+        if axis == 1:
+            pvec = sr.add_reduce(parts, axis=2)            # [c, bm]
+            blk = jnp.asarray(plan.a_blocks[pa, 0], jnp.int32)
+        else:
+            pvec = sr.add_reduce(parts, axis=1)            # [c, bn]
+            blk = jnp.asarray(plan.b_blocks[pb, 1], jnp.int32)
+        idx = blk[:, None] * TILE + offs[None, :]
+        vec = scatter_combine(vec, idx, pvec, sr)
+    return vec[:out_len]

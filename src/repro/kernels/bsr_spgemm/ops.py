@@ -1,4 +1,4 @@
-"""Jitted wrapper + block-mask construction from padded COO."""
+"""Jitted wrappers + block-mask construction from padded COO."""
 from __future__ import annotations
 
 from functools import partial
@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.semiring import get_semiring
-from .bsr_spgemm import bsr_spgemm_pallas
-from .ref import bsr_spgemm_ref
+from .bsr_spgemm import bsr_spgemm_pallas, bsr_spgemm_reduce_pallas
+from .ref import bsr_spgemm_ref, bsr_spgemm_reduce_ref
 
 
 def make_block_mask(rows, cols, valid, mb: int, kb: int, *, bm=128, bk=128):
@@ -29,3 +29,27 @@ def bsr_spgemm(a, block_mask, b, *, semiring="plus_times", impl="auto",
         return bsr_spgemm_ref(a, block_mask, b, semiring=sr, bm=bm, bk=bk)
     return bsr_spgemm_pallas(a, block_mask, b, semiring=sr, bm=bm, bn=bn,
                              bk=bk, interpret=(impl == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("axis", "semiring", "impl",
+                                   "bm", "bn", "bk"))
+def bsr_spgemm_reduce(a, block_mask, b, *, axis: int,
+                      semiring="plus_times", impl="auto",
+                      bm: int = 128, bn: int = 128, bk: int | None = None):
+    """Fused ``⊕-reduce(A ⊗.⊕ B, axis)`` → vector ([M] for axis=1, [N] for 0).
+
+    The product is never materialized: the Pallas kernel folds tile
+    products into a VMEM vector-of-partials accumulator and this wrapper
+    ⊕-folds the residual 128 lanes / 8 sublanes.  The jnp ref path is the
+    unfused oracle (materialize-then-reduce) used on non-TPU backends.
+    """
+    sr = get_semiring(semiring)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return bsr_spgemm_reduce_ref(a, block_mask, b, axis=axis,
+                                     semiring=sr, bm=bm, bk=bk)
+    part = bsr_spgemm_reduce_pallas(a, block_mask, b, axis=axis, semiring=sr,
+                                    bm=bm, bn=bn, bk=bk,
+                                    interpret=(impl == "interpret"))
+    return sr.add_reduce(part, axis=axis)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle: mask-expanded semiring matmul."""
+"""Pure-jnp oracles: mask-expanded semiring matmul (+ fused reduction)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -15,3 +15,12 @@ def bsr_spgemm_ref(a, block_mask, b, *, semiring="plus_times",
     mask_full = jnp.repeat(jnp.repeat(block_mask != 0, bm, axis=0), bk, axis=1)
     a_masked = jnp.where(mask_full, a.astype(jnp.float32), sr.zero)
     return sr.matmul_dense(a_masked, b.astype(jnp.float32)).astype(jnp.float32)
+
+
+def bsr_spgemm_reduce_ref(a, block_mask, b, *, axis: int,
+                          semiring="plus_times",
+                          bm: int = 128, bk: int | None = None):
+    """Unfused oracle: materialize C, then ⊕-reduce it along ``axis``."""
+    sr = get_semiring(semiring)
+    c = bsr_spgemm_ref(a, block_mask, b, semiring=sr, bm=bm, bk=bk)
+    return sr.add_reduce(c, axis=axis)

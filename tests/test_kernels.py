@@ -152,7 +152,12 @@ from repro.kernels.bsr_spgemm.ops import bsr_spgemm, make_block_mask
 from repro.kernels.bsr_spgemm.ref import bsr_spgemm_ref
 
 
-@pytest.mark.parametrize("sr", ["plus_times", "max_plus"])
+from repro.core.semiring import REGISTRY as _SR_REGISTRY
+
+
+# semiring-generic accumulation: the block-skip kernel must match the jnp
+# oracle for EVERY registered algebra, not just the MXU-friendly ones
+@pytest.mark.parametrize("sr", sorted(_SR_REGISTRY))
 @pytest.mark.parametrize("mb,kb,n", [(2, 2, 128), (4, 3, 256)])
 def test_bsr_spgemm(sr, mb, kb, n):
     a = jnp.asarray(rng.normal(size=(mb * 128, kb * 128)).astype(np.float32))

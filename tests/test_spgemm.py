@@ -1,0 +1,378 @@
+"""Graphulo-style sparse matmul engine: 3-layer parity + fused epilogues.
+
+The contract under test: ``Assoc.matmul == AssocTensor.matmul ==
+DistAssoc.matmul`` for every registered semiring, across every execution
+strategy (``dense`` / ``bsr`` / ``coo``), on rectangular shapes, empty
+operands and capacity-overflow cases — and the fused ``matmul_reduce``
+epilogues equal the unfused materialize-then-reduce oracle everywhere.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import Assoc, AssocTensor, REGISTRY
+from repro.core.spgemm import matmul_reduce, plan_matmul
+
+rng = np.random.default_rng(7)
+
+
+def _random_pair(n=60, nr=30, nk=30, nc=20, seed=3):
+    r = np.random.default_rng(seed)
+    rows = r.integers(0, nr, n).astype(str)
+    cols = r.integers(0, nk, n).astype(str)
+    vals = r.uniform(0.5, 5.0, n)
+    rows2 = r.integers(0, nk, n).astype(str)
+    cols2 = r.integers(0, nc, n).astype(str)
+    vals2 = r.uniform(0.5, 5.0, n)
+    ha = Assoc(rows, cols, vals, aggregate="sum")
+    hb = Assoc(rows2, cols2, vals2, aggregate="sum")
+    da = AssocTensor.from_triples(rows, cols, vals, aggregate="sum",
+                                  capacity=64)
+    db = AssocTensor.from_triples(rows2, cols2, vals2, aggregate="sum",
+                                  capacity=64)
+    return ha, hb, da, db
+
+
+def _close(got: dict, want: dict, tol=1e-3):
+    assert set(got) == set(want)
+    for k in want:
+        assert abs(got[k] - want[k]) <= tol * (1 + abs(want[k])), \
+            (k, got[k], want[k])
+
+
+# --------------------------- matmul parity -----------------------------------
+
+@pytest.mark.parametrize("sr_name", sorted(REGISTRY))
+@pytest.mark.parametrize("impl", ["dense", "bsr", "coo"])
+def test_matmul_parity(sr_name, impl):
+    sr = REGISTRY[sr_name]
+    ha, hb, da, db = _random_pair()
+    want = ha.matmul(hb, sr).to_dict()
+    got = da.matmul(db, sr, impl=impl, use_kernel=False).to_assoc().to_dict()
+    _close(got, want)
+
+
+def test_matmul_rectangular_shapes():
+    ha, hb, da, db = _random_pair(n=40, nr=50, nk=10, nc=5, seed=11)
+    _close(da.matmul(db, impl="bsr", use_kernel=False).to_assoc().to_dict(),
+           ha.matmul(hb).to_dict())
+
+
+def test_matmul_empty_operands():
+    ha, hb, da, db = _random_pair()
+    empty_d = AssocTensor.from_triples(["x"], ["y"], [1.0], capacity=8)
+    empty_d = empty_d[("zz", "zz"), :]   # no keys selected ⇒ nnz 0
+    for impl in ("dense", "bsr", "coo"):
+        out = da.matmul(empty_d, impl=impl, use_kernel=False)
+        assert out.nnz_host() == 0
+    # disjoint contraction keyspaces ⇒ empty product
+    dc = AssocTensor.from_triples(["q"], ["zzz"], [1.0], capacity=8)
+    for impl in ("dense", "bsr", "coo"):
+        assert dc.matmul(db, impl=impl, use_kernel=False).nnz_host() == 0
+
+
+def test_matmul_auto_matches_override():
+    ha, hb, da, db = _random_pair(seed=13)
+    want = da.matmul(db, impl="dense", use_kernel=False).to_assoc().to_dict()
+    _close(da.matmul(db, use_kernel=False).to_assoc().to_dict(), want)
+
+
+def test_bsr_path_never_densifies(monkeypatch):
+    """The acceptance bound: the BSR strategy must not touch the dense adj."""
+    ha, hb, da, db = _random_pair(seed=17)
+
+    def boom(self, **kw):
+        raise AssertionError("BSR path densified the adjacency")
+
+    monkeypatch.setattr(AssocTensor, "to_dense_adj", boom)
+    monkeypatch.setattr(AssocTensor, "from_dense_adj", staticmethod(boom))
+    got = da.matmul(db, impl="bsr", use_kernel=False).to_assoc().to_dict()
+    _close(got, ha.matmul(hb).to_dict())
+
+
+def test_out_capacity_overflow_warns():
+    ha, hb, da, db = _random_pair(seed=19)
+    full = da.matmul(db, impl="bsr", use_kernel=False)
+    nnz = full.nnz_host()
+    assert nnz > 8 and not bool(full.overflow)
+    for impl in ("bsr", "coo"):
+        with pytest.warns(RuntimeWarning, match="capacity"):
+            cut = da.matmul(db, impl=impl, use_kernel=False, out_capacity=8)
+        assert cut.nnz_host() == 8 and bool(cut.overflow)
+        # the kept prefix is the canonical (row, col) order head
+        kept = cut.to_assoc().to_dict()
+        assert set(kept).issubset(set(full.to_assoc().to_dict()))
+
+
+def test_from_dense_adj_overflow_flag_and_warning():
+    import jax.numpy as jnp
+    from repro.core.keyspace import KeySpace
+
+    ks = KeySpace(np.asarray(["a", "b", "c"]))
+    dense = jnp.asarray(np.arange(1.0, 10.0).reshape(3, 3))
+    with pytest.warns(RuntimeWarning, match="exceed capacity"):
+        t = AssocTensor.from_dense_adj(dense, ks, ks, 4)
+    assert bool(t.overflow) and t.nnz_host() == 4
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ok = AssocTensor.from_dense_adj(dense, ks, ks, 16)
+    assert not bool(ok.overflow) and ok.nnz_host() == 9
+
+
+# --------------------------- strategy heuristic ------------------------------
+
+def test_plan_heuristic_sparse_picks_bsr():
+    # 3 entries scattered over a 4096×4096 space: tiles ≪ dense
+    a_r = np.asarray([0, 2000, 4000])
+    a_c = np.asarray([1, 2001, 4001])
+    plan = plan_matmul(a_r, a_c, a_c, a_r, 4096, 4096, 4096)
+    assert plan.impl == "bsr"
+    assert plan.bsr_cost < plan.dense_cost
+
+
+def test_plan_heuristic_small_picks_dense():
+    a_r = np.asarray([0, 1, 2, 3])
+    a_c = np.asarray([0, 1, 2, 3])
+    plan = plan_matmul(a_r, a_c, a_c, a_r, 8, 8, 8)
+    assert plan.impl == "dense"
+
+
+def test_plan_impl_override():
+    a_r = np.asarray([0, 1])
+    a_c = np.asarray([0, 1])
+    assert plan_matmul(a_r, a_c, a_c, a_r, 8, 8, 8, impl="bsr").impl == "bsr"
+
+
+def test_plan_products_exact():
+    # A has 2 entries on k=0, B has 3 entries on k=0 ⇒ 6 products
+    plan = plan_matmul(np.asarray([0, 1]), np.asarray([0, 0]),
+                       np.asarray([0, 0, 0]), np.asarray([0, 1, 2]),
+                       2, 1, 3)
+    assert plan.products == 6
+
+
+# --------------------------- fused epilogues ---------------------------------
+
+def _reduce_oracle(ha, hb, sr, axis, space):
+    """Unfused oracle: host matmul, then ⊕-fold its triples per key rank."""
+    c = ha.matmul(hb, sr)
+    out = np.full(len(space), sr.zero)
+    r, cc, v = c.triples()
+    keys = r if axis == 1 else cc
+    rk, _ = space.rank(keys)
+    sr.add_np.at(out, rk, v)
+    return out
+
+
+@pytest.mark.parametrize("sr_name", sorted(REGISTRY))
+@pytest.mark.parametrize("axis", [0, 1])
+@pytest.mark.parametrize("impl", ["dense", "bsr", "coo"])
+def test_matmul_reduce_parity(sr_name, axis, impl):
+    sr = REGISTRY[sr_name]
+    ha, hb, da, db = _random_pair(seed=23)
+    space = da.row_space if axis == 1 else db.col_space
+    want = _reduce_oracle(ha, hb, sr, axis, space)
+    got = np.asarray(matmul_reduce(da, db, axis, sr, impl=impl))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("sr_name", sorted(REGISTRY))
+@pytest.mark.parametrize("axis", [0, 1])
+def test_host_matmul_reduce_parity(sr_name, axis):
+    sr = REGISTRY[sr_name]
+    ha, hb, _, _ = _random_pair(seed=29)
+    from repro.core.keyspace import KeySpace
+    space = KeySpace.from_sorted_unique(ha.row if axis == 1 else hb.col)
+    want = _reduce_oracle(ha, hb, sr, axis, space)
+    got = ha.matmul_reduce(hb, axis, sr)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_sq_fused_vs_unfused():
+    ha, _, da, _ = _random_pair(seed=31)
+    want_out = _reduce_oracle(ha, ha.transpose(), REGISTRY["plus_times"], 1,
+                              da.row_space)
+    np.testing.assert_allclose(np.asarray(da.sqout(reduce=1)), want_out,
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(ha.sqout(reduce=1), want_out,
+                               rtol=1e-6, atol=1e-6)
+    # unfused square parity while we're here
+    _close(da.sqout().to_assoc().to_dict(), ha.sqout().to_dict())
+    _close(da.sqin().to_assoc().to_dict(), ha.sqin().to_dict())
+
+
+def test_matmul_reduce_empty():
+    _, _, da, db = _random_pair(seed=37)
+    empty = da[("zz", "zz"), :]
+    out = np.asarray(matmul_reduce(empty, db, 1))
+    assert out.shape == (len(empty.row_space),)
+    assert (out == 0.0).all()
+
+
+# --------------------------- fused kernel (interpret) ------------------------
+
+@pytest.mark.parametrize("sr_name", sorted(REGISTRY))
+@pytest.mark.parametrize("axis", [0, 1])
+def test_bsr_spgemm_reduce_kernel_interpret(sr_name, axis):
+    import jax.numpy as jnp
+    from repro.kernels.bsr_spgemm.ops import bsr_spgemm_reduce
+    from repro.kernels.bsr_spgemm.ref import bsr_spgemm_reduce_ref
+
+    a = jnp.asarray(rng.normal(size=(256, 384)).astype(np.float32))
+    mask = jnp.asarray((rng.random((2, 3)) > 0.4).astype(np.int32))
+    b = jnp.asarray(rng.normal(size=(384, 256)).astype(np.float32))
+    got = bsr_spgemm_reduce(a, mask, b, axis=axis, semiring=sr_name,
+                            impl="interpret")
+    want = bsr_spgemm_reduce_ref(a, mask, b, axis=axis, semiring=sr_name)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------- hybrid selector dispatch ------------------------
+
+def test_hybrid_selection_uses_range_kernel():
+    from repro.core.assoc_tensor import DISPATCH_STATS
+    from repro.core.select import Keys, Match
+
+    rows = [f"r{i}" for i in range(10)]
+    cols = [f"c{i % 7}" for i in range(10)]
+    vals = np.arange(1.0, 11.0)
+    host = Assoc(rows, cols, vals)
+    dev = AssocTensor.from_triples(rows, cols, vals, capacity=16)
+    # Match on a prefix block compiles to ONE contiguous rank interval;
+    # the scattered col set forces the other axis onto the gather path
+    row_sel = Match("^r[0-3]")
+    col_sel = Keys(["c0", "c2", "c6"])
+    before = dict(DISPATCH_STATS)
+    got = dev[row_sel, col_sel].to_assoc().to_dict()
+    assert DISPATCH_STATS["hybrid"] == before["hybrid"] + 1
+    assert got == pytest.approx(host[row_sel, col_sel].to_dict())
+    # both contiguous stays on the pure range path
+    before = dict(DISPATCH_STATS)
+    dev[Match("^r"), :]
+    assert DISPATCH_STATS["range"] == before["range"] + 1
+    # both scattered stays on the pure gather path
+    before = dict(DISPATCH_STATS)
+    dev[Keys(["r0", "r5"]), Keys(["c0", "c2"])]
+    assert DISPATCH_STATS["gather"] == before["gather"] + 1
+
+
+def test_gather_replicated_keeps_zero_values():
+    """A stored 0.0 (legit when the semiring zero is ±inf) must survive the
+    broadcast-B gather — chained min_plus products depend on it."""
+    import jax
+    from repro.core import MIN_PLUS
+    from repro.core.dist_assoc import DistAssoc
+
+    mesh = jax.make_mesh((1,), ("data",))  # single-shard: runs in-process
+    da = DistAssoc.from_triples(["a"], ["b"], [1.0], mesh)
+    bt = AssocTensor.from_triples(["b"], ["c"], [-1.0], capacity=8)
+    c = da.matmul(bt, MIN_PLUS)            # ('a','c') = 1 + (-1) = 0.0
+    from repro.core import INT_SENTINEL
+    g = c.gather_replicated()
+    assert int(g.nnz) == 1
+    assert float(g.vals[0]) == 0.0 and int(g.rows[0]) != INT_SENTINEL
+    # and the chained product still sees it
+    dt = AssocTensor.from_triples(["c"], ["d"], [3.0], capacity=8)
+    chained = c.matmul(dt, MIN_PLUS).to_assoc()
+    assert chained is not None and ("a", "d") in chained.to_dict()
+
+
+# --------------------------- DistAssoc (multi-shard mesh) --------------------
+
+DIST_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core.dist_assoc import DistAssoc
+    from repro.core import Assoc, AssocTensor, REGISTRY
+
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    n = 64
+    rows = rng.integers(0, 40, n).astype(str)
+    cols = rng.integers(0, 40, n).astype(str)
+    vals = rng.uniform(0.5, 5.0, n)
+    rows2 = rng.integers(0, 40, n).astype(str)
+    cols2 = rng.integers(0, 30, n).astype(str)
+    vals2 = rng.uniform(0.5, 5.0, n)
+
+    da = DistAssoc.from_triples(rows, cols, vals, mesh, aggregate="sum")
+    ha = Assoc(rows, cols, vals, aggregate="sum")
+    hb = Assoc(rows2, cols2, vals2, aggregate="sum")
+    db = AssocTensor.from_triples(rows2, cols2, vals2, aggregate="sum",
+                                  capacity=64)
+
+    def close(got, want, tol=1e-3):
+        assert set(got) == set(want), (len(got), len(want))
+        for k in want:
+            assert abs(got[k] - want[k]) <= tol * (1 + abs(want[k])), k
+
+    # 3-layer parity: host == single-device (bsr) == dist, per semiring
+    for name in ("plus_times", "min_plus", "max_min"):
+        sr = REGISTRY[name]
+        want = ha.matmul(hb, sr).to_dict()
+        close(da.matmul(db, sr).to_assoc().to_dict(), want)
+        close(AssocTensor.from_triples(rows, cols, vals, aggregate="sum",
+                                       capacity=64)
+              .matmul(db, sr, impl="bsr", use_kernel=False)
+              .to_assoc().to_dict(), want)
+        # fused epilogue vs unfused oracle
+        for ax in (0, 1):
+            space = da.local.row_space if ax == 1 else db.col_space
+            want_v = np.full(len(space), sr.zero)
+            r_, c_, v_ = ha.matmul(hb, sr).triples()
+            rk, _ = space.rank(r_ if ax == 1 else c_)
+            sr.add_np.at(want_v, rk, v_)
+            got_v = np.asarray(da.matmul_reduce(db, ax, sr))
+            np.testing.assert_allclose(got_v, want_v, rtol=1e-3, atol=1e-3)
+
+    # DistAssoc × DistAssoc (gathered broadcast-B)
+    db_dist = DistAssoc.from_triples(rows2, cols2, vals2, mesh,
+                                     aggregate="sum")
+    close(da.matmul(db_dist).to_assoc().to_dict(), ha.matmul(hb).to_dict())
+
+    # per-shard capacity overflow warns instead of truncating silently
+    import warnings as _w
+    with _w.catch_warnings(record=True) as caught:
+        _w.simplefilter("always")
+        cut = da.matmul(db, out_capacity_per_shard=2)
+    assert cut.overflow and any("out_capacity_per_shard" in str(w.message)
+                                for w in caught)
+
+    # sqout + fused sqout + col_degree
+    close(da.sqout().to_assoc().to_dict(), ha.sqout().to_dict())
+    dense = np.zeros((len(da.local.row_space), len(da.local.col_space)))
+    r, c, v = ha.triples()
+    rr, _ = da.local.row_space.rank(r)
+    cc, _ = da.local.col_space.rank(c)
+    dense[rr, cc] = v
+    sq = dense @ dense.T
+    np.testing.assert_allclose(np.asarray(da.sqout(reduce=1)), sq.sum(1),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(da.col_degree()),
+                                  (dense != 0).sum(0))
+    # dtype-respecting dense matvec (satellite): f32 in, f32 out
+    x = rng.uniform(0, 1, len(da.local.col_space)).astype(np.float32)
+    y = da.matmul_dense_vec(jnp.asarray(x))
+    assert y.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=1e-4,
+                               atol=1e-4)
+    print(json.dumps({"ok": True}))
+""")
+
+
+@pytest.mark.slow
+def test_dist_matmul_parity_8dev():
+    p = subprocess.run([sys.executable, "-c", DIST_PROG],
+                       capture_output=True, text=True, timeout=900)
+    assert p.returncode == 0, p.stderr[-3000:]
+    last = [l for l in p.stdout.strip().splitlines() if l.startswith("{")][-1]
+    assert json.loads(last)["ok"], p.stdout
