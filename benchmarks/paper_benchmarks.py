@@ -378,6 +378,91 @@ def run_matmul(n_lo: int = 5, n_hi: int = 12, device: bool = True
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Pipeline benchmarks: eager chain vs planned lazy pipeline (the deferred
+# expression API, repro.core.expr/plan) on the clustered-sparse regime.
+#
+# Two paper-style pipelines per n:
+#   * smr   — (A[sel, :] @ B[:, sel]).sum(axis=1): eager slices both
+#     operands (two selection/compaction passes), materializes C and then
+#     reduces it; the planned pipeline compiles the selectors straight
+#     into the spgemm plan (sliced tile lists, no slice arrays) and
+#     collapses the reduce onto the fused matmul_reduce epilogue — C never
+#     exists either.
+#   * ewise — A ⊕ B ⊕ A ⊕ B: three canonicalize passes eager, ONE fused
+#     n-ary pass planned.
+# Selectors are half-open key ranges over the zero-padded decimal keys
+# (contiguous rank ranges — the compiled fast-path form).
+# ---------------------------------------------------------------------------
+
+def run_pipeline(n_lo: int = 5, n_hi: int = 10, device: bool = True
+                 ) -> List[Dict]:
+    """Rows for the pipeline benches (BENCH_pipeline.json schema)."""
+    from repro.core import Range
+
+    rows = []
+    for n in range(n_lo, n_hi + 1):
+        host_a, host_b, dev_a, dev_b = _matmul_setup(n, "sparse")
+        nnz = 8 * 2 ** n
+        rsel = Range(None, host_a.row[len(host_a.row) // 2])
+        csel = Range(None, host_b.col[len(host_b.col) // 2])
+
+        def h_eager():
+            (host_a[rsel, :] @ host_b[:, csel]).sum(axis=1)
+
+        def h_planned():
+            (host_a.lazy()[rsel, :] @ host_b.lazy()[:, csel]) \
+                .sum(axis=1).collect()
+
+        h_eager(), h_planned()                 # warm the compile cache
+        rows.append({"bench": "pipeline_smr", "impl": "host_eager", "n": n,
+                     "seconds": _time(h_eager), "nnz": nnz})
+        rows.append({"bench": "pipeline_smr", "impl": "host_planned", "n": n,
+                     "seconds": _time(h_planned), "nnz": nnz})
+
+        def h_chain():
+            host_a + host_b + host_a + host_b
+
+        def h_chain_planned():
+            (host_a.lazy() + host_b.lazy() + host_a.lazy()
+             + host_b.lazy()).collect()
+
+        rows.append({"bench": "pipeline_ewise", "impl": "host_eager", "n": n,
+                     "seconds": _time(h_chain), "nnz": nnz})
+        rows.append({"bench": "pipeline_ewise", "impl": "host_planned",
+                     "n": n, "seconds": _time(h_chain_planned), "nnz": nnz})
+        if not device:
+            continue
+
+        def d_eager():
+            c = dev_a[rsel, :].matmul(dev_b[:, csel])
+            c.reduce_rows().block_until_ready()
+
+        def d_planned():
+            (dev_a.lazy()[rsel, :] @ dev_b.lazy()[:, csel]) \
+                .sum(axis=1).collect().block_until_ready()
+
+        d_eager(), d_planned()                 # jit + compile-cache warm
+        rows.append({"bench": "pipeline_smr", "impl": "device_eager",
+                     "n": n, "seconds": _time(d_eager), "nnz": nnz})
+        rows.append({"bench": "pipeline_smr", "impl": "device_planned",
+                     "n": n, "seconds": _time(d_planned), "nnz": nnz})
+
+        def d_chain():
+            (dev_a + dev_b + dev_a + dev_b).nnz.block_until_ready()
+
+        def d_chain_planned():
+            (dev_a.lazy() + dev_b.lazy() + dev_a.lazy()
+             + dev_b.lazy()).collect().nnz.block_until_ready()
+
+        d_chain(), d_chain_planned()
+        rows.append({"bench": "pipeline_ewise", "impl": "device_eager",
+                     "n": n, "seconds": _time(d_chain), "nnz": nnz})
+        rows.append({"bench": "pipeline_ewise", "impl": "device_planned",
+                     "n": n, "seconds": _time(d_chain_planned), "nnz": nnz})
+    return rows
+
+
 # device matmul densifies over the keyspace: cap its n range
 _DEVICE_MAX_N = {"fig6_matmul": 10, "fig5_add": 12, "fig7_elemmul": 12,
                  "fig3_constructor_numeric": 12, "fig4_constructor_string": 12}

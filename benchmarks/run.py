@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--no-device]
                                             [--select-only] [--matmul-only]
-                                            [--n-hi N]
+                                            [--pipeline-only] [--n-hi N]
 
 Prints ``name,us_per_call,derived`` CSV rows:
   * the paper's five benchmarks (Figs 3–7), host (paper-faithful) and
@@ -12,13 +12,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * matmul-strategy benches (dense-tile vs BSR vs fused-reduce, host +
     device, sparse-clustered vs dense regimes) — dumped to
     ``BENCH_matmul.json``;
+  * pipeline benches (eager chain vs planned lazy pipeline — fused
+    select+matmul+reduce and n-ary ⊕ chains, clustered-sparse regime) —
+    dumped to ``BENCH_pipeline.json``;
   * roofline summary rows derived from the dry-run artifacts (if
     dryrun_results.jsonl exists): per-cell dominant-term seconds.
 
 ``--full`` extends n to the paper's full 18 (minutes of runtime);
 default stops at 12 to keep the harness fast.  ``--select-only`` /
-``--matmul-only`` run just that bench family (the CI regression smokes);
-``--n-hi`` caps n.
+``--matmul-only`` / ``--pipeline-only`` run just that bench family (the
+CI regression smokes); ``--n-hi`` caps n.
 """
 from __future__ import annotations
 
@@ -34,15 +37,20 @@ def main() -> None:
     ap.add_argument("--no-device", action="store_true")
     ap.add_argument("--select-only", action="store_true")
     ap.add_argument("--matmul-only", action="store_true")
+    ap.add_argument("--pipeline-only", action="store_true")
     ap.add_argument("--n-hi", type=int, default=None)
     ap.add_argument("--select-json", default="BENCH_select.json")
     ap.add_argument("--matmul-json", default="BENCH_matmul.json")
+    ap.add_argument("--pipeline-json", default="BENCH_pipeline.json")
     ap.add_argument("--results", default="dryrun_results.jsonl")
     args = ap.parse_args()
 
-    from benchmarks.paper_benchmarks import run_all, run_matmul, run_select
+    from benchmarks.paper_benchmarks import (run_all, run_matmul,
+                                             run_pipeline, run_select)
 
     n_hi = args.n_hi if args.n_hi is not None else (18 if args.full else 12)
+    run_core = not (args.select_only or args.matmul_only
+                    or args.pipeline_only)
     print("name,us_per_call,derived")
 
     def emit(rows):
@@ -52,16 +60,25 @@ def main() -> None:
             derived = f"nnz={r['nnz']};ns_per_nnz={1e9 * r['seconds'] / r['nnz']:.1f}"
             print(f"{name},{us:.1f},{derived}")
 
-    if not (args.select_only or args.matmul_only):
+    if run_core:
         emit(run_all(5, n_hi, device=not args.no_device))
 
-    if not args.select_only:
+    if run_core or args.matmul_only:
         matmul_rows = run_matmul(5, min(n_hi, 12),
                                  device=not args.no_device)
         emit(matmul_rows)
         with open(args.matmul_json, "w") as f:
             json.dump(matmul_rows, f, indent=1)
     if args.matmul_only:
+        return
+
+    if run_core or args.pipeline_only:
+        pipeline_rows = run_pipeline(5, min(n_hi, 10),
+                                     device=not args.no_device)
+        emit(pipeline_rows)
+        with open(args.pipeline_json, "w") as f:
+            json.dump(pipeline_rows, f, indent=1)
+    if args.pipeline_only:
         return
 
     select_rows = run_select(5, min(n_hi, 12), device=not args.no_device)

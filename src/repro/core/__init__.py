@@ -8,15 +8,29 @@
 * ``KeySpace``     — host key dictionaries backing device rank arrays.
 * ``Semiring``     — the value algebras (⊕, ⊗, 0, 1).
 * ``DistAssoc``    — mesh-sharded associative arrays (the Distributed D).
+* ``expr``/``plan`` — lazy expression graphs + the planner/executor behind
+                     them (``A.lazy()[sel] @ B.lazy()[sel] … .collect()``);
+                     the eager operators are thin wrappers over one-node
+                     graphs, so lazy and eager share a single code path.
+
+Telemetry counters (and their reset helpers) are exported together so
+benchmarks and tests can assert a fast path actually fired:
+``CACHE_STATS`` (selector compilation), ``UNION_STATS`` (keyspace-union
+memoization), ``DISPATCH_STATS`` (selection execution paths) and
+``PLAN_STATS`` (expression hash-consing + planner rewrites).
 """
 from .assoc import Assoc
-from .assoc_tensor import AssocTensor
+from .assoc_tensor import AssocTensor, DISPATCH_STATS
 from .coo import (aggregate_runs, canonicalize_np, dedup_sorted_coo,
                   intersect_pairs_np, linearize_pairs_np, spgemm_np)
 from .dist_assoc import DistAssoc
-from .keyspace import KeySpace
-from .select import (All, Keys, Mask, Match, Positions, Range, Selector,
-                     StartsWith, Where, as_selector, compile_selector)
+from .expr import (EwiseAdd, EwiseMul, LazyExpr, MatMul, Reduce, Select,
+                   Source, Transpose, lazy)
+from .keyspace import KeySpace, UNION_STATS, clear_union_cache
+from .plan import PLAN_STATS, reset_plan_stats
+from .select import (All, CACHE_STATS, Keys, Mask, Match, Positions, Range,
+                     Selector, StartsWith, Where, as_selector,
+                     clear_compile_cache, compile_selector, reset_cache_stats)
 from .semiring import (AND_OR, MAX_MIN, MAX_PLUS, MAX_TIMES, MIN_PLUS,
                        PLUS_TIMES, REGISTRY, STRING, Semiring, get_semiring,
                        mesh_combine, scatter_combine)
@@ -36,4 +50,12 @@ __all__ = [
     "matmul_reduce", "plan_matmul", "mesh_combine", "scatter_combine",
     "Selector", "Keys", "Range", "StartsWith", "Match", "Where", "Mask",
     "Positions", "All", "as_selector", "compile_selector",
+    # lazy expressions + planner
+    "LazyExpr", "Source", "Select", "EwiseAdd", "EwiseMul", "MatMul",
+    "Reduce", "Transpose", "lazy",
+    # telemetry counters + reset helpers
+    "PLAN_STATS", "reset_plan_stats",
+    "CACHE_STATS", "clear_compile_cache", "reset_cache_stats",
+    "UNION_STATS", "clear_union_cache",
+    "DISPATCH_STATS",
 ]

@@ -40,7 +40,8 @@ import numpy as np
 import scipy.sparse as sp
 
 from .coo import (apply_pair, canonicalize_np, intersect_pairs_np,
-                  linearize_pairs_np, spgemm_np, spgemm_reduce_np)
+                  linearize_pairs_np)
+from .expr import EwiseAdd, EwiseMul, MatMul, Select, Source
 from .keyspace import KeySpace
 from .select import (Selector, compile_selector, sanitize_keys,
                      split_string_list)
@@ -267,11 +268,27 @@ class Assoc:
         return Assoc._from_parts(self.row.copy(), self.col.copy(), 1.0, adj)
 
     # ------------------------------------------------------------------ #
+    # lazy expressions (the deferred pipeline API, repro.core.expr)      #
+    # ------------------------------------------------------------------ #
+    def lazy(self) -> Source:
+        """Wrap this array as a lazy expression Source: operators then
+        build a graph instead of executing, and ``.collect()`` runs the
+        planned pipeline (selector pushdown, matmul→reduce fusion, …)."""
+        return Source(self)
+
+    # ------------------------------------------------------------------ #
     # element-wise addition (paper §II.C.1)                              #
     # ------------------------------------------------------------------ #
     def __add__(self, other: "Assoc") -> "Assoc":
+        # thin wrapper: build a one-node graph and collect it (the lazy
+        # and eager APIs share one execution path; Node operands defer to
+        # the expression's reflected operator instead)
         if not isinstance(other, Assoc):
             return NotImplemented
+        return EwiseAdd(Source(self), Source(other)).collect()
+
+    def _add_eager(self, other: "Assoc") -> "Assoc":
+        """Physical ⊕ under ``(+,×)`` (the executor's host backend)."""
         if self.nnz() == 0:
             return other.copy()
         if other.nnz() == 0:
@@ -294,7 +311,7 @@ class Assoc:
         if not isinstance(other, Assoc):
             raise TypeError("Assoc.add expects an Assoc")
         if sr.name == "plus_times":
-            return self + other
+            return self._add_eager(other)
         if not (self.numeric and other.numeric):
             raise TypeError("semiring algebra requires numeric arrays")
         if self.nnz() == 0:
@@ -424,8 +441,13 @@ class Assoc:
     # element-wise multiplication (paper §II.C.2)                        #
     # ------------------------------------------------------------------ #
     def __mul__(self, other: "Assoc") -> "Assoc":
+        # thin wrapper over the one-node graph (see __add__)
         if not isinstance(other, Assoc):
             return NotImplemented
+        return EwiseMul(Source(self), Source(other)).collect()
+
+    def _mul_eager(self, other: "Assoc") -> "Assoc":
+        """Physical ⊗ under ``(+,×)`` (the executor's host backend)."""
         if self.numeric and other.numeric:
             return self._mul_numeric(other)
         if not self.numeric and other.numeric:
@@ -448,7 +470,7 @@ class Assoc:
         if not isinstance(other, Assoc):
             raise TypeError("Assoc.mul expects an Assoc")
         if sr.name == "plus_times":
-            return self * other
+            return self._mul_eager(other)
         if not (self.numeric and other.numeric):
             raise TypeError("semiring algebra requires numeric arrays")
         if self.nnz() == 0 or other.nnz() == 0:
@@ -549,8 +571,13 @@ class Assoc:
     # array multiplication (paper §II.C.3)                               #
     # ------------------------------------------------------------------ #
     def __matmul__(self, other: "Assoc") -> "Assoc":
+        # thin wrapper over the one-node graph (see __add__)
         if not isinstance(other, Assoc):
             return NotImplemented
+        return MatMul(Source(self), Source(other)).collect()
+
+    def _matmul_eager(self, other: "Assoc") -> "Assoc":
+        """Physical ``⊗.⊕`` under ``(+,×)``: native CSR matmul."""
         a = self.logical() if not self.numeric else self
         b = other.logical() if not other.numeric else other
         inner, ia, ib = sorted_intersect(a.col, b.row)
@@ -575,29 +602,11 @@ class Assoc:
         if not isinstance(other, Assoc):
             raise TypeError("Assoc.matmul expects an Assoc")
         if sr.name == "plus_times":
-            return self @ other
-        a = self.logical() if not self.numeric else self
-        b = other.logical() if not other.numeric else other
-        inner, ia, ib = sorted_intersect(a.col, b.row)
-        if len(inner) == 0:
-            return Assoc()
-        acoo = a.adj.tocoo()
-        bcoo = b.adj.tocoo()
-        # restrict both operands to the contraction key set, re-coded 0..k-1
-        amap = np.full(len(a.col), -1, dtype=np.int64)
-        amap[ia] = np.arange(len(inner))
-        bmap = np.full(len(b.row), -1, dtype=np.int64)
-        bmap[ib] = np.arange(len(inner))
-        ak, bk = amap[acoo.col], bmap[bcoo.row]
-        am, bm = ak >= 0, bk >= 0
-        a_row, a_k, a_val = acoo.row[am], ak[am], acoo.data[am]
-        b_k, b_col, b_val = bk[bm], bcoo.col[bm], bcoo.data[bm]
-        order = np.lexsort((b_col, b_k))  # join requires b grouped by k
-        r, c, v = spgemm_np(a_row, a_k, a_val,
-                            b_k[order], b_col[order], b_val[order],
-                            sr.mul_np, sr.add_np)
-        keep = v != sr.zero
-        return Assoc._assemble(a.row, b.col, r[keep], c[keep], v[keep])
+            return self._matmul_eager(other)
+        # the one host sort-merge join (shared with the planner's fused
+        # select+matmul — this is the keeps=None case)
+        from .plan import host_matmul
+        return host_matmul(self, None, other, None, sr, None)
 
     def matmul_reduce(self, other: "Assoc", axis: int = 1,
                       semiring=PLUS_TIMES) -> np.ndarray:
@@ -617,33 +626,10 @@ class Assoc:
             raise TypeError("Assoc.matmul_reduce expects an Assoc")
         if axis not in (0, 1):
             raise ValueError(f"axis must be 0 or 1, got {axis!r}")
-        a = self.logical() if not self.numeric else self
-        b = other.logical() if not other.numeric else other
-        n_out = len(a.row) if axis == 1 else len(b.col)
-        out = np.full(n_out, sr.zero, dtype=np.float64)
-        inner, ia, ib = sorted_intersect(a.col, b.row)
-        if len(inner) == 0 or n_out == 0:
-            return out
-        if sr.name == "plus_times":
-            a_m = a.adj.tocsr()[:, ia]
-            b_m = b.adj.tocsr()[ib, :]
-            if axis == 1:
-                return np.asarray(a_m @ (b_m @ np.ones(b_m.shape[1]))).ravel()
-            return np.asarray((np.ones(a_m.shape[0]) @ a_m) @ b_m).ravel()
-        acoo = a.adj.tocoo()
-        bcoo = b.adj.tocoo()
-        amap = np.full(len(a.col), -1, dtype=np.int64)
-        amap[ia] = np.arange(len(inner))
-        bmap = np.full(len(b.row), -1, dtype=np.int64)
-        bmap[ib] = np.arange(len(inner))
-        ak, bk = amap[acoo.col], bmap[bcoo.row]
-        am, bm = ak >= 0, bk >= 0
-        a_row, a_k, a_val = acoo.row[am], ak[am], acoo.data[am]
-        b_k, b_col, b_val = bk[bm], bcoo.col[bm], bcoo.data[bm]
-        order = np.lexsort((b_col, b_k))
-        return spgemm_reduce_np(a_row, a_k, a_val,
-                                b_k[order], b_col[order], b_val[order],
-                                sr.mul_np, sr.add_np, sr.zero, axis, n_out)
+        # the one host sort-merge join + segment scatter (shared with the
+        # planner's fused select+matmul_reduce — the keeps=None case)
+        from .plan import host_matmul
+        return host_matmul(self, None, other, None, sr, axis)
 
     def sqin(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
         """AᵀA — the paper's correlation idiom (column-key graph).
@@ -700,14 +686,21 @@ class Assoc:
                                       row_space=row_space,
                                       col_space=col_space)
 
-    def sum(self, axis: Optional[int] = None):
-        a = self if self.numeric else self.logical()
+    def sum(self, axis: Optional[int] = None, semiring=PLUS_TIMES):
+        """⊕-reduce (default sum) via the shared reduce path in
+        :mod:`repro.core.plan` — one host implementation for the Reduce
+        node, ``AssocTensor`` and this wrapper, so reduction dtype/zero
+        rules live in one place.  Note the Assoc wrapper drops entries
+        equal to 0.0 (the paper's unstored value); non-(+,×) reductions
+        whose ⊕-identity is not 0 are better consumed through the lazy
+        ``.sum()`` vector form."""
+        from .plan import host_axis_reduce
         if axis is None:
-            return float(a.adj.sum())
-        m = np.asarray(a.adj.sum(axis=axis)).ravel()
+            return host_axis_reduce(self, None, semiring)
+        m = host_axis_reduce(self, axis, semiring)
         if axis == 0:   # column sums → row vector keyed by col
-            return Assoc(["sum"], a.col, m)
-        return Assoc(a.row, ["sum"], m)  # row sums → column vector
+            return Assoc(["sum"], self.col, m)
+        return Assoc(self.row, ["sum"], m)  # row sums → column vector
 
     # ------------------------------------------------------------------ #
     # extraction & assignment (paper §II.B) — via the selector algebra   #
@@ -743,6 +736,12 @@ class Assoc:
         return compile_selector(sel, self._axis_space(keys)).positions()
 
     def __getitem__(self, ij) -> "Assoc":
+        # thin wrapper over the one-node graph (see __add__)
+        i, j = ij
+        return Select(Source(self), i, j).collect()
+
+    def _select_eager(self, ij) -> "Assoc":
+        """Physical selection (the executor's host backend)."""
         i, j = ij
         ri = self._resolve_keys(i, self.row)
         ci = self._resolve_keys(j, self.col)

@@ -33,8 +33,9 @@ import numpy as np
 
 from .assoc import Assoc
 from .coo import SENT, dedup_sorted_coo
+from .expr import EwiseAdd, EwiseMul, MatMul, Select, Source
 from .keyspace import KeySpace
-from .semiring import PLUS_TIMES, Semiring, get_semiring, scatter_combine
+from .semiring import PLUS_TIMES, Semiring, get_semiring
 from .sorted_ops import INT_SENTINEL
 
 # ``dedup_sorted_coo`` — the canonical COO merge shared with the host Assoc —
@@ -230,6 +231,11 @@ class AssocTensor:
             other.reranked(rs, cs, rm_b, cm_b)
         return a, b
 
+    # -- lazy expressions (the deferred pipeline API, repro.core.expr) ---------
+    def lazy(self) -> Source:
+        """Wrap as a lazy expression Source (see ``Assoc.lazy``)."""
+        return Source(self)
+
     # -- element-wise algebra ---------------------------------------------------
     def add(self, other: "AssocTensor", semiring=PLUS_TIMES) -> "AssocTensor":
         """Element-wise ⊕ over the union of key sets (paper §II.C.1)."""
@@ -242,7 +248,11 @@ class AssocTensor:
         return AssocTensor(r, c, v, nnz, a.row_space, a.col_space, a.val_space)
 
     def __add__(self, other):
-        return self.add(other)
+        # thin wrapper over the one-node graph (lazy/eager share one path);
+        # expression operands defer to the Node's reflected operator
+        if not isinstance(other, AssocTensor):
+            return NotImplemented
+        return EwiseAdd(Source(self), Source(other)).collect()
 
     def mul(self, other: "AssocTensor", semiring=PLUS_TIMES) -> "AssocTensor":
         """Element-wise ⊗ over the intersection of key sets (paper §II.C.2)."""
@@ -261,7 +271,9 @@ class AssocTensor:
                            a.row_space, a.col_space, a.val_space)
 
     def __mul__(self, other):
-        return self.mul(other)
+        if not isinstance(other, AssocTensor):
+            return NotImplemented
+        return EwiseMul(Source(self), Source(other)).collect()
 
     def logical(self) -> "AssocTensor":
         """Replace nonempty entries with 1 (paper's ``.logical()``)."""
@@ -379,7 +391,9 @@ class AssocTensor:
         return self.matmul_reduce(t, reduce, semiring)
 
     def __matmul__(self, other):
-        return self.matmul(other)
+        if not isinstance(other, AssocTensor):
+            return NotImplemented
+        return MatMul(Source(self), Source(other)).collect()
 
     # -- extraction -------------------------------------------------------------
     #
@@ -474,6 +488,12 @@ class AssocTensor:
         return self._mask_keep(*self._device_masks(rc, cc))
 
     def __getitem__(self, ij) -> "AssocTensor":
+        # thin wrapper over the one-node graph (see __add__)
+        i, j = ij
+        return Select(Source(self), i, j).collect()
+
+    def _select_eager(self, ij) -> "AssocTensor":
+        """Physical selection (the executor's device backend)."""
         return self._compact(self._selection_keep(ij))
 
     def __setitem__(self, ij, value) -> None:
@@ -496,14 +516,20 @@ class AssocTensor:
         self.vals = jnp.where(keep, jnp.float32(value), self.vals)
 
     # -- reductions ---------------------------------------------------------------
+    #
+    # Both axis reductions route through the shared reduce path in
+    # repro.core.plan (one scatter_combine implementation for the Reduce
+    # node, eager calls, and the fused epilogue partials alike).
+
     def reduce_rows(self, semiring=PLUS_TIMES) -> jnp.ndarray:
         """⊕-reduce over columns → dense vector over the row keyspace."""
-        sr = get_semiring(semiring)
-        nr = len(self.row_space)
-        ok = self.valid_mask()
-        vec = jnp.full((nr,), sr.zero, self.vals.dtype)
-        return scatter_combine(vec, jnp.where(ok, self.rows, nr),
-                               jnp.where(ok, self.vals, sr.zero), sr)
+        from .plan import device_axis_reduce
+        return device_axis_reduce(self, 1, semiring)
+
+    def reduce_cols(self, semiring=PLUS_TIMES) -> jnp.ndarray:
+        """⊕-reduce over rows → dense vector over the col keyspace."""
+        from .plan import device_axis_reduce
+        return device_axis_reduce(self, 0, semiring)
 
     def nnz_host(self) -> int:
         return int(self.nnz)

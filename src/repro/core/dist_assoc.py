@@ -44,6 +44,7 @@ from jax.experimental.shard_map import shard_map
 from .assoc_tensor import (AssocTensor, DISPATCH_STATS, coo_axis_mask_keep,
                            coo_compact, coo_mask_keep, coo_range_keep)
 from .coo import SENT, dedup_sorted_coo, expand_join_coo
+from .expr import EwiseAdd, EwiseMul, MatMul, Select, Source
 from .keyspace import KeySpace
 from .semiring import (PLUS_TIMES, get_semiring, mesh_combine,
                        scatter_combine)
@@ -156,6 +157,23 @@ def _matvec_prog(mesh: Mesh, sr, nr: int, dt):
         return mesh_combine(y, "data", sr)
 
     return go
+
+
+def _shard_selection_keep(a0, row_is_range: bool, col_is_range: bool,
+                          bnds, rm, cm):
+    """Shard-local keep mask for a compiled selection — the one dispatch
+    body shared by ``__getitem__`` and ``__setitem__`` (range kernel /
+    hybrid / double-gather, exactly as ``AssocTensor._selection_keep``)."""
+    if row_is_range and col_is_range:
+        return coo_range_keep(a0["rows"], a0["cols"], bnds)
+    if row_is_range or col_is_range:
+        keep = coo_range_keep(a0["rows"], a0["cols"], bnds)
+        if not row_is_range:
+            keep = keep & coo_axis_mask_keep(a0["rows"], rm)
+        if not col_is_range:
+            keep = keep & coo_axis_mask_keep(a0["cols"], cm)
+        return keep
+    return coo_mask_keep(a0["rows"], a0["cols"], rm, cm)
 
 
 class DistAssoc:
@@ -303,20 +321,31 @@ class DistAssoc:
     def mul(self, other, semiring=PLUS_TIMES):
         return self._ewise(other, "mul", semiring)
 
-    # -- selection (the D4M query surface, sharded) ------------------------------
-    def __getitem__(self, ij) -> "DistAssoc":
-        """D4M selection ``A[row_sel, col_sel]`` on a sharded array.
+    def __add__(self, other):
+        # thin wrapper over the one-node graph (lazy/eager share one path);
+        # expression operands defer to the Node's reflected operator
+        if not isinstance(other, DistAssoc):
+            return NotImplemented
+        return EwiseAdd(Source(self), Source(other)).collect()
 
-        The selector compiles **once on host** against the (replicated)
-        keyspaces — every selector form the host ``Assoc`` takes works
-        here — then executes shard-locally with zero collectives: row
-        partitions are disjoint, so each shard masks and compacts its own
-        COO triples.  Dispatch mirrors ``AssocTensor._selection_keep``:
-        both axes contiguous → the shared Pallas range-mask kernel
-        (``repro.kernels.range_extract``); ONE contiguous axis (e.g. a
-        single-interval ``Match``/``StartsWith``) → the range kernel for
-        that axis plus one membership gather for the other; both scattered
-        → two gathers.  Nothing densifies.
+    def __mul__(self, other):
+        if not isinstance(other, DistAssoc):
+            return NotImplemented
+        return EwiseMul(Source(self), Source(other)).collect()
+
+    # -- lazy expressions (the deferred pipeline API, repro.core.expr) ----------
+    def lazy(self) -> Source:
+        """Wrap as a lazy expression Source (see ``Assoc.lazy``)."""
+        return Source(self)
+
+    # -- selection (the D4M query surface, sharded) ------------------------------
+    def _compiled_selection(self, ij):
+        """Compile (row_sel, col_sel) once on host → shard-broadcast forms.
+
+        Shared prologue of ``__getitem__`` and ``__setitem__``: returns
+        ``(row_is_range, col_is_range, bounds, rmask, cmask)`` — the rank
+        box for the Pallas range kernel plus membership masks for any
+        scattered axis.  Dispatch mirrors ``AssocTensor._selection_keep``.
         """
         from .select import compile_selector
 
@@ -339,6 +368,29 @@ class DistAssoc:
             DISPATCH_STATS["hybrid"] += 1
         else:
             DISPATCH_STATS["gather"] += 1
+        return row_is_range, col_is_range, bounds, rmask, cmask
+
+    def __getitem__(self, ij) -> "DistAssoc":
+        # thin wrapper over the one-node graph (lazy/eager one path)
+        i, j = ij
+        return Select(Source(self), i, j).collect()
+
+    def _select_eager(self, ij) -> "DistAssoc":
+        """D4M selection ``A[row_sel, col_sel]`` on a sharded array.
+
+        The selector compiles **once on host** against the (replicated)
+        keyspaces — every selector form the host ``Assoc`` takes works
+        here — then executes shard-locally with zero collectives: row
+        partitions are disjoint, so each shard masks and compacts its own
+        COO triples.  Dispatch mirrors ``AssocTensor._selection_keep``:
+        both axes contiguous → the shared Pallas range-mask kernel
+        (``repro.kernels.range_extract``); ONE contiguous axis (e.g. a
+        single-interval ``Match``/``StartsWith``) → the range kernel for
+        that axis plus one membership gather for the other; both scattered
+        → two gathers.  Nothing densifies.
+        """
+        row_is_range, col_is_range, bounds, rmask, cmask = \
+            self._compiled_selection(ij)
 
         a_dict, spec = self._local_spec()
 
@@ -348,16 +400,8 @@ class DistAssoc:
         def go(a, bnds, rm, cm):
             a0 = jax.tree.map(lambda x: x[0], a)
             # same raw-array primitives as AssocTensor — layers cannot drift
-            if row_is_range and col_is_range:
-                keep = coo_range_keep(a0["rows"], a0["cols"], bnds)
-            elif row_is_range or col_is_range:
-                keep = coo_range_keep(a0["rows"], a0["cols"], bnds)
-                if not row_is_range:
-                    keep = keep & coo_axis_mask_keep(a0["rows"], rm)
-                if not col_is_range:
-                    keep = keep & coo_axis_mask_keep(a0["cols"], cm)
-            else:
-                keep = coo_mask_keep(a0["rows"], a0["cols"], rm, cm)
+            keep = _shard_selection_keep(a0, row_is_range, col_is_range,
+                                         bnds, rm, cm)
             r, c, v, nnz = coo_compact(a0["rows"], a0["cols"], a0["vals"],
                                        keep)
             out = {"rows": r, "cols": c, "vals": v, "nnz": nnz}
@@ -369,6 +413,42 @@ class DistAssoc:
                                 self.local.col_space, self.local.val_space)
         return DistAssoc(new_local, self.mesh, row_bounds=self.row_bounds)
 
+    def __setitem__(self, ij, value) -> None:
+        """Selector-targeted scalar assignment, sharded (in place).
+
+        The ROADMAP ``DistAssoc.__setitem__`` pushdown, mirroring the
+        ``__getitem__`` structure exactly: the selector compiles once on
+        host, then each shard overwrites the values of its own *stored*
+        entries inside the selection — zero collectives, nothing
+        densifies.  Semantics match ``AssocTensor.__setitem__``: numeric
+        scalar, support unchanged (inserting new entries is a host-side
+        ``from_triples``).
+        """
+        if (not isinstance(value, (int, float, np.integer, np.floating))
+                or isinstance(value, (bool, np.bool_))):
+            raise TypeError("DistAssoc __setitem__ takes a numeric scalar")
+        if not self.local.numeric:
+            raise TypeError("DistAssoc __setitem__ requires numeric values")
+        row_is_range, col_is_range, bounds, rmask, cmask = \
+            self._compiled_selection(ij)
+
+        a_dict, spec = self._local_spec()
+
+        @partial(shard_map, mesh=self.mesh,
+                 in_specs=(spec, P(), P(), P()),
+                 out_specs=P("data", None), check_rep=False)
+        def go(a, bnds, rm, cm):
+            a0 = jax.tree.map(lambda x: x[0], a)
+            keep = _shard_selection_keep(a0, row_is_range, col_is_range,
+                                         bnds, rm, cm)
+            return jnp.where(keep, jnp.float32(value), a0["vals"])[None]
+
+        new_vals = go(a_dict, bounds, rmask, cmask)
+        self.local = AssocTensor(self.local.rows, self.local.cols, new_vals,
+                                 self.local.nnz, self.local.row_space,
+                                 self.local.col_space,
+                                 self.local.val_space)
+
     # -- global reductions --------------------------------------------------------
     def col_reduce(self, semiring=PLUS_TIMES) -> jnp.ndarray:
         """⊕ over rows per column → dense [n_cols] (one collective)."""
@@ -376,6 +456,18 @@ class DistAssoc:
         go = _col_reduce_prog(self.mesh, sr, len(self.local.col_space),
                               self.local.vals.dtype)
         return go(self.local.cols, self.local.vals, self.local.rows)
+
+    def row_reduce(self, semiring=PLUS_TIMES) -> jnp.ndarray:
+        """⊕ over cols per row → dense [n_rows] (one collective).
+
+        Row supports are disjoint, so the psum-family combine is a pure
+        concatenation of shard partials; reuses the col-reduce program
+        with the row ranks as the scatter keys.
+        """
+        sr = get_semiring(semiring)
+        go = _col_reduce_prog(self.mesh, sr, len(self.local.row_space),
+                              self.local.vals.dtype)
+        return go(self.local.rows, self.local.vals, self.local.rows)
 
     def col_degree(self) -> jnp.ndarray:
         """Stored-entry count per column → dense int32 [n_cols] (one psum).
@@ -482,7 +574,10 @@ class DistAssoc:
         return result
 
     def __matmul__(self, other):
-        return self.matmul(other)
+        # thin wrapper over the one-node graph (see __add__)
+        if isinstance(other, (DistAssoc, AssocTensor)) or hasattr(other, "adj"):
+            return MatMul(Source(self), Source(other)).collect()
+        return NotImplemented
 
     def matmul_reduce(self, other, axis: int = 1,
                       semiring=PLUS_TIMES) -> jnp.ndarray:

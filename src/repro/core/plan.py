@@ -1,0 +1,730 @@
+"""Planner + executor for lazy D4M expressions (the other half of expr.py).
+
+``collect()`` hands an expression graph here.  The planner rewrites it
+before anything executes:
+
+* **selector pushdown** — ``Select`` nodes move through ``Transpose``
+  (axes swap), element-wise ⊕/⊗ (applied to both operands) and ``MatMul``
+  (row selection to A, column selection to B), and adjacent selections
+  compose with the selector algebra's ``&``.  Only *key-based* selectors
+  are pushed (``Keys``/``Range``/``StartsWith``/``Match``/``Where`` and
+  their ``&``/``|``/``~`` compositions): their membership is a pure
+  predicate of the key, so it commutes with any keyspace change the
+  operation makes.  ``Positions``/``Mask`` address ranks of the *result*
+  keyspace and stay put.
+* **select→matmul fusion** — a selection sitting on a matmul operand is
+  compiled (``select.py`` compiled forms) and folded into the spgemm
+  plan: the packed-tile lists and rank ranges are sliced on host and the
+  values gathered once, so the sliced operand is **never built as an
+  array** (no compact, no lexsort, no canonicalize).  ``DistAssoc``
+  executes the same fusion shard-locally (rows of deselected entries are
+  sentinel-masked in place; broadcast-B entries outside the selection are
+  ⊗-annihilated by setting their value to the semiring zero) with zero
+  collectives.
+* **MatMul→Reduce fusion** — ``Reduce(MatMul(a, b, sr), axis, sr)``
+  collapses onto the fused ``matmul_reduce`` epilogues (the
+  ``sqin``/``sqout`` family): C is never materialized on any layer.
+* **ewise-chain fusion** — ``A ⊕ B ⊕ C ⊕ …`` under one semiring runs as a
+  single canonicalize pass over all operands' triples instead of one pass
+  per ``⊕``.
+* **hash-consing** — repeated subtrees (same sources, same structure)
+  execute once per ``collect()``; ``PLAN_STATS`` counts hits/misses and
+  the rewrites, mirroring ``UNION_STATS``/``DISPATCH_STATS``.
+
+The executor then evaluates the optimized graph on whichever layer the
+sources live on — host ``Assoc``, device ``AssocTensor``, or sharded
+``DistAssoc`` — by dispatching to the layers' *physical* methods.  Eager
+operators are thin wrappers that build a one-node graph and collect it, so
+lazy and eager share this single execution path.
+
+This module also hosts the **shared axis-reduction path**
+(:func:`host_axis_reduce` / :func:`device_axis_reduce`): ``Assoc.sum``,
+``AssocTensor.reduce_rows``/``reduce_cols`` and the ``Reduce`` node all
+route through it, so reduction dtype/zero rules come from the PR 3 combine
+helpers (``scatter_combine`` / ``add_np``) in one place.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .coo import SENT, canonicalize_np, dedup_sorted_coo
+from .expr import (EwiseAdd, EwiseMul, LazyExpr, MatMul, Reduce, Select,
+                   Source, Transpose)
+from .select import (All, And, Compiled, Keys, Match, Not, Or, Range,
+                     StartsWith, Where, as_selector, compile_selector)
+from .semiring import PLUS_TIMES, get_semiring, scatter_combine
+from .sorted_ops import sorted_intersect, sorted_union
+
+__all__ = ["execute", "optimize", "PLAN_STATS", "reset_plan_stats",
+           "host_axis_reduce", "device_axis_reduce", "host_matmul"]
+
+
+# Planner/executor telemetry, matching UNION_STATS / DISPATCH_STATS /
+# CACHE_STATS: hash-consing hit/miss counts plus one counter per rewrite
+# family, so tests and benchmarks can assert a fusion actually fired.
+PLAN_STATS = {
+    "hits": 0, "misses": 0,
+    "pushdown": 0, "fused_matmul_reduce": 0,
+    "fused_select_matmul": 0, "ewise_fused": 0,
+}
+
+
+def reset_plan_stats() -> None:
+    for k in PLAN_STATS:
+        PLAN_STATS[k] = 0
+
+
+def _layer(x) -> str:
+    from .assoc import Assoc
+    from .assoc_tensor import AssocTensor
+    from .dist_assoc import DistAssoc
+    if isinstance(x, Assoc):
+        return "host"
+    if isinstance(x, AssocTensor):
+        return "device"
+    if isinstance(x, DistAssoc):
+        return "dist"
+    raise TypeError(f"not an associative array: {type(x)!r}")
+
+
+# ---------------------------------------------------------------------------
+# Rewrite pass 1: selector pushdown
+# ---------------------------------------------------------------------------
+
+def _pushable(sel) -> bool:
+    """True iff the selector's membership is a pure predicate of the key.
+
+    Such selectors commute with transpose/ewise/matmul and compose with
+    ``&`` across nested selections.  ``Positions``/``Mask``/non-trivial
+    slices address ranks of a *specific* keyspace and must not move.
+    """
+    try:
+        s = as_selector(sel)
+    except TypeError:
+        return False
+    if isinstance(s, (Keys, Range, StartsWith, Match, Where, All)):
+        return True
+    if isinstance(s, (And, Or)):
+        return _pushable(s.a) and _pushable(s.b)
+    if isinstance(s, Not):
+        return _pushable(s.a)
+    return False
+
+
+def _push(node: LazyExpr) -> LazyExpr:
+    if isinstance(node, Source):
+        return node
+    if isinstance(node, Select):
+        child = node.child
+        rs, cs = node.row_sel, node.col_sel
+        if isinstance(child, Select) and all(
+                _pushable(s) for s in (rs, cs, child.row_sel, child.col_sel)):
+            PLAN_STATS["pushdown"] += 1
+            return _push(Select(child.child,
+                                as_selector(child.row_sel) & as_selector(rs),
+                                as_selector(child.col_sel) & as_selector(cs)))
+        if _pushable(rs) and _pushable(cs):
+            if isinstance(child, Transpose):
+                PLAN_STATS["pushdown"] += 1
+                return Transpose(_push(Select(child.child, cs, rs)))
+            if isinstance(child, (EwiseAdd, EwiseMul)):
+                PLAN_STATS["pushdown"] += 1
+                return type(child)(_push(Select(child.a, rs, cs)),
+                                   _push(Select(child.b, rs, cs)),
+                                   semiring=child.semiring)
+            if isinstance(child, MatMul):
+                PLAN_STATS["pushdown"] += 1
+                return MatMul(_push(Select(child.a, rs, All())),
+                              _push(Select(child.b, All(), cs)),
+                              semiring=child.semiring)
+        return Select(_push(child), rs, cs)
+    if isinstance(node, Transpose):
+        return Transpose(_push(node.child))
+    if isinstance(node, Reduce):
+        return Reduce(_push(node.child), node.axis, node.semiring)
+    if isinstance(node, (EwiseAdd, EwiseMul, MatMul)):
+        return type(node)(_push(node.a), _push(node.b),
+                          semiring=node.semiring)
+    return node
+
+
+# ---------------------------------------------------------------------------
+# Rewrite pass 2: fusion (internal physical nodes)
+# ---------------------------------------------------------------------------
+
+class _MatMulReduce(LazyExpr):
+    """Fused ``⊕-reduce(a ⊗.⊕ b, axis)`` — executes via matmul_reduce."""
+
+    def __init__(self, a, b, axis, semiring):
+        self.a, self.b, self.axis = a, b, axis
+        self.semiring = semiring
+
+    def key(self):
+        return ("mmr", self.a.key(), self.b.key(), self.axis,
+                self.semiring.name)
+
+
+class _EwiseAddN(LazyExpr):
+    """n-ary fused ⊕ chain — one canonicalize pass over all operands."""
+
+    def __init__(self, terms, semiring):
+        self.terms = list(terms)
+        self.semiring = semiring
+
+    def key(self):
+        return ("ewise_add_n", tuple(t.key() for t in self.terms),
+                self.semiring.name)
+
+
+def _flatten_add(node, sr) -> List[LazyExpr]:
+    if isinstance(node, EwiseAdd) and node.semiring.name == sr.name:
+        return _flatten_add(node.a, sr) + _flatten_add(node.b, sr)
+    return [node]
+
+
+def _fuse(node: LazyExpr) -> LazyExpr:
+    if isinstance(node, Source):
+        return node
+    if isinstance(node, Reduce):
+        child = _fuse(node.child)
+        if (isinstance(child, MatMul) and node.axis is not None
+                and child.semiring.name == node.semiring.name):
+            PLAN_STATS["fused_matmul_reduce"] += 1
+            return _MatMulReduce(child.a, child.b, node.axis, child.semiring)
+        return Reduce(child, node.axis, node.semiring)
+    if isinstance(node, EwiseAdd):
+        terms = _flatten_add(node, node.semiring)
+        if len(terms) >= 3:
+            PLAN_STATS["ewise_fused"] += 1
+            return _EwiseAddN([_fuse(t) for t in terms], node.semiring)
+        return EwiseAdd(_fuse(node.a), _fuse(node.b), semiring=node.semiring)
+    if isinstance(node, (EwiseMul, MatMul)):
+        return type(node)(_fuse(node.a), _fuse(node.b),
+                          semiring=node.semiring)
+    if isinstance(node, Select):
+        return Select(_fuse(node.child), node.row_sel, node.col_sel)
+    if isinstance(node, Transpose):
+        return Transpose(_fuse(node.child))
+    return node
+
+
+def optimize(node: LazyExpr) -> LazyExpr:
+    """Rewrite an expression graph: pushdown first, then fusion."""
+    return _fuse(_push(node))
+
+
+# ---------------------------------------------------------------------------
+# Execution (hash-consed)
+# ---------------------------------------------------------------------------
+
+_MISS = object()
+
+
+def _single_node_fast(node: LazyExpr):
+    """Dispatch a one-node graph (what every eager wrapper builds)
+    straight to the physical backend — no rewrite walk, no memo, no
+    structural keys.  Returns ``_MISS`` for anything deeper."""
+    if isinstance(node, Select) and isinstance(node.child, Source):
+        return node.child.array._select_eager((node.row_sel, node.col_sel))
+    if isinstance(node, (EwiseAdd, EwiseMul, MatMul)) \
+            and isinstance(node.a, Source) and isinstance(node.b, Source):
+        a, b = node.a.array, node.b.array
+        if isinstance(node, MatMul):
+            if _layer(a) != "dist" and _layer(b) == "dist":
+                b = b.gather_replicated()  # same rule as _eval_matmul
+            return a.matmul(b, node.semiring)
+        _require_same_layer(a, b, "⊕" if isinstance(node, EwiseAdd) else "⊗")
+        if isinstance(node, EwiseAdd):
+            return a.add(b, node.semiring)
+        return a.mul(b, node.semiring)
+    return _MISS
+
+
+def execute(node: LazyExpr):
+    """Optimize + evaluate; repeated subtrees run once (PLAN_STATS)."""
+    fast = _single_node_fast(node)
+    if fast is not _MISS:
+        return fast
+    return _eval(optimize(node), {})
+
+
+def _eval(node: LazyExpr, memo: dict):
+    if isinstance(node, Source):
+        return node.array
+    k = node.key()
+    if k in memo:
+        PLAN_STATS["hits"] += 1
+        return memo[k]
+    PLAN_STATS["misses"] += 1
+    out = _eval_inner(node, memo)
+    memo[k] = out
+    return out
+
+
+def _strip_select(node) -> Tuple[LazyExpr, Optional[tuple]]:
+    """Peel one Select off a matmul operand for select→matmul fusion.
+
+    ``Transpose(Select(x, r, c))`` is ``Select(Transpose(x), c, r)`` for
+    *every* selector form — transpose swaps the keyspaces without changing
+    either — so a selection under a transpose fuses too (the ``sqin`` /
+    ``sqout`` shapes)."""
+    if isinstance(node, Select):
+        return node.child, (node.row_sel, node.col_sel)
+    if isinstance(node, Transpose) and isinstance(node.child, Select):
+        s = node.child
+        return Transpose(s.child), (s.col_sel, s.row_sel)
+    return node, None
+
+
+def _eval_inner(node: LazyExpr, memo: dict):
+    if isinstance(node, Select):
+        arr = _eval(node.child, memo)
+        _layer(arr)  # clean TypeError when the child is not an array
+        return arr._select_eager((node.row_sel, node.col_sel))
+    if isinstance(node, Transpose):
+        arr = _eval(node.child, memo)
+        if _layer(arr) == "dist":
+            # the transpose breaks the row partition: gather to a
+            # replicated device tensor (same rule DistAssoc.sqin uses)
+            return arr.gather_replicated().transpose()
+        return arr.transpose()
+    if isinstance(node, EwiseAdd):
+        a, b = _eval(node.a, memo), _eval(node.b, memo)
+        _require_same_layer(a, b, "⊕")
+        return a.add(b, node.semiring)
+    if isinstance(node, EwiseMul):
+        a, b = _eval(node.a, memo), _eval(node.b, memo)
+        _require_same_layer(a, b, "⊗")
+        return a.mul(b, node.semiring)
+    if isinstance(node, MatMul):
+        return _eval_matmul(node.a, node.b, node.semiring, None, memo)
+    if isinstance(node, _MatMulReduce):
+        return _eval_matmul(node.a, node.b, node.semiring, node.axis, memo)
+    if isinstance(node, Reduce):
+        arr = _eval(node.child, memo)
+        if isinstance(arr, (float, np.floating, np.ndarray, jnp.ndarray)):
+            # reducing an already-reduced result: only the full ⊕ is left
+            if node.axis is not None:
+                raise ValueError(
+                    "axis reduction of an already-reduced result; "
+                    "use .sum() for the remaining full ⊕")
+            if isinstance(arr, (float, np.floating)):
+                return arr                  # ⊕ over a single scalar
+            sr = get_semiring(node.semiring)
+            if isinstance(arr, np.ndarray):
+                return float(sr.add_np.reduce(arr)) if arr.size \
+                    else float(sr.zero)
+            return sr.add_reduce(arr) if arr.size else jnp.float32(sr.zero)
+        return _axis_reduce(arr, node.axis, node.semiring)
+    if isinstance(node, _EwiseAddN):
+        terms = [_eval(t, memo) for t in node.terms]
+        return _add_n(terms, node.semiring)
+    raise TypeError(f"cannot execute node {node!r}")
+
+
+def _require_same_layer(a, b, what: str) -> None:
+    la, lb = _layer(a), _layer(b)
+    if la != lb:
+        raise TypeError(f"element-wise {what} across layers "
+                        f"({la} vs {lb}); convert one operand first")
+
+
+def _eval_matmul(a_node, b_node, sr, axis, memo):
+    a_node, asels = _strip_select(a_node)
+    b_node, bsels = _strip_select(b_node)
+    a = _eval(a_node, memo)
+    b = _eval(b_node, memo)
+    if _layer(a) != "dist" and _layer(b) == "dist":
+        # a transposed (hence gathered) A against a still-sharded B: pull
+        # B to a replicated device tensor — the rule eager sqin applies
+        b = b.gather_replicated()
+    if asels is None and bsels is None:
+        if axis is None:
+            return a.matmul(b, sr)
+        return a.matmul_reduce(b, axis, sr)
+    PLAN_STATS["fused_select_matmul"] += 1
+    layer = _layer(a)
+    if layer == "host":
+        return host_matmul(a, asels, b, bsels, sr, axis)
+    if layer == "device":
+        return _device_fused_matmul(a, asels, b, bsels, sr, axis)
+    return _dist_fused_matmul(a, asels, b, bsels, sr, axis)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-selection helpers (shared by the fused paths)
+# ---------------------------------------------------------------------------
+
+def _member(comp: Compiled, codes: np.ndarray) -> Optional[np.ndarray]:
+    """Membership of rank codes in a compiled selection (None ⇒ selects
+    everything — no filtering needed)."""
+    if comp.count == comp.n:
+        return None
+    if comp.is_range:
+        return (codes >= comp.lo) & (codes < comp.hi)
+    # comp.n == 0 cannot reach here: count == n returned None above
+    return comp.mask()[np.clip(codes, 0, comp.n - 1)] & (codes < comp.n)
+
+
+def _entry_keep(rc: Compiled, cc: Compiled, rows: np.ndarray,
+                cols: np.ndarray) -> Optional[np.ndarray]:
+    """AND of row/col membership over entry code arrays (None ⇒ keep all)."""
+    keep = None
+    rm = _member(rc, rows)
+    cm = _member(cc, cols)
+    for m in (rm, cm):
+        if m is not None:
+            keep = m if keep is None else (keep & m)
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# Fused select→matmul, host layer
+# ---------------------------------------------------------------------------
+
+def _host_entry_keep(a, coo, sels) -> Optional[np.ndarray]:
+    if sels is None:
+        return None
+    rc = compile_selector(sels[0], a._axis_space(a.row))
+    cc = compile_selector(sels[1], a._axis_space(a.col))
+    return _entry_keep(rc, cc, coo.row, coo.col)
+
+
+def host_matmul(a, asels, b, bsels, sr, axis=None):
+    """Host ``⊗.⊕`` contraction (+ optional fused selection/reduction).
+
+    With ``asels``/``bsels`` = None this is THE host semiring
+    contraction — ``Assoc.matmul`` and ``Assoc.matmul_reduce`` delegate
+    here, so the sort-merge join prologue exists once.  With selections,
+    it is select+matmul(+reduce) without materializing either slice:
+    ``(+,×)`` keeps scipy's CSR engine — deselected entries have their
+    *data* zeroed in place (a value mask, not a re-indexing), so the
+    product — and the fused matvec reduction — run on the full-shape
+    operands and zero contributions vanish on their own.  Other semirings
+    run the filtered expand-join (``spgemm_np`` / ``spgemm_reduce_np``)
+    over the kept entries only.
+
+    Note on reduce alignment: the ``axis=1`` vector is indexed by the
+    *unsliced* ``a.row`` (deselected rows hold the ⊕-identity), unlike an
+    eager ``(A[sel] @ B).sum(axis=1)`` whose host result condensed its
+    keyspace first — on device the two agree because device selection
+    never shrinks keyspaces.
+    """
+    import scipy.sparse as sp
+
+    from .assoc import Assoc
+    from .coo import spgemm_np, spgemm_reduce_np
+
+    sr = get_semiring(sr)
+    a0 = a if a.numeric else a.logical()
+    b0 = b if b.numeric else b.logical()
+    n_out = len(a0.row) if axis == 1 else len(b0.col)
+    inner, ia, ib = sorted_intersect(a0.col, b0.row)
+    if len(inner) == 0 or a0.nnz() == 0 or b0.nnz() == 0:
+        if axis is None:
+            return Assoc()
+        return np.full(n_out, sr.zero, dtype=np.float64)
+    acoo = a0.adj.tocoo()
+    bcoo = b0.adj.tocoo()
+    a_keep = _host_entry_keep(a0, acoo, asels)
+    b_keep = _host_entry_keep(b0, bcoo, bsels)
+
+    if sr.name == "plus_times":
+        da = acoo.data if a_keep is None else np.where(a_keep, acoo.data, 0.0)
+        db = bcoo.data if b_keep is None else np.where(b_keep, bcoo.data, 0.0)
+        am = sp.csr_matrix((da, (acoo.row, acoo.col)),
+                           shape=a0.adj.shape)[:, ia]
+        bm = sp.csr_matrix((db, (bcoo.row, bcoo.col)),
+                           shape=b0.adj.shape)[ib, :]
+        if axis is None:
+            out = Assoc._from_parts(a0.row, b0.col, 1.0, (am @ bm).tocoo())
+            out._drop_zeros_and_condense()
+            return out
+        if axis == 1:
+            return np.asarray(am @ (bm @ np.ones(bm.shape[1]))).ravel()
+        return np.asarray((np.ones(am.shape[0]) @ am) @ bm).ravel()
+
+    amap = np.full(len(a0.col), -1, dtype=np.int64)
+    amap[ia] = np.arange(len(inner))
+    bmap = np.full(len(b0.row), -1, dtype=np.int64)
+    bmap[ib] = np.arange(len(inner))
+    ak, bk = amap[acoo.col], bmap[bcoo.row]
+    am_, bm_ = ak >= 0, bk >= 0
+    if a_keep is not None:
+        am_ &= a_keep
+    if b_keep is not None:
+        bm_ &= b_keep
+    a_row, a_k, a_val = acoo.row[am_], ak[am_], acoo.data[am_]
+    b_k, b_col, b_val = bk[bm_], bcoo.col[bm_], bcoo.data[bm_]
+    order = np.lexsort((b_col, b_k))
+    if axis is None:
+        r, c, v = spgemm_np(a_row, a_k, a_val,
+                            b_k[order], b_col[order], b_val[order],
+                            sr.mul_np, sr.add_np)
+        keep = v != sr.zero
+        return Assoc._assemble(a0.row, b0.col, r[keep], c[keep], v[keep])
+    return spgemm_reduce_np(a_row, a_k, a_val,
+                            b_k[order], b_col[order], b_val[order],
+                            sr.mul_np, sr.add_np, sr.zero, axis, n_out)
+
+
+# ---------------------------------------------------------------------------
+# Fused select→matmul, device layer (keeps flow into the spgemm plan)
+# ---------------------------------------------------------------------------
+
+def _tensor_entry_keep(t, sels) -> Optional[np.ndarray]:
+    if sels is None:
+        return None
+    rc = compile_selector(sels[0], t.row_space)
+    cc = compile_selector(sels[1], t.col_space)
+    na = int(t.nnz)
+    rows = np.asarray(t.rows)[:na].astype(np.int64)
+    cols = np.asarray(t.cols)[:na].astype(np.int64)
+    return _entry_keep(rc, cc, rows, cols)
+
+
+def _device_fused_matmul(a, asels, b, bsels, sr, axis=None):
+    from . import spgemm
+    a_keep = _tensor_entry_keep(a, asels)
+    b_keep = _tensor_entry_keep(b, bsels)
+    if axis is None:
+        return spgemm.matmul(a, b, sr, a_keep=a_keep, b_keep=b_keep)
+    return spgemm.matmul_reduce(a, b, axis, sr,
+                                a_keep=a_keep, b_keep=b_keep)
+
+
+# ---------------------------------------------------------------------------
+# Fused select→matmul, dist layer (shard-local masking, zero collectives)
+# ---------------------------------------------------------------------------
+
+def _dist_fused_matmul(a, asels, b, bsels, sr, axis=None):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from .assoc_tensor import AssocTensor
+    from .dist_assoc import DistAssoc
+
+    sr = get_semiring(sr)
+    loc = a.local if a.local.numeric else a.local.logical()
+    masked = loc
+    if asels is not None:
+        rc = compile_selector(asels[0], loc.row_space)
+        cc = compile_selector(asels[1], loc.col_space)
+        rows_h = np.asarray(loc.rows).astype(np.int64)
+        cols_h = np.asarray(loc.cols).astype(np.int64)
+        keep = _entry_keep(rc, cc, rows_h, cols_h)
+        if keep is not None:
+            keep &= rows_h != int(SENT)
+            # sentinel-mask deselected rows IN PLACE: the expand-join skips
+            # SENT entries, so the sliced A never exists as a compacted
+            # array and each shard filters its own triples (no collectives)
+            keep_dev = jax.device_put(
+                jnp.asarray(keep),
+                NamedSharding(a.mesh, P("data", None)))
+            masked = AssocTensor(
+                jnp.where(keep_dev, loc.rows, SENT), loc.cols, loc.vals,
+                loc.nnz, loc.row_space, loc.col_space, None)
+
+    bt = a._as_replicated_operand(b)
+    bt = bt.logical() if not bt.numeric else bt
+    if bsels is not None:
+        rc = compile_selector(bsels[0], bt.row_space)
+        cc = compile_selector(bsels[1], bt.col_space)
+        rows_h = np.asarray(bt.rows).astype(np.int64)
+        cols_h = np.asarray(bt.cols).astype(np.int64)
+        keep = _entry_keep(rc, cc, rows_h, cols_h)
+        if keep is not None:
+            keep &= rows_h != int(SENT)
+            # deselected B entries are ⊗-annihilated (value → semiring
+            # zero) rather than removed: the rank arrays stay sorted for
+            # the shard-local searchsorted join, and zero products are
+            # dropped by the canonical merge.  Every registered semiring's
+            # zero annihilates ⊗, which is what makes this a pure value
+            # mask rather than a slice.
+            bt = AssocTensor(
+                bt.rows, bt.cols,
+                jnp.where(jnp.asarray(keep), bt.vals,
+                          jnp.float32(sr.zero)),
+                bt.nnz, bt.row_space, bt.col_space, None)
+
+    d = DistAssoc(masked, a.mesh, row_bounds=a.row_bounds)
+    if axis is None:
+        return d.matmul(bt, sr)
+    return d.matmul_reduce(bt, axis, sr)
+
+
+# ---------------------------------------------------------------------------
+# Shared axis reductions (the one reduce path: eager sum/reduce_rows and
+# the Reduce node all land here — dtype/zero rules from the combine helpers)
+# ---------------------------------------------------------------------------
+
+def host_axis_reduce(a, axis: Optional[int], semiring=PLUS_TIMES):
+    """⊕-reduce a host Assoc: ``axis=1`` → float64 vector over ``a.row``,
+    ``axis=0`` → vector over ``a.col``, ``None`` → scalar.  ``(+,×)``
+    keeps the scipy fast path (bit-identical to the historical
+    ``Assoc.sum``); other semirings run one ``add_np`` scatter — the host
+    mirror of :func:`~repro.core.semiring.scatter_combine`."""
+    sr = get_semiring(semiring)
+    aa = a if a.numeric else a.logical()
+    if axis is None:
+        if aa.nnz() == 0:
+            return float(sr.zero)
+        if sr.name == "plus_times":
+            return float(aa.adj.sum())
+        return float(sr.add_np.reduce(aa.adj.tocoo().data))
+    if axis not in (0, 1):
+        raise ValueError(f"axis must be None, 0 or 1, got {axis!r}")
+    if sr.name == "plus_times":
+        return np.asarray(aa.adj.sum(axis=axis), dtype=np.float64).ravel()
+    coo = aa.adj.tocoo()
+    n_out = len(aa.row) if axis == 1 else len(aa.col)
+    out = np.full(n_out, sr.zero, dtype=np.float64)
+    sr.add_np.at(out, coo.row if axis == 1 else coo.col, coo.data)
+    return out
+
+
+def device_axis_reduce(t, axis: Optional[int], semiring=PLUS_TIMES):
+    """⊕-reduce a device AssocTensor with one ``scatter_combine``:
+    ``axis=1`` → vector over the row keyspace, ``axis=0`` → over the col
+    keyspace, ``None`` → scalar ⊕ over every stored entry."""
+    sr = get_semiring(semiring)
+    ok = t.valid_mask()
+    if axis is None:
+        return sr.add_reduce(jnp.where(ok, t.vals, sr.zero))
+    if axis not in (0, 1):
+        raise ValueError(f"axis must be None, 0 or 1, got {axis!r}")
+    n_out = len(t.row_space) if axis == 1 else len(t.col_space)
+    keys = t.rows if axis == 1 else t.cols
+    vec = jnp.full((n_out,), sr.zero, t.vals.dtype)
+    return scatter_combine(vec, jnp.where(ok, keys, n_out),
+                           jnp.where(ok, t.vals, sr.zero), sr)
+
+
+def _axis_reduce(arr, axis: Optional[int], sr):
+    layer = _layer(arr)
+    if layer == "host":
+        return host_axis_reduce(arr, axis, sr)
+    if layer == "device":
+        return device_axis_reduce(arr, axis, sr)
+    if axis == 0:
+        return arr.col_reduce(sr)
+    if axis == 1:
+        return arr.row_reduce(sr)
+    srr = get_semiring(sr)
+    vec = arr.col_reduce(sr)
+    if vec.shape[0] == 0:
+        return jnp.float32(srr.zero)
+    return srr.add_reduce(vec)
+
+
+# ---------------------------------------------------------------------------
+# Fused n-ary ⊕ chains (one canonicalize pass)
+# ---------------------------------------------------------------------------
+
+def _add_n(terms, sr):
+    sr = get_semiring(sr)
+    layers = {_layer(t) for t in terms}
+    if len(layers) != 1:
+        raise TypeError(f"⊕ chain mixes layers: {sorted(layers)}")
+    layer = layers.pop()
+    if layer == "host":
+        return _host_add_n(terms, sr)
+    if layer == "device":
+        return _device_add_n(terms, sr)
+    return _dist_add_n(terms, sr)
+
+
+def _host_add_n(terms, sr):
+    from .assoc import Assoc, is_string_array
+
+    live = [t for t in terms if t.nnz()]
+    if not live:
+        return Assoc()
+    if len(live) == 1:
+        return live[0].copy()
+    if any(not t.numeric for t in live):
+        # string ⊕ is order-sensitive concatenation: left fold pairwise
+        out = live[0]
+        for t in live[1:]:
+            out = out.add(t, sr)
+        return out
+    str_rows = is_string_array(live[0].row)
+    str_cols = is_string_array(live[0].col)
+    if any(is_string_array(t.row) != str_rows
+           or is_string_array(t.col) != str_cols for t in live):
+        raise TypeError("cannot mix string and numeric key sets")
+    row_u, col_u = live[0].row, live[0].col
+    for t in live[1:]:
+        row_u, _, _ = sorted_union(row_u, t.row)
+        col_u, _, _ = sorted_union(col_u, t.col)
+    rs, cs, vs = [], [], []
+    for t in live:
+        coo = t.adj.tocoo()
+        rmap = np.searchsorted(row_u, t.row)
+        cmap = np.searchsorted(col_u, t.col)
+        rs.append(rmap[coo.row])
+        cs.append(cmap[coo.col])
+        vs.append(coo.data)
+    r, c, v = canonicalize_np(np.concatenate(rs), np.concatenate(cs),
+                              np.concatenate(vs), combine=sr.add_np)
+    keep = v != sr.zero
+    return Assoc._assemble(row_u, col_u, r[keep], c[keep], v[keep])
+
+
+def _device_add_n(terms, sr):
+    from .assoc_tensor import AssocTensor
+
+    rs_space, cs_space = terms[0].row_space, terms[0].col_space
+    for t in terms[1:]:
+        rs_space, _, _ = rs_space.union(t.row_space)
+        cs_space, _, _ = cs_space.union(t.col_space)
+    aligned = []
+    for t in terms:
+        if t.row_space == rs_space and t.col_space == cs_space:
+            aligned.append(t)
+            continue
+        rm = np.searchsorted(rs_space.keys, t.row_space.keys).astype(np.int32)
+        cm = np.searchsorted(cs_space.keys, t.col_space.keys).astype(np.int32)
+        aligned.append(t.reranked(rs_space, cs_space, rm, cm))
+    rows = jnp.concatenate([t.rows for t in aligned])
+    cols = jnp.concatenate([t.cols for t in aligned])
+    vals = jnp.concatenate([t.vals for t in aligned])
+    r, c, v, nnz = dedup_sorted_coo(rows, cols, vals, sr.add, zero=sr.zero)
+    return AssocTensor(r, c, v, nnz, rs_space, cs_space,
+                       aligned[0].val_space)
+
+
+def _dist_add_n(terms, sr):
+    from functools import partial
+
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from .assoc_tensor import AssocTensor
+    from .dist_assoc import DistAssoc
+
+    d0 = terms[0]
+    dicts = tuple({"rows": t.local.rows, "cols": t.local.cols,
+                   "vals": t.local.vals, "nnz": t.local.nnz} for t in terms)
+    spec = {"rows": P("data", None), "cols": P("data", None),
+            "vals": P("data", None), "nnz": P("data")}
+
+    @partial(shard_map, mesh=d0.mesh, in_specs=(spec,) * len(dicts),
+             out_specs=spec, check_rep=False)
+    def go(*parts):
+        rows = jnp.concatenate([p["rows"][0] for p in parts])
+        cols = jnp.concatenate([p["cols"][0] for p in parts])
+        vals = jnp.concatenate([p["vals"][0] for p in parts])
+        r, c, v, n = dedup_sorted_coo(rows, cols, vals, sr.add, zero=sr.zero)
+        return {"rows": r[None], "cols": c[None], "vals": v[None],
+                "nnz": n[None]}
+
+    out = go(*dicts)
+    new_local = AssocTensor(out["rows"], out["cols"], out["vals"],
+                            out["nnz"], d0.local.row_space,
+                            d0.local.col_space, d0.local.val_space)
+    return DistAssoc(new_local, d0.mesh, row_bounds=d0.row_bounds)

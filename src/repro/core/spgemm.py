@@ -315,14 +315,65 @@ def _valid_host(t) -> Tuple[np.ndarray, np.ndarray, int]:
             np.asarray(t.cols)[:nnz].astype(np.int64), nnz)
 
 
+def _apply_keep(t, rows: np.ndarray, cols: np.ndarray, nnz: int,
+                keep: Optional[np.ndarray]):
+    """Slice an operand's entry lists by a host keep mask (selector fusion).
+
+    ``keep`` is a bool array over the ``nnz`` valid entries (None ⇒ all).
+    Returns ``(rows, cols, vals)`` with the host code arrays subset and the
+    device values gathered at the kept positions — a *list slice*, never a
+    canonicalized sliced array: the subset of a sorted canonical COO is
+    itself sorted canonical, so no compact/lexsort ever runs.
+    """
+    if keep is None:
+        return rows, cols, t.vals[:nnz]
+    if len(keep) != nnz:
+        raise ValueError(f"keep mask of length {len(keep)} for operand "
+                         f"with {nnz} valid entries")
+    idx = np.flatnonzero(np.asarray(keep, bool))
+    return rows[idx], cols[idx], t.vals[jnp.asarray(idx, jnp.int32)]
+
+
+def _pad_triples(rows: np.ndarray, cols: np.ndarray, vals: jnp.ndarray,
+                 cap: int, zero: float):
+    """Kept host codes + device vals → sentinel-padded device COO triples
+    (sorted by construction) for the jit-safe expand-join path.  Pure
+    upload + the module's one padding primitive (:func:`pad_to_cap`)."""
+    return pad_to_cap(jnp.asarray(rows, jnp.int32),
+                      jnp.asarray(cols, jnp.int32),
+                      vals.astype(jnp.float32), cap, zero)
+
+
+def _scatter_dense(rows: np.ndarray, cols: np.ndarray, vals: jnp.ndarray,
+                   nr: int, nc: int, zero: float,
+                   pad_to: int = TILE) -> jnp.ndarray:
+    """Densify kept triples onto an MXU-aligned adj (keep-aware twin of
+    ``AssocTensor.to_dense_adj``)."""
+    nrp = _round_up(max(nr, 1), pad_to)
+    ncp = _round_up(max(nc, 1), pad_to)
+    dense = jnp.full((nrp, ncp), zero, jnp.float32)
+    if len(rows) == 0:
+        return dense
+    return dense.at[jnp.asarray(rows), jnp.asarray(cols)].set(
+        vals.astype(jnp.float32), mode="drop")
+
+
 def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
-           out_capacity: Optional[int] = None, use_kernel: bool = True):
+           out_capacity: Optional[int] = None, use_kernel: bool = True,
+           a_keep: Optional[np.ndarray] = None,
+           b_keep: Optional[np.ndarray] = None):
     """Array multiplication ``A ⊗.⊕ B`` for device AssocTensors, planned.
 
     ``impl``: ``"auto"`` (heuristic), ``"dense"``, ``"bsr"`` or ``"coo"``
     (see module docstring).  ``use_kernel=False`` keeps the dense strategy
     on the jnp reference contraction (test oracle).  Eager/host-driven —
     inside a jit trace use ``impl="coo"`` building blocks directly.
+
+    ``a_keep``/``b_keep`` are host bool masks over the operands' valid
+    entries (the compiled form of a deferred selection, see
+    :mod:`repro.core.plan`): the plan's entry/tile lists are sliced and
+    the values gathered once, so ``A[sel] @ B[sel]`` runs without ever
+    building either slice as an array.
     """
     from .assoc_tensor import AssocTensor
 
@@ -334,6 +385,9 @@ def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
     m, k, n = len(a.row_space), len(ks), len(b.col_space)
     ra, ca, na = _valid_host(a)
     rb, cb, nb = _valid_host(b)
+    ra, ca, a_vals = _apply_keep(a, ra, ca, na, a_keep)
+    rb, cb, b_vals = _apply_keep(b, rb, cb, nb, b_keep)
+    filtered = a_keep is not None or b_keep is not None
 
     def _cap(products: int) -> int:
         return out_capacity or max(8, _round_up(
@@ -345,8 +399,11 @@ def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
         products = _exact_products(ca, rb, k)
         cap = _cap(products)
         expand = max(8, _round_up(max(products, 1), 8))
-        pr, pc, pv, _ = expand_join_coo(a.rows, a.cols, a.vals,
-                                        b.rows, b.cols, b.vals,
+        ar, ac, av = ((a.rows, a.cols, a.vals) if a_keep is None
+                      else _pad_triples(ra, ca, a_vals, a.capacity, sr.zero))
+        br, bc, bv = ((b.rows, b.cols, b.vals) if b_keep is None
+                      else _pad_triples(rb, cb, b_vals, b.capacity, sr.zero))
+        pr, pc, pv, _ = expand_join_coo(ar, ac, av, br, bc, bv,
                                         sr.mul, zero=sr.zero, expand=expand)
         r, c, v, nnz = dedup_sorted_coo(pr, pc, pv, sr.add, zero=sr.zero)
         true_nnz = int(nnz)
@@ -360,7 +417,11 @@ def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
         return out
 
     def _dense(cap: int) -> "AssocTensor":
-        da, db = _densify_aligned(a, b, sr)
+        if filtered:
+            da = _scatter_dense(ra, ca, a_vals, m, k, sr.zero)
+            db = _scatter_dense(rb, cb, b_vals, k, n, sr.zero)
+        else:
+            da, db = _densify_aligned(a, b, sr)
         if use_kernel:
             from repro.kernels.semiring_matmul.ops import semiring_matmul
             dc = semiring_matmul(da, db, semiring=sr)
@@ -379,16 +440,16 @@ def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
     if plan.impl == "dense":
         return _dense(cap)
 
-    r, c, v, nnz, overflowed = bsr_matmul_coo(plan, a.vals[:na],
-                                              b.vals[:nb], sr, cap)
+    r, c, v, nnz, overflowed = bsr_matmul_coo(plan, a_vals, b_vals, sr, cap)
     out = AssocTensor(r, c, v, nnz, a.row_space, b.col_space, None)
     out.overflow = overflowed
     return out
 
 
 def matmul_reduce(a, b, axis: int, semiring=PLUS_TIMES, *,
-                  impl: str = "auto", kernel_impl: str = "auto"
-                  ) -> jnp.ndarray:
+                  impl: str = "auto", kernel_impl: str = "auto",
+                  a_keep: Optional[np.ndarray] = None,
+                  b_keep: Optional[np.ndarray] = None) -> jnp.ndarray:
     """Fused ``⊕-reduce(A ⊗.⊕ B, axis)`` — C is never materialized.
 
     ``axis=1`` ⊕-folds over columns → vector over ``a.row_space``;
@@ -411,7 +472,10 @@ def matmul_reduce(a, b, axis: int, semiring=PLUS_TIMES, *,
     out_len = m if axis == 1 else n
     ra, ca, na = _valid_host(a)
     rb, cb, nb = _valid_host(b)
-    if na == 0 or nb == 0 or out_len == 0:
+    ra, ca, a_vals = _apply_keep(a, ra, ca, na, a_keep)
+    rb, cb, b_vals = _apply_keep(b, rb, cb, nb, b_keep)
+    filtered = a_keep is not None or b_keep is not None
+    if len(ra) == 0 or len(rb) == 0 or out_len == 0:
         return jnp.full(max(out_len, 0), sr.zero, jnp.float32)
 
     if impl == "coo":
@@ -419,17 +483,28 @@ def matmul_reduce(a, b, axis: int, semiring=PLUS_TIMES, *,
         # (the same shape DistAssoc shards run, minus the collective)
         products = _exact_products(ca, rb, k)
         expand = max(8, _round_up(max(products, 1), 8))
-        pr, pc, pv, _ = expand_join_coo(a.rows, a.cols, a.vals,
-                                        b.rows, b.cols, b.vals,
+        ar, ac, av = ((a.rows, a.cols, a.vals) if a_keep is None
+                      else _pad_triples(ra, ca, a_vals, a.capacity, sr.zero))
+        br, bc, bv = ((b.rows, b.cols, b.vals) if b_keep is None
+                      else _pad_triples(rb, cb, b_vals, b.capacity, sr.zero))
+        pr, pc, pv, _ = expand_join_coo(ar, ac, av, br, bc, bv,
                                         sr.mul, zero=sr.zero, expand=expand)
         keys = pr if axis == 1 else pc
         vec = jnp.full(out_len, sr.zero, jnp.float32)
         return scatter_combine(vec, keys, pv, sr)  # SENT keys drop
 
     def _dense() -> jnp.ndarray:
-        da, db = _densify_aligned(a, b, sr)
-        mask = make_block_mask(a.rows, a.cols, a.valid_mask(),
-                               da.shape[0] // TILE, da.shape[1] // TILE)
+        if filtered:
+            da = _scatter_dense(ra, ca, a_vals, m, k, sr.zero)
+            db = _scatter_dense(rb, cb, b_vals, k, n, sr.zero)
+            mask = make_block_mask(
+                jnp.asarray(ra, jnp.int32), jnp.asarray(ca, jnp.int32),
+                jnp.ones(len(ra), bool),
+                da.shape[0] // TILE, da.shape[1] // TILE)
+        else:
+            da, db = _densify_aligned(a, b, sr)
+            mask = make_block_mask(a.rows, a.cols, a.valid_mask(),
+                                   da.shape[0] // TILE, da.shape[1] // TILE)
         vec = bsr_spgemm_reduce(da, mask, db, axis=axis, semiring=sr,
                                 impl=kernel_impl)
         return vec[:out_len]
@@ -443,9 +518,9 @@ def matmul_reduce(a, b, axis: int, semiring=PLUS_TIMES, *,
 
     # bsr strategy: fold tile products straight into the output vector —
     # no C tiles, no dedup (⊕ over all products per row/col IS the answer)
-    a_tiles = pack_tiles(a.vals[:na], plan.a_tile_of, plan.a_lr, plan.a_lc,
+    a_tiles = pack_tiles(a_vals, plan.a_tile_of, plan.a_lr, plan.a_lc,
                          len(plan.a_blocks), TILE, TILE, sr.zero)
-    b_tiles = pack_tiles(b.vals[:nb], plan.b_tile_of, plan.b_lr, plan.b_lc,
+    b_tiles = pack_tiles(b_vals, plan.b_tile_of, plan.b_lr, plan.b_lc,
                          len(plan.b_blocks), TILE, TILE, sr.zero)
     padded = _round_up(max(out_len, 1), TILE)
     vec = jnp.full(padded, sr.zero, jnp.float32)

@@ -1,0 +1,470 @@
+"""Lazy D4M expressions: planner rewrites, fusion, 3-layer parity, guards.
+
+The contract under test: ``expr.collect()`` equals the eager chain on the
+host ``Assoc``, the device ``AssocTensor`` and the sharded ``DistAssoc``
+for every registered semiring — while the planner pushes selectors,
+collapses ``MatMul→Reduce`` onto the fused epilogues, fuses ⊕ chains into
+one canonicalize pass, hash-conses repeated subtrees (``PLAN_STATS``) and
+NEVER materializes the sliced operands of a fused select+matmul.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (Assoc, AssocTensor, DISPATCH_STATS, EwiseAdd,
+                        EwiseMul, LazyExpr, MatMul, Mask, PLAN_STATS,
+                        Positions, Range, Reduce, REGISTRY, Select, Source,
+                        StartsWith, Transpose, lazy, reset_plan_stats)
+from repro.core import plan
+from repro.core.dist_assoc import DistAssoc
+from repro.core.select import All
+
+rng = np.random.default_rng(17)
+
+
+def _triples(seed, n=60, nr=30, nc=30):
+    r = np.random.default_rng(seed)
+    return (r.integers(0, nr, n).astype(str),
+            r.integers(0, nc, n).astype(str),
+            r.uniform(0.5, 5.0, n))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1,), ("data",))
+
+
+@pytest.fixture(scope="module")
+def layers(mesh):
+    """(host, device, dist) triplets of two arrays A, B."""
+    rows, cols, vals = _triples(3)
+    rows2, cols2, vals2 = _triples(5, nc=20)
+    ha = Assoc(rows, cols, vals, aggregate="sum")
+    hb = Assoc(rows2, cols2, vals2, aggregate="sum")
+    da = AssocTensor.from_triples(rows, cols, vals, aggregate="sum",
+                                  capacity=64)
+    db = AssocTensor.from_triples(rows2, cols2, vals2, aggregate="sum",
+                                  capacity=64)
+    Da = DistAssoc.from_triples(rows, cols, vals, mesh, aggregate="sum")
+    return ha, hb, da, db, Da
+
+
+def _close(got: dict, want: dict, tol=1e-3):
+    assert set(got) == set(want), set(got) ^ set(want)
+    for k in want:
+        assert abs(got[k] - want[k]) <= tol * (1 + abs(want[k])), \
+            (k, got[k], want[k])
+
+
+def _vec_dict(vec, keys, zero):
+    return {k: v for k, v in zip(keys, np.asarray(vec, np.float64).tolist())
+            if v != zero and not (np.isinf(zero) and np.isinf(v)
+                                  and (v < 0) == (zero < 0))}
+
+
+SEL = Range("1", "2")
+
+
+# ---------------------------------------------------------------------------
+# 3-layer parity: collect() ≡ eager, full semiring registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sr_name", sorted(REGISTRY))
+def test_parity_select_matmul(layers, sr_name):
+    ha, hb, da, db, Da = layers
+    sr = REGISTRY[sr_name]
+    want = ha._select_eager((SEL, slice(None))).matmul(hb, sr).to_dict()
+    got_h = ha.lazy()[SEL, :].matmul(hb.lazy(), semiring=sr).collect()
+    _close(got_h.to_dict(), want)
+    got_d = da.lazy()[SEL, :].matmul(db.lazy(), semiring=sr).collect()
+    _close(got_d.to_assoc().to_dict(), want)
+    got_D = Da.lazy()[SEL, :].matmul(db.lazy(), semiring=sr).collect()
+    _close(got_D.to_assoc().to_dict(), want)
+
+
+@pytest.mark.parametrize("sr_name", sorted(REGISTRY))
+def test_parity_fused_matmul_reduce(layers, sr_name):
+    ha, hb, da, db, Da = layers
+    sr = REGISTRY[sr_name]
+    C = ha._select_eager((SEL, slice(None))).matmul(hb, sr)
+    want = _vec_dict(plan.host_axis_reduce(C, 1, sr), C.row.tolist(), sr.zero)
+    g_h = ha.lazy()[SEL, :].matmul(hb.lazy(), semiring=sr) \
+            .sum(axis=1, semiring=sr).collect()
+    _close(_vec_dict(g_h, ha.row.tolist(), sr.zero), want)
+    g_d = da.lazy()[SEL, :].matmul(db.lazy(), semiring=sr) \
+            .sum(axis=1, semiring=sr).collect()
+    _close(_vec_dict(g_d, da.row_space.keys.tolist(), sr.zero), want)
+    g_D = Da.lazy()[SEL, :].matmul(db.lazy(), semiring=sr) \
+            .sum(axis=1, semiring=sr).collect()
+    _close(_vec_dict(g_D, Da.local.row_space.keys.tolist(), sr.zero), want)
+
+
+@pytest.mark.parametrize("sr_name", sorted(REGISTRY))
+def test_parity_ewise(layers, sr_name):
+    ha, hb, da, db, _ = layers
+    sr = REGISTRY[sr_name]
+    want_add = ha.add(hb, sr).to_dict()
+    _close(ha.lazy().add(hb.lazy(), semiring=sr).collect().to_dict(),
+           want_add)
+    _close(da.lazy().add(db.lazy(), semiring=sr).collect()
+           .to_assoc().to_dict(), want_add)
+    want_mul = ha.mul(hb, sr).to_dict()
+    _close(ha.lazy().mul(hb.lazy(), semiring=sr).collect().to_dict(),
+           want_mul)
+    _close(da.lazy().mul(db.lazy(), semiring=sr).collect()
+           .to_assoc().to_dict(), want_mul)
+
+
+def test_parity_sum_axis(layers):
+    ha, _, da, _, Da = layers
+    want = {k[0]: v for k, v in ha.sum(axis=1).to_dict().items()}
+    got_h = _vec_dict(ha.lazy().sum(axis=1).collect(), ha.row.tolist(), 0.0)
+    _close(got_h, want)
+    got_d = _vec_dict(da.lazy().sum(axis=1).collect(),
+                      da.row_space.keys.tolist(), 0.0)
+    _close(got_d, want, tol=1e-4)
+    got_D = _vec_dict(Da.lazy().sum(axis=1).collect(),
+                      Da.local.row_space.keys.tolist(), 0.0)
+    _close(got_D, want, tol=1e-4)
+    # axis=0 and scalar
+    want0 = {k[1]: v for k, v in ha.sum(axis=0).to_dict().items()}
+    _close(_vec_dict(da.lazy().sum(axis=0).collect(),
+                     da.col_space.keys.tolist(), 0.0), want0, tol=1e-4)
+    assert abs(float(ha.lazy().sum().collect()) - ha.sum()) < 1e-9
+    assert abs(float(da.lazy().sum().collect()) - ha.sum()) < 1e-2
+
+
+def test_parity_transpose_dist_ewise(layers, mesh):
+    ha, _, da, _, Da = layers
+    want = ha.transpose().to_dict()
+    _close(ha.lazy().T.collect().to_dict(), want)
+    _close(da.lazy().T.collect().to_assoc().to_dict(), want)
+    # dist transpose gathers to a replicated device tensor (sqin rule)
+    _close(Da.lazy().T.collect().to_assoc().to_dict(), want)
+    # dist element-wise on shared keyspaces
+    want2 = (ha + ha).to_dict()
+    _close((Da.lazy() + Da.lazy()).collect().to_assoc().to_dict(), want2,
+           tol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# planner rewrites
+# ---------------------------------------------------------------------------
+
+def _src():
+    return Source(object())
+
+
+def test_pushdown_through_transpose():
+    reset_plan_stats()
+    e = plan.optimize(Transpose(_src())[StartsWith("a"), Range("b", "c")])
+    assert isinstance(e, Transpose)
+    inner = e.child
+    assert isinstance(inner, Select)
+    assert isinstance(inner.row_sel, Range)       # axes swapped
+    assert isinstance(inner.col_sel, StartsWith)
+    assert PLAN_STATS["pushdown"] == 1
+
+
+def test_pushdown_through_ewise_and_matmul():
+    reset_plan_stats()
+    e = plan.optimize(EwiseAdd(_src(), _src())[StartsWith("a"), :])
+    assert isinstance(e, EwiseAdd)
+    assert isinstance(e.a, Select) and isinstance(e.b, Select)
+    m = plan.optimize(MatMul(_src(), _src())[StartsWith("a"), Range("b", "c")])
+    assert isinstance(m, MatMul)
+    assert isinstance(m.a, Select) and isinstance(m.a.row_sel, StartsWith)
+    assert isinstance(m.a.col_sel, All)           # contraction untouched
+    assert isinstance(m.b, Select) and isinstance(m.b.col_sel, Range)
+    assert PLAN_STATS["pushdown"] == 2
+
+
+def test_nested_selects_compose():
+    e = plan.optimize(_src()[StartsWith("a"), :][Range("b", "c"), :])
+    assert isinstance(e, Select) and isinstance(e.child, Source)
+
+
+def test_positions_and_mask_not_pushed():
+    reset_plan_stats()
+    e = plan.optimize(Transpose(_src())[Positions([0, 2]), :])
+    assert isinstance(e, Select)                  # stayed on top
+    assert isinstance(e.child, Transpose)
+    m = plan.optimize(EwiseAdd(_src(), _src())[Mask(np.ones(3, bool)), :])
+    assert isinstance(m, Select)
+    assert PLAN_STATS["pushdown"] == 0
+
+
+def test_matmul_reduce_fuses_only_on_matching_semiring():
+    e = plan.optimize(MatMul(_src(), _src()).sum(axis=1))
+    assert isinstance(e, plan._MatMulReduce)
+    # mismatched ⊕ must NOT fuse: the user asked for a different monoid
+    e2 = plan.optimize(MatMul(_src(), _src()).sum(axis=1, semiring="max_min"))
+    assert isinstance(e2, Reduce)
+    # full reduction (axis=None) keeps the product either
+    e3 = plan.optimize(MatMul(_src(), _src()).sum())
+    assert isinstance(e3, Reduce)
+
+
+def test_ewise_chain_flattens():
+    reset_plan_stats()
+    e = plan.optimize(_src() + _src() + _src() + _src())
+    assert isinstance(e, plan._EwiseAddN)
+    assert len(e.terms) == 4
+    assert PLAN_STATS["ewise_fused"] == 1
+
+
+# ---------------------------------------------------------------------------
+# hash-consing (PLAN_STATS) + fusion counters on real executions
+# ---------------------------------------------------------------------------
+
+def test_hash_consing_repeated_subtree(layers):
+    ha, hb, *_ = layers
+    reset_plan_stats()
+    sq = ha.lazy() @ ha.lazy().T
+    out = (sq * sq).collect()
+    # the repeated AAᵀ subtree evaluates once: one hit, and the memoized
+    # result feeds both EwiseMul operands
+    assert PLAN_STATS["hits"] == 1
+    want = (lambda c: (c * c).to_dict())(ha @ ha.T)
+    _close(out.to_dict(), want)
+
+
+def test_fusion_counters_fire(layers):
+    ha, hb, da, db, _ = layers
+    reset_plan_stats()
+    (ha.lazy()[SEL, :] @ hb.lazy()).sum(axis=1).collect()
+    assert PLAN_STATS["fused_matmul_reduce"] == 1
+    assert PLAN_STATS["fused_select_matmul"] == 1
+    (da.lazy() + db.lazy() + da.lazy()).collect()
+    assert PLAN_STATS["ewise_fused"] == 1
+
+
+def test_ewise_chain_fusion_parity(layers):
+    ha, hb, da, db, Da = layers
+    want = (ha + hb + ha).to_dict()
+    _close((ha.lazy() + hb.lazy() + ha.lazy()).collect().to_dict(), want)
+    _close((da.lazy() + db.lazy() + da.lazy()).collect()
+           .to_assoc().to_dict(), want)
+    wantD = (ha + ha + ha).to_dict()
+    _close((Da.lazy() + Da.lazy() + Da.lazy()).collect()
+           .to_assoc().to_dict(), wantD, tol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the never-materializes guard: fused select+matmul builds no sliced array
+# ---------------------------------------------------------------------------
+
+def _forbid_selection(monkeypatch):
+    def boom(self, *a, **k):  # pragma: no cover - failure path
+        raise AssertionError("sliced operand was materialized")
+    monkeypatch.setattr(Assoc, "_select_eager", boom)
+    monkeypatch.setattr(AssocTensor, "_compact", boom)
+    monkeypatch.setattr(DistAssoc, "_select_eager", boom)
+
+
+def test_never_materializes_fused_select_matmul(layers, monkeypatch):
+    ha, hb, da, db, Da = layers
+    want = ha._select_eager((SEL, slice(None))) \
+        .matmul(ha._select_eager((slice(None), SEL)).T).to_dict()
+    _forbid_selection(monkeypatch)
+    got_h = (ha.lazy()[SEL, :] @ ha.lazy()[:, SEL].T).collect()
+    got_d = (da.lazy()[SEL, :] @ da.lazy()[:, SEL].T).collect()
+    got_D = (Da.lazy()[SEL, :] @ db.lazy()[SEL, :].T).collect()
+    # fused reduce epilogue under the same guard
+    vec = (da.lazy()[SEL, :] @ db.lazy()).sum(axis=1).collect()
+    monkeypatch.undo()
+    _close(got_h.to_dict(), want)
+    _close(got_d.to_assoc().to_dict(), want)
+    wantD = ha._select_eager((SEL, slice(None))) \
+        .matmul(hb._select_eager((SEL, slice(None))).T).to_dict()
+    _close(got_D.to_assoc().to_dict(), wantD)
+    Cw = ha._select_eager((SEL, slice(None))) @ hb
+    wantv = plan.host_axis_reduce(Cw, 1)
+    gotv = _vec_dict(vec, da.row_space.keys.tolist(), 0.0)
+    _close(gotv, _vec_dict(wantv, Cw.row.tolist(), 0.0))
+
+
+# ---------------------------------------------------------------------------
+# operators accept expression nodes (deferred, not collected)
+# ---------------------------------------------------------------------------
+
+def test_mixed_eager_lazy_operands(layers):
+    ha, hb, da, db, _ = layers
+    e = ha @ hb.lazy()
+    assert isinstance(e, LazyExpr)                # deferred, not an Assoc
+    _close(e.collect().to_dict(), (ha @ hb).to_dict())
+    e2 = da + db.lazy()
+    assert isinstance(e2, LazyExpr)
+    _close(e2.collect().to_assoc().to_dict(), (da + db).to_assoc().to_dict())
+
+
+def test_sqin_sqout_lazy(layers):
+    ha, _, da, _, _ = layers
+    _close(ha.lazy().sqin().collect().to_dict(), ha.sqin().to_dict())
+    v = da.lazy().sqout(reduce=1).collect()
+    np.testing.assert_allclose(np.asarray(v), np.asarray(da.sqout(reduce=1)),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# shared reduce path (satellite): eager sum/reduce_rows route through plan
+# ---------------------------------------------------------------------------
+
+def test_assoc_sum_semiring_generic():
+    a = Assoc(["r1", "r1", "r2"], ["c1", "c2", "c1"], [1.0, 2.0, 3.0])
+    assert a.sum() == 6.0
+    assert a.sum(axis=1).get("r1", "sum") == 3.0
+    mx = a.sum(axis=0, semiring="max_times")
+    assert mx.get("sum", "c1") == 3.0 and mx.get("sum", "c2") == 2.0
+
+
+def test_tensor_reduce_cols(layers):
+    _, _, da, _, _ = layers
+    want = np.asarray(da.transpose().reduce_rows())
+    got = np.asarray(da.reduce_cols())
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_dist_row_reduce(layers):
+    ha, _, _, _, Da = layers
+    want = {k[0]: v for k, v in ha.sum(axis=1).to_dict().items()}
+    got = _vec_dict(Da.row_reduce(), Da.local.row_space.keys.tolist(), 0.0)
+    _close(got, want, tol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# DistAssoc.__setitem__ (satellite): shard-local selector assignment
+# ---------------------------------------------------------------------------
+
+def test_dist_setitem_parity(mesh):
+    rows, cols, vals = _triples(11)
+    dt = AssocTensor.from_triples(rows, cols, vals, aggregate="sum",
+                                  capacity=64)
+    Dd = DistAssoc.from_triples(rows, cols, vals, mesh, aggregate="sum")
+    dt[SEL, :] = 9.0
+    Dd[SEL, :] = 9.0
+    _close(Dd.to_assoc().to_dict(), dt.to_assoc().to_dict(), tol=1e-5)
+    # scattered selector form too
+    dt[Mask(np.arange(len(dt.row_space)) % 3 == 0), :] = 2.5
+    Dd[Mask(np.arange(len(Dd.local.row_space)) % 3 == 0), :] = 2.5
+    _close(Dd.to_assoc().to_dict(), dt.to_assoc().to_dict(), tol=1e-5)
+    with pytest.raises(TypeError):
+        Dd[SEL, :] = "nope"
+
+
+# ---------------------------------------------------------------------------
+# misc API
+# ---------------------------------------------------------------------------
+
+def test_plan_stats_exported():
+    from repro.core import PLAN_STATS as ps, reset_plan_stats as rps
+    rps()
+    assert set(ps) >= {"hits", "misses", "pushdown", "fused_matmul_reduce",
+                       "fused_select_matmul", "ewise_fused"}
+    assert all(v == 0 for v in ps.values())
+
+
+def test_reduce_rejects_bad_axis(layers):
+    ha, *_ = layers
+    with pytest.raises(ValueError):
+        ha.lazy().sum(axis=2)
+
+
+def test_cross_layer_ewise_raises(layers):
+    ha, _, da, _, _ = layers
+    with pytest.raises(TypeError):
+        (ha.lazy() + da.lazy()).collect()
+
+
+def test_chained_reduce():
+    a = Assoc(["r1", "r1", "r2"], ["c1", "c2", "c1"], [1.0, 2.0, 3.0])
+    assert float((a.lazy() @ a.lazy().T).sum(axis=1).sum().collect()) == \
+        pytest.approx(float(plan.host_axis_reduce(a @ a.T, None)))
+    with pytest.raises(ValueError):
+        a.lazy().sum(axis=1).sum(axis=0).collect()
+
+
+# ---------------------------------------------------------------------------
+# true multi-shard run (8 simulated devices, subprocess — the XLA device
+# count locks at first jax init, so this cannot run in-process)
+# ---------------------------------------------------------------------------
+
+DIST_PROG = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+from repro.core import Assoc, AssocTensor, PLAN_STATS, Range, reset_plan_stats
+from repro.core import plan
+from repro.core.dist_assoc import DistAssoc
+
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+n = 96
+rows = rng.integers(0, 40, n).astype(str)
+cols = rng.integers(0, 40, n).astype(str)
+vals = rng.uniform(0.5, 5.0, n)
+D = DistAssoc.from_triples(rows, cols, vals, mesh, aggregate="sum")
+H = Assoc(rows, cols, vals, aggregate="sum")
+sel = Range("1", "2")
+
+def close(g, w, tol=1e-3):
+    assert set(g) == set(w), sorted(set(g) ^ set(w))
+    for k in w:
+        assert abs(g[k] - w[k]) <= tol * (1 + abs(w[k])), (k, g[k], w[k])
+
+# fused select+matmul+reduce, shard-locally masked (zero collectives in
+# the product, one in the reduce)
+bt = H[sel, :].T.to_tensor()
+reset_plan_stats()
+vec = (D.lazy()[sel, :] @ bt.lazy()).sum(axis=1).collect()
+assert PLAN_STATS["fused_select_matmul"] == 1, PLAN_STATS
+assert PLAN_STATS["fused_matmul_reduce"] == 1, PLAN_STATS
+C = H[sel, :] @ H[sel, :].T
+want = dict(zip(C.row.tolist(), plan.host_axis_reduce(C, 1).tolist()))
+got = {k: v for k, v in zip(D.local.row_space.keys.tolist(),
+                            np.asarray(vec).tolist()) if v != 0}
+close(got, want)
+
+# unreduced fused select+matmul
+g2 = (D.lazy()[sel, :] @ bt.lazy()).collect().to_assoc().to_dict()
+close(g2, C.to_dict())
+
+# __setitem__ parity against the single-device AssocTensor semantics
+T = AssocTensor.from_triples(rows, cols, vals, aggregate="sum", capacity=128)
+T[sel, "2,:,3,"] = 7.5
+D[sel, "2,:,3,"] = 7.5
+close(D.to_assoc().to_dict(), T.to_assoc().to_dict(), tol=1e-4)
+
+# lazy sqin/sqout on a sharded array: the transpose gathers, and the
+# still-sharded other operand must be pulled to replicated (eager rule)
+D2 = DistAssoc.from_triples(rows, cols, vals, mesh, aggregate="sum")
+close(D2.lazy().sqin().collect().to_assoc().to_dict(),
+      H.sqin().to_dict(), tol=1e-3)
+vq = D2.lazy().sqout(reduce=1).collect()
+wq = D2.sqout(reduce=1)
+assert np.allclose(np.asarray(vq), np.asarray(wq), rtol=1e-4, atol=1e-4)
+
+# n-ary ewise fusion on 8 shards + row_reduce
+g3 = (D2.lazy() + D2.lazy() + D2.lazy()).collect().to_assoc().to_dict()
+close(g3, (H + H + H).to_dict(), tol=1e-4)
+rr = {k: v for k, v in zip(D2.local.row_space.keys.tolist(),
+                           np.asarray(D2.row_reduce()).tolist()) if v != 0}
+close(rr, {k[0]: v for k, v in H.sum(axis=1).to_dict().items()}, tol=1e-4)
+
+print(json.dumps({"ok": True}))
+"""
+
+
+def test_eight_shard_pipeline():
+    import json
+    import subprocess
+    import sys
+
+    env = {k: v for k, v in __import__("os").environ.items()
+           if k != "XLA_FLAGS"}
+    out = subprocess.run([sys.executable, "-c", DIST_PROG], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]
