@@ -1,0 +1,97 @@
+"""Benchmark regression gate: compare a fresh run against a committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline BENCH_matmul.json --new /tmp/BENCH_matmul_new.json \
+        [--threshold 0.25]
+
+Rows are matched on the ``(bench, impl, n)`` triple — the intersection of
+the two files.  A matched row REGRESSES when::
+
+    new.seconds > (1 + threshold) * old.seconds
+
+Rows present only in the new file (new kernels, new strategies) are
+allowed and reported informationally; rows present only in the baseline
+are reported as missing (warning, not failure — benches legitimately
+shrink their n range).  Stats rows (``nnz <= 1``) are skipped: they carry
+counters, not timings.  Exit code 1 iff any matched row regresses.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+Key = Tuple[str, str, int]
+
+
+def _index(rows: List[Dict]) -> Dict[Key, Dict]:
+    out = {}
+    for r in rows:
+        out[(r["bench"], r["impl"], r["n"])] = r
+    return out
+
+
+def compare(baseline: List[Dict], new: List[Dict],
+            threshold: float = 0.25) -> Dict:
+    """Return {'regressions': [...], 'improved': [...], 'added': [...],
+    'missing': [...]} comparing matched (bench, impl, n) rows."""
+    old_ix, new_ix = _index(baseline), _index(new)
+    regressions, improved, ok = [], [], []
+    for key in sorted(set(old_ix) & set(new_ix)):
+        old, cur = old_ix[key], new_ix[key]
+        if old.get("nnz", 0) <= 1 or cur.get("nnz", 0) <= 1:
+            continue  # counter/stats rows carry no timing signal
+        ratio = cur["seconds"] / max(old["seconds"], 1e-12)
+        row = {"key": key, "old_s": old["seconds"],
+               "new_s": cur["seconds"], "ratio": ratio}
+        if ratio > 1.0 + threshold:
+            regressions.append(row)
+        elif ratio < 1.0 - threshold:
+            improved.append(row)
+        else:
+            ok.append(row)
+    return {
+        "regressions": regressions,
+        "improved": improved,
+        "ok": ok,
+        "added": sorted(set(new_ix) - set(old_ix)),
+        "missing": sorted(set(old_ix) - set(new_ix)),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--new", required=True)
+    ap.add_argument("--threshold", type=float, default=0.25)
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    res = compare(baseline, new, threshold=args.threshold)
+
+    def _fmt(key: Key) -> str:
+        return f"{key[0]}[{key[1]},n={key[2]}]"
+
+    for r in res["regressions"]:
+        print(f"REGRESSION {_fmt(r['key'])}: {r['old_s'] * 1e6:.0f}us -> "
+              f"{r['new_s'] * 1e6:.0f}us ({r['ratio']:.2f}x)")
+    for r in res["improved"]:
+        print(f"improved   {_fmt(r['key'])}: {r['old_s'] * 1e6:.0f}us -> "
+              f"{r['new_s'] * 1e6:.0f}us ({r['ratio']:.2f}x)")
+    for key in res["added"]:
+        print(f"new row    {_fmt(key)} (no baseline — allowed)")
+    for key in res["missing"]:
+        print(f"missing    {_fmt(key)} (in baseline, not in new run)")
+    n_match = (len(res["regressions"]) + len(res["improved"])
+               + len(res["ok"]))
+    print(f"compared {n_match} matched rows; "
+          f"{len(res['regressions'])} regression(s) "
+          f"at threshold {args.threshold:.0%}")
+    return 1 if res["regressions"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

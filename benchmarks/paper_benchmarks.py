@@ -337,6 +337,24 @@ def _matmul_setup(n: int, regime: str):
 _MATMUL_DENSE_MAX_N = 10
 
 
+def _pairlist_roofline(dev_a, dev_b):
+    """Pair-list plan → HBM-traffic model for the device_bsr rows (None if
+    the planner falls back to dense or the model import fails)."""
+    try:
+        from benchmarks.roofline import pairlist_model
+        from repro.core import spgemm
+        from repro.core.semiring import get_semiring
+        sr = get_semiring("plus_times")
+        a, b, ks = spgemm._contraction_aligned(dev_a, dev_b, sr)
+        ra, ca, _ = spgemm._valid_host(a)
+        rb, cb, _ = spgemm._valid_host(b)
+        plan = spgemm.plan_matmul(ra, ca, rb, cb, len(a.row_space), len(ks),
+                                  len(b.col_space), impl="bsr")
+        return pairlist_model(len(plan.pair_a), len(plan.c_blocks))
+    except Exception:
+        return None
+
+
 def run_matmul(n_lo: int = 5, n_hi: int = 12, device: bool = True
                ) -> List[Dict]:
     """Rows for the matmul-strategy benches (BENCH_matmul.json schema)."""
@@ -362,8 +380,22 @@ def run_matmul(n_lo: int = 5, n_hi: int = 12, device: bool = True
             def db():
                 dev_a.matmul(dev_b, impl="bsr").nnz.block_until_ready()
             db()
-            rows.append({"bench": bench, "impl": "device_bsr", "n": n,
-                         "seconds": _time(db), "nnz": nnz})
+            bsr_row = {"bench": bench, "impl": "device_bsr", "n": n,
+                       "seconds": _time(db), "nnz": nnz}
+            model = _pairlist_roofline(dev_a, dev_b)
+            if model is not None:
+                # memory-bound floor vs achieved (fraction ≤ 1 on TPU;
+                # informational on CPU backends)
+                bsr_row["roofline_frac"] = model["hbm_s"] / bsr_row["seconds"]
+                bsr_row["bytes_per_pair"] = model["bytes_per_pair"]
+            rows.append(bsr_row)
+
+            def dbc():
+                dev_a.matmul(dev_b, impl="bsr",
+                             kernel_impl="chunked").nnz.block_until_ready()
+            dbc()
+            rows.append({"bench": bench, "impl": "device_bsr_chunked",
+                         "n": n, "seconds": _time(dbc), "nnz": nnz})
             if regime == "sparse":
                 def fused():
                     dev_a.sqout(reduce=1).block_until_ready()
@@ -398,8 +430,9 @@ def run_matmul(n_lo: int = 5, n_hi: int = 12, device: bool = True
 def run_pipeline(n_lo: int = 5, n_hi: int = 10, device: bool = True
                  ) -> List[Dict]:
     """Rows for the pipeline benches (BENCH_pipeline.json schema)."""
-    from repro.core import Range
+    from repro.core import PLAN_STATS, Range, reset_plan_stats
 
+    reset_plan_stats()  # cold planner: the stats row below measures THIS run
     rows = []
     for n in range(n_lo, n_hi + 1):
         host_a, host_b, dev_a, dev_b = _matmul_setup(n, "sparse")
@@ -460,6 +493,12 @@ def run_pipeline(n_lo: int = 5, n_hi: int = 10, device: bool = True
                      "n": n, "seconds": _time(d_chain), "nnz": nnz})
         rows.append({"bench": "pipeline_ewise", "impl": "device_planned",
                      "n": n, "seconds": _time(d_chain_planned), "nnz": nnz})
+    # the cross-collect plan cache at work: every timed repeat of a planned
+    # pipeline after the first is a pure cache hit (same structural key)
+    rows.append({"bench": "plan_cache", "impl": "stats", "n": 0,
+                 "seconds": 0.0, "nnz": 1,
+                 "plan_hits": PLAN_STATS["plan_hits"],
+                 "plan_misses": PLAN_STATS["plan_misses"]})
     return rows
 
 

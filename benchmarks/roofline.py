@@ -13,6 +13,31 @@ import json
 from typing import Dict, List
 
 HBM_PER_CHIP = 16e9  # TPU v5e
+HBM_BW = 819e9       # TPU v5e HBM bandwidth, bytes/s
+TILE = 128
+
+
+def pairlist_model(n_pairs: int, n_c: int, *, tile: int = TILE,
+                   dtype_bytes: int = 4) -> Dict:
+    """HBM-traffic roofline for the scalar-prefetch pair-list BSR kernel.
+
+    Each grid step DMAs exactly the TWO tiles its pair contracts (the
+    pair lists themselves ride in SMEM — negligible), and each C tile is
+    written ONCE from VMEM at its group's flush:
+
+        bytes = n_pairs · 2 · tile² · dtype + n_c · tile² · dtype
+
+    so bytes-per-pair ≈ 2·tile²·dtype = 131072 B (f32) plus the amortized
+    C write-out.  ``hbm_s`` is the memory-bound floor at v5e bandwidth;
+    achieved/floor is the roofline fraction the bench reports.
+    """
+    tile_bytes = tile * tile * dtype_bytes
+    bytes_total = n_pairs * 2 * tile_bytes + n_c * tile_bytes
+    return {
+        "bytes": bytes_total,
+        "bytes_per_pair": (bytes_total / n_pairs) if n_pairs else 0.0,
+        "hbm_s": bytes_total / HBM_BW,
+    }
 
 RECOMMENDATION = {
     ("memory_s", "train"): "flash-attention kernel (keep S² scores in VMEM)",

@@ -58,6 +58,11 @@ def main() -> None:
             name = f"{r['bench']}[{r['impl']},n={r['n']}]"
             us = r["seconds"] * 1e6
             derived = f"nnz={r['nnz']};ns_per_nnz={1e9 * r['seconds'] / r['nnz']:.1f}"
+            if "roofline_frac" in r:
+                derived += f";roofline_frac={r['roofline_frac']:.2e}"
+            if "plan_hits" in r:
+                derived += (f";plan_hits={r['plan_hits']}"
+                            f";plan_misses={r['plan_misses']}")
             print(f"{name},{us:.1f},{derived}")
 
     if run_core:

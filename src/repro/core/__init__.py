@@ -27,7 +27,7 @@ from .dist_assoc import DistAssoc
 from .expr import (EwiseAdd, EwiseMul, LazyExpr, MatMul, Reduce, Select,
                    Source, Transpose, lazy)
 from .keyspace import KeySpace, UNION_STATS, clear_union_cache
-from .plan import PLAN_STATS, reset_plan_stats
+from .plan import PLAN_STATS, clear_plan_cache, reset_plan_stats
 from .select import (All, CACHE_STATS, Keys, Mask, Match, Positions, Range,
                      Selector, StartsWith, Where, as_selector,
                      clear_compile_cache, compile_selector, reset_cache_stats)
@@ -54,7 +54,7 @@ __all__ = [
     "LazyExpr", "Source", "Select", "EwiseAdd", "EwiseMul", "MatMul",
     "Reduce", "Transpose", "lazy",
     # telemetry counters + reset helpers
-    "PLAN_STATS", "reset_plan_stats",
+    "PLAN_STATS", "reset_plan_stats", "clear_plan_cache",
     "CACHE_STATS", "clear_compile_cache", "reset_cache_stats",
     "UNION_STATS", "clear_union_cache",
     "DISPATCH_STATS",

@@ -77,10 +77,12 @@ def coo_axis_mask_keep(idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
 
 # Selection-path dispatch counters (eager queries only): which execution
 # path compiled selections take — ``range`` (Pallas range kernel, both axes
-# contiguous), ``hybrid`` (one contiguous axis through the range kernel +
-# one membership gather), ``gather`` (both axes scattered).  Mirrors
-# select.CACHE_STATS; tests and benchmarks read these to pin the fast path.
-DISPATCH_STATS = {"range": 0, "hybrid": 0, "gather": 0}
+# contiguous), ``multirange`` (a multi-interval selection decomposed into
+# ≤4 range-kernel boxes, OR-composed), ``hybrid`` (one contiguous axis
+# through the range kernel + one membership gather), ``gather`` (both axes
+# scattered).  Mirrors select.CACHE_STATS; tests and benchmarks read these
+# to pin the fast path.
+DISPATCH_STATS = {"range": 0, "multirange": 0, "hybrid": 0, "gather": 0}
 
 
 def coo_compact(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
@@ -349,31 +351,37 @@ class AssocTensor:
 
     def matmul(self, other: "AssocTensor", semiring=PLUS_TIMES,
                out_capacity: Optional[int] = None,
-               use_kernel: bool = True, impl: str = "auto") -> "AssocTensor":
+               use_kernel: bool = True, impl: str = "auto",
+               kernel_impl: str = "auto") -> "AssocTensor":
         """Array multiplication ``⊗.⊕`` contracting over col/row keys.
 
         Strings are first reduced via ``logical()`` (paper rule).  Planned
         and executed by :mod:`repro.core.spgemm` — the dense strategy
         contracts MXU-aligned adj tiles through the Pallas semiring matmul;
-        the BSR strategy packs only the present 128×128 tiles and emits the
-        result COO directly, never materializing the dense product; ``impl``
-        overrides the auto heuristic (``"dense"`` / ``"bsr"`` / ``"coo"``).
+        the BSR strategy packs only the present 128×128 tiles and streams
+        them through the scalar-prefetch pair-list kernel, never
+        materializing the dense product; ``impl`` overrides the auto
+        heuristic (``"dense"`` / ``"bsr"`` / ``"coo"``) and ``kernel_impl``
+        the pair-list kernel dispatch (``"pallas"`` / ``"interpret"`` /
+        ``"ref"`` / ``"chunked"``).
         """
         from .spgemm import matmul as _planned_matmul
         return _planned_matmul(self, other, semiring, impl=impl,
                                out_capacity=out_capacity,
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel,
+                               kernel_impl=kernel_impl)
 
     def matmul_reduce(self, other: "AssocTensor", axis: int,
-                      semiring=PLUS_TIMES, *, impl: str = "auto"
-                      ) -> jnp.ndarray:
+                      semiring=PLUS_TIMES, *, impl: str = "auto",
+                      kernel_impl: str = "auto") -> jnp.ndarray:
         """Fused ``⊕-reduce(self ⊗.⊕ other, axis)`` — skips materializing
         the product entirely (Graphulo pushdown; see
         :func:`repro.core.spgemm.matmul_reduce`).  Returns a dense vector
         over ``self.row_space`` (``axis=1``) or ``other.col_space``
         (``axis=0``)."""
         from .spgemm import matmul_reduce as _planned_reduce
-        return _planned_reduce(self, other, axis, semiring, impl=impl)
+        return _planned_reduce(self, other, axis, semiring, impl=impl,
+                               kernel_impl=kernel_impl)
 
     def sqin(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
         """AᵀA — the correlation idiom.  ``reduce=0/1`` returns the fused
@@ -451,41 +459,49 @@ class AssocTensor:
     def _selection_keep(self, ij) -> jnp.ndarray:
         """Compile (row_sel, col_sel) and evaluate the device keep mask.
 
-        The single dispatch point between three execution paths — both
-        ``__getitem__`` and ``__setitem__`` go through here:
+        The single dispatch point between four execution paths — both
+        ``__getitem__`` and ``__setitem__`` go through here, planned by
+        :func:`repro.core.select.plan_boxes`:
 
-        * both axes contiguous → the Pallas range-mask kernel alone;
-        * one axis contiguous (e.g. a ``Match``/``StartsWith`` whose hits
-          happen to be one rank interval — ``Compiled.from_indices``
-          normalizes those to ranges) → the range kernel for that axis
-          (the other bound left open) AND one membership gather for the
-          scattered axis.  First slice of the ROADMAP rank-interval
-          decomposition: a single-interval regex no longer drags the whole
-          selection onto the gather path;
+        * both axes contiguous → ONE Pallas range-mask kernel call;
+        * a multi-interval ``Match``/``Where``/``Keys`` whose hits form ≤4
+          rank boxes → one range-kernel call per box, OR-composed (the
+          boxes are disjoint interval runs, so the OR is exact and the
+          single downstream compaction is the only sort — no merge of
+          extracted lists needed);
+        * one axis boxable, the other scattered → the box calls AND one
+          membership gather for the scattered axis;
         * both axes scattered → two membership gathers (no kernel).
         """
+        from .select import plan_boxes
+
         rc, cc = self._compiled_pair(ij)
-        if rc.is_range and cc.is_range:
-            DISPATCH_STATS["range"] += 1
-            return self._range_keep((rc.lo, rc.hi), (cc.lo, cc.hi))
-        if rc.is_range or cc.is_range:
+        nr = max(len(self.row_space), 1)
+        nc = max(len(self.col_space), 1)
+        boxes, row_gather, col_gather = plan_boxes(rc, cc, nr, nc)
+        if row_gather and col_gather:
+            DISPATCH_STATS["gather"] += 1
+            return self._mask_keep(*self._device_masks(rc, cc))
+        if len(boxes) > 1:
+            DISPATCH_STATS["multirange"] += 1
+        elif row_gather or col_gather:
             DISPATCH_STATS["hybrid"] += 1
-            row_rng = ((rc.lo, rc.hi) if rc.is_range
-                       else (0, max(len(self.row_space), 1)))
-            col_rng = ((cc.lo, cc.hi) if cc.is_range
-                       else (0, max(len(self.col_space), 1)))
-            keep = self._range_keep(row_rng, col_rng)
-            # membership mask built (and uploaded) ONLY for the set axis —
-            # the range axis is already handled by the kernel bounds
-            if not rc.is_range:
-                keep = keep & coo_axis_mask_keep(
-                    self.rows, jnp.asarray(np.ascontiguousarray(rc.mask())))
-            if not cc.is_range:
-                keep = keep & coo_axis_mask_keep(
-                    self.cols, jnp.asarray(np.ascontiguousarray(cc.mask())))
-            return keep
-        DISPATCH_STATS["gather"] += 1
-        return self._mask_keep(*self._device_masks(rc, cc))
+        else:
+            DISPATCH_STATS["range"] += 1
+        keep = self._range_keep((int(boxes[0][0]), int(boxes[0][1])),
+                                (int(boxes[0][2]), int(boxes[0][3])))
+        for b in boxes[1:]:
+            keep = keep | self._range_keep((int(b[0]), int(b[1])),
+                                           (int(b[2]), int(b[3])))
+        # membership mask built (and uploaded) ONLY for a scattered axis —
+        # boxed axes are already handled by the kernel bounds
+        if row_gather:
+            keep = keep & coo_axis_mask_keep(
+                self.rows, jnp.asarray(np.ascontiguousarray(rc.mask())))
+        if col_gather:
+            keep = keep & coo_axis_mask_keep(
+                self.cols, jnp.asarray(np.ascontiguousarray(cc.mask())))
+        return keep
 
     def __getitem__(self, ij) -> "AssocTensor":
         # thin wrapper over the one-node graph (see __add__)

@@ -64,6 +64,12 @@ __all__ = ["DistAssoc"]
 
 _COO_SPEC = ("rows", "cols", "vals")
 
+# auto-strategy crossover for DistAssoc.matmul: below this per-shard
+# expand-join size the jit-safe coo shard_map program wins (one fused
+# dispatch, no host loop); above it the tiled pair-list strategy's
+# O(products-touched) work beats the full expansion buffer
+_BSR_AUTO_EXPAND = 1 << 14
+
 
 @functools.lru_cache(maxsize=256)
 def _matmul_prog(mesh: Mesh, sr, expand: int, out_cap: int):
@@ -159,21 +165,23 @@ def _matvec_prog(mesh: Mesh, sr, nr: int, dt):
     return go
 
 
-def _shard_selection_keep(a0, row_is_range: bool, col_is_range: bool,
+def _shard_selection_keep(a0, row_gather: bool, col_gather: bool,
                           bnds, rm, cm):
     """Shard-local keep mask for a compiled selection — the one dispatch
     body shared by ``__getitem__`` and ``__setitem__`` (range kernel /
-    hybrid / double-gather, exactly as ``AssocTensor._selection_keep``)."""
-    if row_is_range and col_is_range:
-        return coo_range_keep(a0["rows"], a0["cols"], bnds)
-    if row_is_range or col_is_range:
-        keep = coo_range_keep(a0["rows"], a0["cols"], bnds)
-        if not row_is_range:
-            keep = keep & coo_axis_mask_keep(a0["rows"], rm)
-        if not col_is_range:
-            keep = keep & coo_axis_mask_keep(a0["cols"], cm)
-        return keep
-    return coo_mask_keep(a0["rows"], a0["cols"], rm, cm)
+    multirange OR / hybrid / double-gather, exactly as
+    ``AssocTensor._selection_keep``).  ``bnds`` is the ``[k, 4]`` box list
+    from ``select.plan_boxes`` (k static inside the shard_map trace)."""
+    if row_gather and col_gather:
+        return coo_mask_keep(a0["rows"], a0["cols"], rm, cm)
+    keep = coo_range_keep(a0["rows"], a0["cols"], bnds[0])
+    for i in range(1, bnds.shape[0]):
+        keep = keep | coo_range_keep(a0["rows"], a0["cols"], bnds[i])
+    if row_gather:
+        keep = keep & coo_axis_mask_keep(a0["rows"], rm)
+    if col_gather:
+        keep = keep & coo_axis_mask_keep(a0["cols"], cm)
+    return keep
 
 
 class DistAssoc:
@@ -343,32 +351,33 @@ class DistAssoc:
         """Compile (row_sel, col_sel) once on host → shard-broadcast forms.
 
         Shared prologue of ``__getitem__`` and ``__setitem__``: returns
-        ``(row_is_range, col_is_range, bounds, rmask, cmask)`` — the rank
-        box for the Pallas range kernel plus membership masks for any
-        scattered axis.  Dispatch mirrors ``AssocTensor._selection_keep``.
+        ``(row_gather, col_gather, bounds, rmask, cmask)`` — the ``[k, 4]``
+        rank-box list for the Pallas range kernel (``select.plan_boxes``:
+        one box for a contiguous selection, ≤4 OR-composed boxes for a
+        multi-interval one) plus membership masks for any scattered axis.
+        Dispatch mirrors ``AssocTensor._selection_keep``.
         """
-        from .select import compile_selector
+        from .select import compile_selector, plan_boxes
 
         rc = compile_selector(ij[0], self.local.row_space)
         cc = compile_selector(ij[1], self.local.col_space)
         nr = max(len(self.local.row_space), 1)
         nc = max(len(self.local.col_space), 1)
-        row_is_range, col_is_range = rc.is_range, cc.is_range
-        bounds = jnp.asarray(
-            [rc.lo if row_is_range else 0, rc.hi if row_is_range else nr,
-             cc.lo if col_is_range else 0, cc.hi if col_is_range else nc],
-            jnp.int32)
+        boxes, row_gather, col_gather = plan_boxes(rc, cc, nr, nc)
+        bounds = jnp.asarray(boxes, jnp.int32)
         rmask = (jnp.asarray(np.pad(rc.mask(), (0, nr - rc.n)))
-                 if not row_is_range else jnp.zeros((1,), bool))
+                 if row_gather else jnp.zeros((1,), bool))
         cmask = (jnp.asarray(np.pad(cc.mask(), (0, nc - cc.n)))
-                 if not col_is_range else jnp.zeros((1,), bool))
-        if row_is_range and col_is_range:
-            DISPATCH_STATS["range"] += 1
-        elif row_is_range or col_is_range:
+                 if col_gather else jnp.zeros((1,), bool))
+        if row_gather and col_gather:
+            DISPATCH_STATS["gather"] += 1
+        elif len(boxes) > 1:
+            DISPATCH_STATS["multirange"] += 1
+        elif row_gather or col_gather:
             DISPATCH_STATS["hybrid"] += 1
         else:
-            DISPATCH_STATS["gather"] += 1
-        return row_is_range, col_is_range, bounds, rmask, cmask
+            DISPATCH_STATS["range"] += 1
+        return row_gather, col_gather, bounds, rmask, cmask
 
     def __getitem__(self, ij) -> "DistAssoc":
         # thin wrapper over the one-node graph (lazy/eager one path)
@@ -389,7 +398,7 @@ class DistAssoc:
         that axis plus one membership gather for the other; both scattered
         → two gathers.  Nothing densifies.
         """
-        row_is_range, col_is_range, bounds, rmask, cmask = \
+        row_gather, col_gather, bounds, rmask, cmask = \
             self._compiled_selection(ij)
 
         a_dict, spec = self._local_spec()
@@ -400,7 +409,7 @@ class DistAssoc:
         def go(a, bnds, rm, cm):
             a0 = jax.tree.map(lambda x: x[0], a)
             # same raw-array primitives as AssocTensor — layers cannot drift
-            keep = _shard_selection_keep(a0, row_is_range, col_is_range,
+            keep = _shard_selection_keep(a0, row_gather, col_gather,
                                          bnds, rm, cm)
             r, c, v, nnz = coo_compact(a0["rows"], a0["cols"], a0["vals"],
                                        keep)
@@ -429,7 +438,7 @@ class DistAssoc:
             raise TypeError("DistAssoc __setitem__ takes a numeric scalar")
         if not self.local.numeric:
             raise TypeError("DistAssoc __setitem__ requires numeric values")
-        row_is_range, col_is_range, bounds, rmask, cmask = \
+        row_gather, col_gather, bounds, rmask, cmask = \
             self._compiled_selection(ij)
 
         a_dict, spec = self._local_spec()
@@ -439,7 +448,7 @@ class DistAssoc:
                  out_specs=P("data", None), check_rep=False)
         def go(a, bnds, rm, cm):
             a0 = jax.tree.map(lambda x: x[0], a)
-            keep = _shard_selection_keep(a0, row_is_range, col_is_range,
+            keep = _shard_selection_keep(a0, row_gather, col_gather,
                                          bnds, rm, cm)
             return jnp.where(keep, jnp.float32(value), a0["vals"])[None]
 
@@ -537,20 +546,38 @@ class DistAssoc:
         expand = int(max(8, _round_up(int(per_shard.max(initial=0)) or 1, 8)))
         return a_loc.rows, a_cols, a_loc.vals, b, expand
 
-    def matmul(self, other, semiring=PLUS_TIMES, *,
+    def matmul(self, other, semiring=PLUS_TIMES, *, impl: str = "auto",
+               kernel_impl: str = "auto",
                out_capacity_per_shard: Optional[int] = None) -> "DistAssoc":
         """Array multiplication ``A ⊗.⊕ B`` — row-sharded × broadcast-B.
 
         Each shard runs a LOCAL sparse product of its rows against the
-        replicated B triples (expand-join + one canonical merge — the
-        jit-safe ``coo`` strategy of :mod:`repro.core.spgemm`); because row
-        supports are disjoint the shard outputs ARE the row-sharded result:
-        **zero collectives**, the Graphulo tablet-server product.  ``other``
-        may be an ``AssocTensor``, host ``Assoc``, or another ``DistAssoc``
-        (gathered to replicated — sharded-B strategies are a ROADMAP item).
+        replicated B triples; because row supports are disjoint the shard
+        outputs ARE the row-sharded result: **zero collectives**, the
+        Graphulo tablet-server product.  ``other`` may be an
+        ``AssocTensor``, host ``Assoc``, or another ``DistAssoc`` (gathered
+        to replicated — sharded-B strategies are a ROADMAP item).
+
+        ``impl`` picks the shard-local strategy: ``"coo"`` is the jit-safe
+        expand-join + canonical-merge shard_map program; ``"bsr"`` runs
+        each shard through the tiled pair-list strategy of
+        :func:`repro.core.spgemm.matmul` (eager host loop over shards,
+        results re-stacked onto the same row partition — ``kernel_impl``
+        forwards to the pair-list kernel dispatch).  ``"auto"`` stays on
+        coo until the per-shard expansion buffer crosses
+        ``_BSR_AUTO_EXPAND`` products, where tiling starts to win.
         """
+        if impl not in ("auto", "coo", "bsr"):
+            raise ValueError(f"unknown DistAssoc matmul impl {impl!r}; "
+                             f"expected auto/coo/bsr")
         sr = get_semiring(semiring)
+        if impl == "bsr":
+            return self._matmul_bsr(other, sr, kernel_impl=kernel_impl,
+                                    out_capacity_per_shard=out_capacity_per_shard)
         a_rows, a_cols, a_vals, b, expand = self._matmul_prologue(other)
+        if impl == "auto" and expand >= _BSR_AUTO_EXPAND:
+            return self._matmul_bsr(other, sr, kernel_impl=kernel_impl,
+                                    out_capacity_per_shard=out_capacity_per_shard)
         out_cap = out_capacity_per_shard or expand
 
         a_dict = {"rows": a_rows, "cols": a_cols, "vals": a_vals}
@@ -571,6 +598,44 @@ class DistAssoc:
                                 b.col_space, None)
         result = DistAssoc(new_local, self.mesh, row_bounds=self.row_bounds)
         result.overflow = overflowed
+        return result
+
+    def _matmul_bsr(self, other, sr, *, kernel_impl: str = "auto",
+                    out_capacity_per_shard: Optional[int] = None) -> "DistAssoc":
+        """Shard-local tiled products through the pair-list BSR strategy.
+
+        Eager host loop: each shard's triples become a standalone
+        ``AssocTensor`` and run the full :func:`repro.core.spgemm.matmul`
+        planner (tile-pair lists → scalar-prefetch pair-list kernel, or
+        its ref/interpret twins per ``kernel_impl``).  Shard row supports
+        are disjoint, so the per-shard outputs re-stack onto the SAME row
+        partition with zero collectives; capacities are re-padded to the
+        max shard before stacking (static shapes stay uniform).
+        """
+        from .spgemm import matmul as spgemm_matmul
+        b = self._as_replicated_operand(other)
+        n_shards = self.mesh.shape["data"]
+        outs = []
+        for s in range(n_shards):
+            local = jax.tree.map(lambda x: x[s], self.local)
+            outs.append(spgemm_matmul(local, b, sr, impl="bsr",
+                                      kernel_impl=kernel_impl,
+                                      out_capacity=out_capacity_per_shard))
+        cap = max(o.rows.shape[0] for o in outs)
+        rows, cols, vals, nnz = [], [], [], []
+        for o in outs:
+            r, c, v = pad_to_cap(o.rows, o.cols, o.vals, cap, sr.zero)
+            rows.append(r); cols.append(c); vals.append(v); nnz.append(o.nnz)
+        stacked = AssocTensor(jnp.stack(rows), jnp.stack(cols),
+                              jnp.stack(vals), jnp.stack(nnz),
+                              self.local.row_space, outs[0].col_space, None)
+        sharded = jax.tree.map(
+            lambda x: jax.device_put(
+                x, NamedSharding(self.mesh,
+                                 P(*(("data",) + (None,) * (x.ndim - 1))))),
+            stacked)
+        result = DistAssoc(sharded, self.mesh, row_bounds=self.row_bounds)
+        result.overflow = any(getattr(o, "overflow", False) for o in outs)
         return result
 
     def __matmul__(self, other):

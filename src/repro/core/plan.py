@@ -45,6 +45,7 @@ helpers (``scatter_combine`` / ``add_np``) in one place.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -59,22 +60,48 @@ from .semiring import PLUS_TIMES, get_semiring, scatter_combine
 from .sorted_ops import sorted_intersect, sorted_union
 
 __all__ = ["execute", "optimize", "PLAN_STATS", "reset_plan_stats",
-           "host_axis_reduce", "device_axis_reduce", "host_matmul"]
+           "clear_plan_cache", "host_axis_reduce", "device_axis_reduce",
+           "host_matmul"]
 
 
 # Planner/executor telemetry, matching UNION_STATS / DISPATCH_STATS /
 # CACHE_STATS: hash-consing hit/miss counts plus one counter per rewrite
 # family, so tests and benchmarks can assert a fusion actually fired.
+# ``plan_hits``/``plan_misses`` count the *cross-collect* plan cache: a
+# repeated pipeline (same structural key over the same source arrays)
+# skips the optimize() walk entirely on its second and later collects.
 PLAN_STATS = {
     "hits": 0, "misses": 0,
+    "plan_hits": 0, "plan_misses": 0,
     "pushdown": 0, "fused_matmul_reduce": 0,
     "fused_select_matmul": 0, "ewise_fused": 0,
 }
 
 
 def reset_plan_stats() -> None:
+    """Zero the counters AND cold-start the planner (plan cache cleared):
+    a fresh measurement window should see its own misses and rewrites, not
+    inherit plans memoized by earlier pipelines."""
     for k in PLAN_STATS:
         PLAN_STATS[k] = 0
+    clear_plan_cache()
+
+
+# Cross-collect plan cache: optimized graph memoized by the hash-consed
+# structural key (expr.key(): node structure + id() of source arrays and
+# opaque selectors).  Identity keys cannot go stale while an entry lives —
+# the cached graph itself pins its Source arrays and selector objects, so
+# their ids are not reusable — and in-place value mutation is safe because
+# the cache stores the *rewrite*, never results.  LRU-bounded so pinned
+# arrays cannot accumulate without bound.
+_PLAN_CACHE: "OrderedDict[tuple, LazyExpr]" = OrderedDict()
+_PLAN_CACHE_CAP = 256
+
+
+def clear_plan_cache() -> None:
+    """Invalidation hook: drop every memoized optimized plan (and with it
+    the pinned references to their source arrays/selectors)."""
+    _PLAN_CACHE.clear()
 
 
 def _layer(x) -> str:
@@ -244,11 +271,23 @@ def _single_node_fast(node: LazyExpr):
 
 
 def execute(node: LazyExpr):
-    """Optimize + evaluate; repeated subtrees run once (PLAN_STATS)."""
+    """Optimize + evaluate; repeated subtrees run once and repeated
+    *collects* of the same graph reuse the optimized plan (PLAN_STATS)."""
     fast = _single_node_fast(node)
     if fast is not _MISS:
         return fast
-    return _eval(optimize(node), {})
+    key = node.key()
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        PLAN_STATS["plan_misses"] += 1
+        plan = optimize(node)
+        _PLAN_CACHE[key] = plan
+        if len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
+            _PLAN_CACHE.popitem(last=False)
+    else:
+        PLAN_STATS["plan_hits"] += 1
+        _PLAN_CACHE.move_to_end(key)
+    return _eval(plan, {})
 
 
 def _eval(node: LazyExpr, memo: dict):

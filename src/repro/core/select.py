@@ -38,7 +38,8 @@ from .sorted_ops import sorted_intersect, sorted_union
 __all__ = [
     "Selector", "Keys", "Range", "StartsWith", "Match", "Where", "Mask",
     "Positions", "All", "And", "Or", "Not", "Compiled",
-    "as_selector", "compile_selector", "sanitize_keys", "split_string_list",
+    "as_selector", "compile_selector", "plan_boxes", "sanitize_keys",
+    "split_string_list",
     "CACHE_STATS", "clear_compile_cache", "reset_cache_stats",
 ]
 
@@ -144,10 +145,64 @@ class Compiled:
             m[self._idx] = True
         return m
 
+    def runs(self, max_runs: int = 4) -> Optional[list]:
+        """Decompose into ≤``max_runs`` contiguous ``[lo, hi)`` intervals.
+
+        A range is its own single run; a scattered index set splits at the
+        gaps.  Returns ``None`` when more than ``max_runs`` intervals would
+        be needed — the caller falls back to a membership gather.  This is
+        the multi-interval extension of the ``from_indices`` contiguous⇒
+        range normalization: a ``Match``/``Where`` whose hits form a few
+        rank intervals runs as a few range-kernel calls instead of a
+        gather (see ``plan_boxes``).
+        """
+        if self.is_range:
+            return [(self.lo, self.hi)]
+        idx = self._idx
+        breaks = np.flatnonzero(np.diff(idx) > 1)
+        if len(breaks) + 1 > max_runs:
+            return None
+        starts = np.concatenate(([0], breaks + 1))
+        ends = np.concatenate((breaks, [len(idx) - 1]))
+        return [(int(idx[s]), int(idx[e]) + 1)
+                for s, e in zip(starts, ends)]
+
     def __repr__(self) -> str:
         if self.is_range:
             return f"Compiled(range=[{self.lo},{self.hi}), n={self.n})"
         return f"Compiled(set={self.count} of {self.n})"
+
+
+def plan_boxes(rc: Compiled, cc: Compiled, nr: int, nc: int,
+               max_boxes: int = 4):
+    """Device selection dispatch plan: rank boxes + residual gather flags.
+
+    Returns ``(boxes, row_gather, col_gather)`` where ``boxes`` is an
+    int32 ``[k, 4]`` array of ``(rlo, rhi, clo, chi)`` range-kernel
+    bounds, ``k ≤ max_boxes``, and each ``*_gather`` flag marks an axis
+    that still needs a membership gather.  The keep mask is the OR of the
+    per-box range-kernel masks ANDed with any gathers — the boxes are
+    disjoint by construction (interval runs of sorted unique indices), so
+    OR-composition is exact and no merge of extracted lists is needed.
+
+    Preference order: both axes interval-decomposable and the box product
+    fits → pure multi-range (no gathers); one axis decomposable → its
+    runs as boxes (other bound open) + one gather; neither → one full box
+    + two gathers (the caller's plain gather path).
+    """
+    r_runs = rc.runs(max_boxes)
+    c_runs = cc.runs(max_boxes)
+    if (r_runs is not None and c_runs is not None
+            and len(r_runs) * len(c_runs) <= max_boxes):
+        boxes = [(rl, rh, cl, ch) for rl, rh in r_runs for cl, ch in c_runs]
+        return np.asarray(boxes, np.int32).reshape(-1, 4), False, False
+    if r_runs is not None and len(r_runs) <= max_boxes:
+        boxes = [(rl, rh, 0, nc) for rl, rh in r_runs]
+        return np.asarray(boxes, np.int32), False, True
+    if c_runs is not None and len(c_runs) <= max_boxes:
+        boxes = [(0, nr, cl, ch) for cl, ch in c_runs]
+        return np.asarray(boxes, np.int32), True, False
+    return (np.asarray([(0, nr, 0, nc)], np.int32), True, True)
 
 
 def _and_compiled(a: Compiled, b: Compiled) -> Compiled:

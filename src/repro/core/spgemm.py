@@ -15,12 +15,16 @@ on device under one of three strategies:
     unbeatable for small or genuinely dense operands, hopeless at scale.
 ``bsr``
     Block-tiled sparse path: pack only the **present** 128×128 tiles of
-    each operand (COO → block mask + packed tiles), contract tile-pairs
-    that share a contraction block (MXU einsum per chunk, VPU slabs for
-    non-MXU semirings), ⊕-scatter into packed output tiles, and emit the
-    result COO **directly from the tiles** — no |rowspace|×|colspace|
-    dense product and no full-space argsort ever exist.  Peak memory is
-    bounded by the present tiles plus the output COO.
+    each operand (COO → block mask + packed tiles), contract the planned
+    tile-pair list with the scalar-prefetch Pallas kernel
+    (:mod:`repro.kernels.bsr_spgemm.pairlist`: the pair list rides in SMEM
+    and drives the DMA schedule — no gathered tile copies — with the
+    ⊕-scatter fused into VMEM-resident output tiles; jitted chunked-einsum
+    oracle off-TPU), and emit the result COO **directly from the tiles** —
+    no |rowspace|×|colspace| dense product and no full-space argsort ever
+    exist.  Peak memory is bounded by the present tiles plus the output
+    COO, which is sized by :func:`estimate_out_nnz` rather than the raw
+    product count.
 ``coo``
     Expand-join on raw rank triples (:func:`repro.core.coo.expand_join_coo`
     + one canonical merge).  Fully jit/shard_map-safe — this is the
@@ -59,7 +63,7 @@ from .coo import SENT, dedup_sorted_coo, expand_join_coo
 from .semiring import PLUS_TIMES, Semiring, get_semiring, scatter_combine
 
 __all__ = ["MatmulPlan", "plan_matmul", "matmul", "matmul_reduce",
-           "bsr_matmul_coo", "pack_tiles", "TILE"]
+           "bsr_matmul_coo", "pack_tiles", "estimate_out_nnz", "TILE"]
 
 TILE = 128  # MXU-aligned block edge: bm = bk = bn = 128
 
@@ -81,8 +85,11 @@ class MatmulPlan:
     Block structure is expressed per *valid entry* (tile id + intra-tile
     coords, the scatter targets for tile packing) and per *tile pair*
     (which A tile meets which B tile, accumulating into which C tile).
-    ``products`` is the exact scalar product count — an upper bound on
-    nnz(C) used to size the output COO.
+    The pair lists are **grouped by ``pair_c``** (sorted ascending) — the
+    scalar-prefetch kernel's VMEM-resident output accumulation depends on
+    each C tile's pairs being one contiguous run.  ``products`` is the
+    exact scalar product count — an upper bound on nnz(C); the default
+    output sizing tightens it via :func:`estimate_out_nnz`.
     """
 
     impl: str                    # chosen strategy: "dense" | "bsr"
@@ -186,6 +193,11 @@ def plan_matmul(a_rows: np.ndarray, a_cols: np.ndarray,
     c_uniq, pair_c = np.unique(c_codes, return_inverse=True)
     c_blocks = np.stack([(c_uniq // (2 ** 31)).astype(np.int32),
                          (c_uniq % (2 ** 31)).astype(np.int32)], axis=1)
+    # group pairs by output tile (sorted pair_c): the scalar-prefetch
+    # kernel keeps each C tile VMEM-resident across its contiguous run of
+    # pairs and flushes it exactly once — see kernels/bsr_spgemm/pairlist
+    order = np.argsort(pair_c, kind="stable")
+    pair_a, pair_b, pair_c = pair_a[order], pair_b[order], pair_c[order]
 
     products = _exact_products(a_cols, b_rows, k)
 
@@ -207,6 +219,85 @@ def plan_matmul(a_rows: np.ndarray, a_cols: np.ndarray,
                       dense_cost=dense_cost, bsr_cost=bsr_cost)
 
 
+# distinct-(i,j) sketch sizing: a 1<<20-bin bitmap costs 1 MiB host memory;
+# candidate enumeration is skipped past the budget (the cheap bounds win)
+_SKETCH_BINS = 1 << 20
+_SKETCH_BUDGET = 1 << 22
+_EXACT_BITSET_MAX = 1 << 22
+
+
+def estimate_out_nnz(plan: MatmulPlan, *, budget: int = _SKETCH_BUDGET,
+                     bins: int = _SKETCH_BINS) -> int:
+    """Upper-bound estimate of ``nnz(C)`` — what ``out_capacity`` defaults to.
+
+    The exact product count over-sizes hub-heavy outputs by orders of
+    magnitude (every product through a hub row lands on the same few
+    cells).  This estimator tightens it with three *provable* bounds plus
+    one sketch:
+
+    1. ``m·n`` and ``products`` (the old default);
+    2. present C tiles × tile area;
+    3. ``Σ_pairs |distinct rows(A tile)| · |distinct cols(B tile)|`` — every
+       nonzero of C lies in some pair's candidate rectangle;
+    4. when the candidate enumeration fits ``budget``: the exact distinct
+       candidate count via a bitset (small keyspaces — still a provable
+       bound), else a linear-counting hash sketch over the candidate
+       ``(i, j)`` codes, inflated 1.25× for collision slack.
+
+    Only (4)'s hashed variant can in principle under-estimate; a saturated
+    sketch (≥98% bins set) warns and falls back to the provable bounds —
+    and the downstream overflow warning in :func:`bsr_matmul_coo` remains
+    the safety net.
+    """
+    if len(plan.pair_a) == 0:
+        return 0
+    m, n = max(plan.m, 1), max(plan.n, 1)
+    bound = min(plan.products, m * n,
+                len(plan.c_blocks) * TILE * TILE)
+    # per-tile distinct local rows (A) / local cols (B)
+    a_codes = np.unique(plan.a_tile_of.astype(np.int64) * TILE + plan.a_lr)
+    b_codes = np.unique(plan.b_tile_of.astype(np.int64) * TILE + plan.b_lc)
+    a_starts = np.searchsorted(a_codes // TILE,
+                               np.arange(len(plan.a_blocks) + 1))
+    b_starts = np.searchsorted(b_codes // TILE,
+                               np.arange(len(plan.b_blocks) + 1))
+    pa, pb = plan.pair_a, plan.pair_b
+    n_rows = a_starts[pa + 1] - a_starts[pa]
+    n_cols = b_starts[pb + 1] - b_starts[pb]
+    cross = int((n_rows.astype(np.int64) * n_cols).sum())
+    bound = min(bound, cross)
+    if cross > budget or bound <= 4096:
+        return bound
+
+    # enumerate candidate (i, j) codes pair by pair into a bitmap
+    hashed = m * n > _EXACT_BITSET_MAX
+    bits = np.zeros(bins if hashed else m * n, dtype=bool)
+    a_loc = (a_codes % TILE).astype(np.int64)
+    b_loc = (b_codes % TILE).astype(np.int64)
+    for p in range(len(pa)):
+        rows = (a_loc[a_starts[pa[p]]:a_starts[pa[p] + 1]]
+                + int(plan.a_blocks[pa[p], 0]) * TILE)
+        cols = (b_loc[b_starts[pb[p]]:b_starts[pb[p] + 1]]
+                + int(plan.b_blocks[pb[p], 1]) * TILE)
+        codes = rows[:, None] * n + cols[None, :]
+        if hashed:
+            codes = (codes.astype(np.uint64)
+                     * np.uint64(0x9E3779B97F4A7C15)) % np.uint64(bins)
+        bits[codes.ravel()] = True
+    hit = int(bits.sum())
+    if not hashed:
+        return min(bound, hit)  # exact distinct candidates: provable bound
+    empty = bits.size - hit
+    if empty < bits.size * 0.02:
+        warnings.warn(
+            f"estimate_out_nnz: distinct-pair sketch saturated "
+            f"({hit}/{bits.size} bins); falling back to the exact product "
+            f"count bound", RuntimeWarning, stacklevel=2)
+        return bound
+    est = bits.size * np.log(bits.size / empty)  # linear counting
+    return min(bound, int(est * 1.25) + 64)
+
+
 def pack_tiles(vals: jnp.ndarray, tile_of: np.ndarray, lr: np.ndarray,
                lc: np.ndarray, n_tiles: int, br: int, bc: int,
                zero: float) -> jnp.ndarray:
@@ -218,22 +309,6 @@ def pack_tiles(vals: jnp.ndarray, tile_of: np.ndarray, lr: np.ndarray,
                     jnp.asarray(lc)].set(vals)
 
 
-def _chunk_products(a_part: jnp.ndarray, b_part: jnp.ndarray,
-                    sr: Semiring) -> jnp.ndarray:
-    """Batched tile contraction [c,bm,bk] ⊗.⊕ [c,bk,bn] → [c,bm,bn]."""
-    if sr.mxu:
-        return jnp.einsum("cik,ckj->cij", a_part, b_part,
-                          preferred_element_type=jnp.float32)
-    bk = a_part.shape[2]
-    out = jnp.full((a_part.shape[0], a_part.shape[1], b_part.shape[2]),
-                   sr.zero, jnp.float32)
-    for k0 in range(0, bk, 32):  # VPU slab: keep the broadcast in budget
-        prod = sr.mul(a_part[:, :, k0:k0 + 32, None],
-                      b_part[:, None, k0:k0 + 32, :])
-        out = sr.add(out, sr.add_reduce(prod, axis=2))
-    return out
-
-
 def _warn_overflow(true_nnz: int, capacity: int, what: str) -> None:
     warnings.warn(
         f"{what}: result has {true_nnz} entries but capacity {capacity}; "
@@ -243,8 +318,17 @@ def _warn_overflow(true_nnz: int, capacity: int, what: str) -> None:
 
 def bsr_matmul_coo(plan: MatmulPlan, a_vals: jnp.ndarray, b_vals: jnp.ndarray,
                    sr: Semiring, out_capacity: int, *,
+                   kernel_impl: str = "auto",
                    bm: int = TILE, bk: int = TILE, bn: int = TILE):
     """Execute the BSR strategy: packed tiles in, canonical COO out.
+
+    The pair-list contraction dispatches through
+    :func:`repro.kernels.bsr_spgemm.ops.bsr_pairlist` — the scalar-prefetch
+    Pallas kernel on TPU (tile pairs DMA'd straight from their packed slots,
+    ⊕-scatter fused into VMEM-resident C tiles), the jitted chunked-einsum
+    oracle elsewhere.  ``kernel_impl`` forwards to that dispatch
+    (``"interpret"`` exercises the kernel body on CPU); ``"chunked"`` keeps
+    the legacy eager host-chunked loop (perf baseline).
 
     Returns ``(rows, cols, vals, nnz, overflowed)``; the extraction lexsort
     runs over the **present C tiles only** — never over |rowspace|×
@@ -260,15 +344,23 @@ def bsr_matmul_coo(plan: MatmulPlan, a_vals: jnp.ndarray, b_vals: jnp.ndarray,
     b_tiles = pack_tiles(b_vals, plan.b_tile_of, plan.b_lr, plan.b_lc,
                          len(plan.b_blocks), bk, bn, sr.zero)
     n_c = len(plan.c_blocks)
-    c_tiles = jnp.full((n_c, bm, bn), sr.zero, jnp.float32)
-    chunk = _CHUNK_MXU if sr.mxu else _CHUNK_VPU
-    for p0 in range(0, len(plan.pair_a), chunk):
-        pa = plan.pair_a[p0:p0 + chunk]
-        pb = plan.pair_b[p0:p0 + chunk]
-        pc = plan.pair_c[p0:p0 + chunk]
-        parts = _chunk_products(a_tiles[jnp.asarray(pa)],
-                                b_tiles[jnp.asarray(pb)], sr)
-        c_tiles = scatter_combine(c_tiles, jnp.asarray(pc), parts, sr)
+    if kernel_impl == "chunked":
+        from repro.kernels.bsr_spgemm.ref import chunk_products
+        c_tiles = jnp.full((n_c, bm, bn), sr.zero, jnp.float32)
+        chunk = _CHUNK_MXU if sr.mxu else _CHUNK_VPU
+        for p0 in range(0, len(plan.pair_a), chunk):
+            pa = plan.pair_a[p0:p0 + chunk]
+            pb = plan.pair_b[p0:p0 + chunk]
+            pc = plan.pair_c[p0:p0 + chunk]
+            parts = chunk_products(a_tiles[jnp.asarray(pa)],
+                                   b_tiles[jnp.asarray(pb)], sr)
+            c_tiles = scatter_combine(c_tiles, jnp.asarray(pc), parts, sr)
+    else:
+        from repro.kernels.bsr_spgemm.ops import bsr_pairlist
+        c_tiles = bsr_pairlist(
+            a_tiles, b_tiles, jnp.asarray(plan.pair_a),
+            jnp.asarray(plan.pair_b), jnp.asarray(plan.pair_c),
+            n_c=n_c, semiring=sr, impl=kernel_impl)
 
     # tiles → canonical COO: global coords per tile cell, zero-drop,
     # lexsort over the nC·bm·bn tile cells (bounded by present tiles)
@@ -360,14 +452,21 @@ def _scatter_dense(rows: np.ndarray, cols: np.ndarray, vals: jnp.ndarray,
 
 def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
            out_capacity: Optional[int] = None, use_kernel: bool = True,
+           kernel_impl: str = "auto",
            a_keep: Optional[np.ndarray] = None,
            b_keep: Optional[np.ndarray] = None):
     """Array multiplication ``A ⊗.⊕ B`` for device AssocTensors, planned.
 
     ``impl``: ``"auto"`` (heuristic), ``"dense"``, ``"bsr"`` or ``"coo"``
     (see module docstring).  ``use_kernel=False`` keeps the dense strategy
-    on the jnp reference contraction (test oracle).  Eager/host-driven —
-    inside a jit trace use ``impl="coo"`` building blocks directly.
+    on the jnp reference contraction (test oracle).  ``kernel_impl``
+    forwards to the BSR pair-list kernel dispatch (``"interpret"`` runs
+    the Pallas body on CPU, ``"chunked"`` the legacy eager loop).  When no
+    ``out_capacity`` is given, the BSR strategy sizes the output COO with
+    :func:`estimate_out_nnz` instead of the exact product count — on
+    hub-heavy inputs (many products folding into few distinct cells) that
+    shrinks the buffer by orders of magnitude.  Eager/host-driven — inside
+    a jit trace use ``impl="coo"`` building blocks directly.
 
     ``a_keep``/``b_keep`` are host bool masks over the operands' valid
     entries (the compiled form of a deferred selection, see
@@ -436,11 +535,13 @@ def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
         return _dense(_cap(_exact_products(ca, rb, k)))
 
     plan = plan_matmul(ra, ca, rb, cb, m, k, n, impl=impl)
-    cap = _cap(plan.products)
     if plan.impl == "dense":
-        return _dense(cap)
+        return _dense(_cap(plan.products))
 
-    r, c, v, nnz, overflowed = bsr_matmul_coo(plan, a_vals, b_vals, sr, cap)
+    cap = out_capacity or max(8, _round_up(
+        max(estimate_out_nnz(plan), 1), 8))
+    r, c, v, nnz, overflowed = bsr_matmul_coo(plan, a_vals, b_vals, sr, cap,
+                                              kernel_impl=kernel_impl)
     out = AssocTensor(r, c, v, nnz, a.row_space, b.col_space, None)
     out.overflow = overflowed
     return out
@@ -457,8 +558,10 @@ def matmul_reduce(a, b, axis: int, semiring=PLUS_TIMES, *,
     reduction monoid is the semiring's own ⊕ (the only choice for which
     the fusion ``⊕_j ⊕_k A[i,k] ⊗ B[k,j]`` is exact).  Strategy mirrors
     :func:`matmul`; the dense strategy runs the fused
-    ``bsr_spgemm_reduce`` Pallas kernel (``kernel_impl`` forwards to its
-    dispatch — ``"interpret"`` exercises the kernel body on CPU).
+    ``bsr_spgemm_reduce`` Pallas kernel and the bsr strategy the fused
+    pair-list reduce kernel (``kernel_impl`` forwards to both dispatches —
+    ``"interpret"`` exercises the kernel bodies on CPU, ``"chunked"``
+    keeps the legacy eager loop on the bsr path).
     """
     from repro.kernels.bsr_spgemm.ops import bsr_spgemm_reduce, make_block_mask
 
@@ -516,27 +619,45 @@ def matmul_reduce(a, b, axis: int, semiring=PLUS_TIMES, *,
     if plan.impl == "dense":
         return _dense()
 
-    # bsr strategy: fold tile products straight into the output vector —
-    # no C tiles, no dedup (⊕ over all products per row/col IS the answer)
+    # bsr strategy: fold tile products straight into per-output-block
+    # vectors — no C tiles, no dedup (⊕ over all products per row/col IS
+    # the answer).  Pairs regroup by output block (block-row for axis=1,
+    # block-col for axis=0) so the pair-list reduce kernel can keep each
+    # block's partial vector VMEM-resident across its run of pairs.
+    if len(plan.pair_a) == 0:
+        return jnp.full(max(out_len, 0), sr.zero, jnp.float32)
     a_tiles = pack_tiles(a_vals, plan.a_tile_of, plan.a_lr, plan.a_lc,
                          len(plan.a_blocks), TILE, TILE, sr.zero)
     b_tiles = pack_tiles(b_vals, plan.b_tile_of, plan.b_lr, plan.b_lc,
                          len(plan.b_blocks), TILE, TILE, sr.zero)
+    blk = (plan.a_blocks[plan.pair_a, 0] if axis == 1
+           else plan.b_blocks[plan.pair_b, 1])
+    order = np.argsort(blk, kind="stable")
+    o_uniq, pair_o = np.unique(blk[order], return_inverse=True)
+    pa, pb = plan.pair_a[order], plan.pair_b[order]
+
+    if kernel_impl == "chunked":
+        from repro.kernels.bsr_spgemm.ref import chunk_products
+        blocks = jnp.full((len(o_uniq), TILE), sr.zero, jnp.float32)
+        chunk = _CHUNK_MXU if sr.mxu else _CHUNK_VPU
+        for p0 in range(0, len(pa), chunk):
+            parts = chunk_products(a_tiles[jnp.asarray(pa[p0:p0 + chunk])],
+                                   b_tiles[jnp.asarray(pb[p0:p0 + chunk])],
+                                   sr)
+            pvec = sr.add_reduce(parts, axis=2 if axis == 1 else 1)
+            blocks = scatter_combine(
+                blocks, jnp.asarray(pair_o[p0:p0 + chunk], jnp.int32),
+                pvec, sr)
+    else:
+        from repro.kernels.bsr_spgemm.ops import bsr_pairlist_reduce
+        blocks = bsr_pairlist_reduce(
+            a_tiles, b_tiles, jnp.asarray(pa), jnp.asarray(pb),
+            jnp.asarray(pair_o, jnp.int32), n_o=len(o_uniq), axis=axis,
+            semiring=sr, impl=kernel_impl)            # [n_o, TILE]
+
     padded = _round_up(max(out_len, 1), TILE)
     vec = jnp.full(padded, sr.zero, jnp.float32)
-    chunk = _CHUNK_MXU if sr.mxu else _CHUNK_VPU
     offs = jnp.arange(TILE, dtype=jnp.int32)
-    for p0 in range(0, len(plan.pair_a), chunk):
-        pa = plan.pair_a[p0:p0 + chunk]
-        pb = plan.pair_b[p0:p0 + chunk]
-        parts = _chunk_products(a_tiles[jnp.asarray(pa)],
-                                b_tiles[jnp.asarray(pb)], sr)
-        if axis == 1:
-            pvec = sr.add_reduce(parts, axis=2)            # [c, bm]
-            blk = jnp.asarray(plan.a_blocks[pa, 0], jnp.int32)
-        else:
-            pvec = sr.add_reduce(parts, axis=1)            # [c, bn]
-            blk = jnp.asarray(plan.b_blocks[pb, 1], jnp.int32)
-        idx = blk[:, None] * TILE + offs[None, :]
-        vec = scatter_combine(vec, idx, pvec, sr)
+    idx = jnp.asarray(o_uniq[:, None] * TILE, jnp.int32) + offs[None, :]
+    vec = scatter_combine(vec, idx, blocks, sr)
     return vec[:out_len]

@@ -8,7 +8,9 @@ import jax.numpy as jnp
 
 from repro.core.semiring import get_semiring
 from .bsr_spgemm import bsr_spgemm_pallas, bsr_spgemm_reduce_pallas
-from .ref import bsr_spgemm_ref, bsr_spgemm_reduce_ref
+from .pairlist import bsr_pairlist_pallas, bsr_pairlist_reduce_pallas
+from .ref import (bsr_pairlist_ref, bsr_pairlist_reduce_ref, bsr_spgemm_ref,
+                  bsr_spgemm_reduce_ref)
 
 
 def make_block_mask(rows, cols, valid, mb: int, kb: int, *, bm=128, bk=128):
@@ -53,3 +55,49 @@ def bsr_spgemm_reduce(a, block_mask, b, *, axis: int,
                                     bm=bm, bn=bn, bk=bk,
                                     interpret=(impl == "interpret"))
     return sr.add_reduce(part, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Pair-list dispatch: the default BSR-strategy execution (see pairlist.py).
+# Pairs MUST arrive grouped (sorted) by pair_c / pair_o — plan_matmul's
+# invariant; the kernel's VMEM-resident output accumulation depends on it.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_c", "semiring", "impl"))
+def bsr_pairlist(a_tiles, b_tiles, pair_a, pair_b, pair_c, *, n_c: int,
+                 semiring="plus_times", impl="auto"):
+    """Pair-list BSR contraction → packed C tiles ``[n_c, bm, bn]``."""
+    sr = get_semiring(semiring)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return bsr_pairlist_ref(a_tiles, b_tiles, pair_a, pair_b, pair_c,
+                                n_c=n_c, semiring=sr)
+    return bsr_pairlist_pallas(a_tiles, b_tiles, pair_a, pair_b, pair_c,
+                               n_c=n_c, semiring=sr,
+                               interpret=(impl == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("n_o", "axis", "semiring", "impl"))
+def bsr_pairlist_reduce(a_tiles, b_tiles, pair_a, pair_b, pair_o, *,
+                        n_o: int, axis: int, semiring="plus_times",
+                        impl="auto"):
+    """Fused pair-list ``⊕-reduce(A ⊗.⊕ B, axis)`` → ``[n_o, 128]``
+    per-output-block vectors (block-rows for axis=1, block-cols for 0).
+
+    C tiles never exist: the Pallas kernel folds each tile product into a
+    lane/sublane partial accumulator in VMEM, and this wrapper ⊕-folds the
+    residual 128 lanes / 8 sublanes.
+    """
+    sr = get_semiring(semiring)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return bsr_pairlist_reduce_ref(a_tiles, b_tiles, pair_a, pair_b,
+                                       pair_o, n_o=n_o, axis=axis,
+                                       semiring=sr)
+    part = bsr_pairlist_reduce_pallas(a_tiles, b_tiles, pair_a, pair_b,
+                                      pair_o, n_o=n_o, axis=axis,
+                                      semiring=sr,
+                                      interpret=(impl == "interpret"))
+    return sr.add_reduce(part, axis=2 if axis == 1 else 1)

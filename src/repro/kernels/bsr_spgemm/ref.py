@@ -1,9 +1,17 @@
-"""Pure-jnp oracles: mask-expanded semiring matmul (+ fused reduction)."""
+"""Pure-jnp oracles: mask-expanded semiring matmul (+ fused reduction),
+plus the pair-list oracles — the old chunked-einsum contraction, kept as
+the non-TPU backend and the interpret-mode parity reference."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.semiring import get_semiring
+from repro.core.semiring import get_semiring, scatter_combine
+
+# tile-pairs contracted per traced chunk: the MXU einsum touches
+# chunk·(bm·bk + bk·bn + bm·bn) floats, the VPU path adds a [chunk, bm, 32,
+# bn] broadcast slab — both bounded to a few tens of MiB
+_CHUNK_MXU = 64
+_CHUNK_VPU = 8
 
 
 def bsr_spgemm_ref(a, block_mask, b, *, semiring="plus_times",
@@ -24,3 +32,57 @@ def bsr_spgemm_reduce_ref(a, block_mask, b, *, axis: int,
     sr = get_semiring(semiring)
     c = bsr_spgemm_ref(a, block_mask, b, semiring=sr, bm=bm, bk=bk)
     return sr.add_reduce(c, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Pair-list oracles: gather + batched einsum per chunk + ⊕-scatter.  This
+# is the pre-kernel execution of the BSR strategy verbatim — under jit the
+# chunks trace into one fused program, on TPU the scalar-prefetch kernel
+# (pairlist.py) replaces it entirely.
+# ---------------------------------------------------------------------------
+
+def chunk_products(a_part: jnp.ndarray, b_part: jnp.ndarray,
+                   sr) -> jnp.ndarray:
+    """Batched tile contraction [c,bm,bk] ⊗.⊕ [c,bk,bn] → [c,bm,bn]."""
+    if sr.mxu:
+        return jnp.einsum("cik,ckj->cij", a_part, b_part,
+                          preferred_element_type=jnp.float32)
+    bk = a_part.shape[2]
+    out = jnp.full((a_part.shape[0], a_part.shape[1], b_part.shape[2]),
+                   sr.zero, jnp.float32)
+    for k0 in range(0, bk, 32):  # VPU slab: keep the broadcast in budget
+        prod = sr.mul(a_part[:, :, k0:k0 + 32, None],
+                      b_part[:, None, k0:k0 + 32, :])
+        out = sr.add(out, sr.add_reduce(prod, axis=2))
+    return out
+
+
+def bsr_pairlist_ref(a_tiles, b_tiles, pair_a, pair_b, pair_c, *, n_c: int,
+                     semiring="plus_times") -> jnp.ndarray:
+    """Pair-list contraction oracle → packed C tiles ``[n_c, bm, bn]``."""
+    sr = get_semiring(semiring)
+    bm, bn = a_tiles.shape[1], b_tiles.shape[2]
+    c_tiles = jnp.full((n_c, bm, bn), sr.zero, jnp.float32)
+    chunk = _CHUNK_MXU if sr.mxu else _CHUNK_VPU
+    for p0 in range(0, pair_a.shape[0], chunk):
+        parts = chunk_products(a_tiles[pair_a[p0:p0 + chunk]],
+                               b_tiles[pair_b[p0:p0 + chunk]], sr)
+        c_tiles = scatter_combine(c_tiles, pair_c[p0:p0 + chunk], parts, sr)
+    return c_tiles
+
+
+def bsr_pairlist_reduce_ref(a_tiles, b_tiles, pair_a, pair_b, pair_o, *,
+                            n_o: int, axis: int,
+                            semiring="plus_times") -> jnp.ndarray:
+    """Pair-list fused-reduce oracle → per-block vectors ``[n_o, 128]``."""
+    sr = get_semiring(semiring)
+    width = a_tiles.shape[1] if axis == 1 else b_tiles.shape[2]
+    out = jnp.full((n_o, width), sr.zero, jnp.float32)
+    chunk = _CHUNK_MXU if sr.mxu else _CHUNK_VPU
+    for p0 in range(0, pair_a.shape[0], chunk):
+        parts = chunk_products(a_tiles[pair_a[p0:p0 + chunk]],
+                               b_tiles[pair_b[p0:p0 + chunk]], sr)
+        pvec = sr.add_reduce(parts, axis=2 if axis == 1 else 1)
+        # scatter whole per-pair vectors into their output-block rows
+        out = scatter_combine(out, pair_o[p0:p0 + chunk], pvec, sr)
+    return out

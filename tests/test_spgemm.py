@@ -238,15 +238,17 @@ def test_hybrid_selection_uses_range_kernel():
     from repro.core.assoc_tensor import DISPATCH_STATS
     from repro.core.select import Keys, Match
 
-    rows = [f"r{i}" for i in range(10)]
-    cols = [f"c{i % 7}" for i in range(10)]
-    vals = np.arange(1.0, 11.0)
-    host = Assoc(rows, cols, vals)
-    dev = AssocTensor.from_triples(rows, cols, vals, capacity=16)
+    rows = [f"r{i % 10}" for i in range(18)]
+    cols = [f"c{i % 9}" for i in range(18)]
+    vals = np.arange(1.0, 19.0)
+    host = Assoc(rows, cols, vals, aggregate="sum")
+    dev = AssocTensor.from_triples(rows, cols, vals, aggregate="sum",
+                                   capacity=24)
     # Match on a prefix block compiles to ONE contiguous rank interval;
-    # the scattered col set forces the other axis onto the gather path
+    # a col set of FIVE singleton runs exceeds the ≤4-box multirange
+    # budget, forcing that axis onto the gather path → hybrid
     row_sel = Match("^r[0-3]")
-    col_sel = Keys(["c0", "c2", "c6"])
+    col_sel = Keys(["c0", "c2", "c4", "c6", "c8"])
     before = dict(DISPATCH_STATS)
     got = dev[row_sel, col_sel].to_assoc().to_dict()
     assert DISPATCH_STATS["hybrid"] == before["hybrid"] + 1
@@ -255,9 +257,14 @@ def test_hybrid_selection_uses_range_kernel():
     before = dict(DISPATCH_STATS)
     dev[Match("^r"), :]
     assert DISPATCH_STATS["range"] == before["range"] + 1
-    # both scattered stays on the pure gather path
+    # a few scattered keys → ≤4 rank boxes → the multirange OR path
     before = dict(DISPATCH_STATS)
     dev[Keys(["r0", "r5"]), Keys(["c0", "c2"])]
+    assert DISPATCH_STATS["multirange"] == before["multirange"] + 1
+    # both axes past the box budget stays on the pure gather path
+    before = dict(DISPATCH_STATS)
+    dev[Keys(["r0", "r2", "r4", "r6", "r8"]),
+        Keys(["c0", "c2", "c4", "c6", "c8"])]
     assert DISPATCH_STATS["gather"] == before["gather"] + 1
 
 
