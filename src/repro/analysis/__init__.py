@@ -1,0 +1,46 @@
+"""repro.analysis — static verification of the D4M performance contracts.
+
+The paper's performance story rests on structural invariants the layer
+docstrings only *state*: shard-local paths run with **zero collectives**,
+selection **never densifies**, the fused spgemm epilogues spend exactly
+**one** psum-family collective.  This package makes those claims machine
+checked on every compiled program:
+
+* :mod:`~repro.analysis.hlo_contracts` — the loop-aware HLO walker (grown
+  out of ``launch/hlo_static``): lowers a jitted/shard_mapped program and
+  counts collectives by family (``while``-trip aware), host round-trips,
+  and the dense-intermediate footprint against a tile budget.
+* :mod:`~repro.analysis.contracts` — the ``@contract(...)`` decorator and
+  registry declaring the invariants at the API, plus the verifier that
+  sweeps probes against lowered programs.
+* :mod:`~repro.analysis.probes` — per-entry-point probe functions that
+  lower each decorated API's compiled program(s) on an ``AbstractMesh``
+  (no devices, no TPU needed).
+* :mod:`~repro.analysis.lint` — the host-side AST lint forbidding known
+  anti-patterns (host materialization inside shard_map bodies, Python
+  loops over nnz, kernels missing the ref/interpret/pallas triple).
+
+``tools/d4mcheck`` and the ``tests/test_contracts.py`` sweep are the two
+consumers; both fail on any contract violation or lint finding.
+"""
+from .contracts import (CONTRACT_REGISTRY, Contract, Violation, contract,
+                        verify_all, verify_entry)
+from .hlo_contracts import ProgramReport, analyze_program, lower_hlo
+
+_LINT_API = ("Finding", "lint_file", "lint_paths")
+
+
+def __getattr__(name):
+    # lint loads lazily so `python -m repro.analysis.lint` doesn't import
+    # the module twice (runpy's sys.modules warning)
+    if name in _LINT_API:
+        from . import lint
+        return getattr(lint, name)
+    raise AttributeError(name)
+
+__all__ = [
+    "contract", "Contract", "CONTRACT_REGISTRY", "Violation",
+    "verify_entry", "verify_all",
+    "ProgramReport", "analyze_program", "lower_hlo",
+    "Finding", "lint_file", "lint_paths",
+]

@@ -1,0 +1,188 @@
+"""``@contract`` — declared performance invariants, and their verifier.
+
+The decorator attaches a :class:`Contract` to a public API function and
+registers it by qualified name::
+
+    @contract(collectives=0, densify=False, host_transfers=0)
+    def __getitem__(self, key): ...
+
+A contract makes three kinds of claim about every program the API
+compiles:
+
+* ``collectives=N`` — the trip-weighted count of psum-family ops
+  (all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute) is exactly ``N``.  ``None`` means unchecked.
+* ``host_transfers=N`` — infeed/outfeed/send/recv/host-callback count
+  is exactly ``N`` (``None`` = unchecked).
+* ``densify=False`` — no intermediate buffer exceeds the dense budget
+  (``dense_budget`` elems if given, else ``8 ×`` the largest input,
+  floor 64 Ki — see :meth:`ProgramReport.dense_budget_default`).
+
+Verification is *static*: a probe (see :mod:`repro.analysis.probes`)
+lowers the compiled program(s) behind the entry point on an
+``AbstractMesh`` — no devices, no TPU, nothing executes — and the
+:mod:`~repro.analysis.hlo_contracts` walker checks the claims against
+the HLO.  Probes may also return ``RetraceAudit`` items asserting the
+entry point's trace cache is keyed correctly (a second structurally
+identical call must not recompile).
+
+The decorator itself costs one attribute write at import time; the
+wrapped function is returned unchanged (no runtime indirection on hot
+paths).  This module depends on nothing outside the stdlib so `core`
+can import it freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from .hlo_contracts import ProgramReport, analyze_program
+
+CONTRACT_ATTR = "__d4m_contract__"
+
+#: qualified entry name -> Contract
+CONTRACT_REGISTRY: Dict[str, "Contract"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """Declared invariants for one API entry point."""
+    name: str                                 # registry key (qualname)
+    collectives: Optional[int] = None         # exact trip-weighted count
+    host_transfers: Optional[int] = 0         # exact count (None=unchecked)
+    densify: bool = False                     # True = allowed to densify
+    dense_budget: Optional[int] = None        # elems; None = derived default
+    note: str = ""                            # one-liner for reports
+
+    def check(self, report: ProgramReport,
+              program: str = "") -> List["Violation"]:
+        """Check one lowered program's report against this contract."""
+        out: List[Violation] = []
+        where = f"{self.name}" + (f"[{program}]" if program else "")
+        if self.collectives is not None:
+            got = report.collectives_total
+            if got != self.collectives:
+                fams = {k: v for k, v in report.collective_counts.items() if v}
+                out.append(Violation(
+                    entry=where, kind="collectives",
+                    message=(f"expected exactly {self.collectives} "
+                             f"collective(s), compiled program has {got:g} "
+                             f"{fams or ''}")))
+        if self.host_transfers is not None:
+            if report.host_transfers != self.host_transfers:
+                out.append(Violation(
+                    entry=where, kind="host_transfers",
+                    message=(f"expected {self.host_transfers} host "
+                             f"round-trip(s), compiled program has "
+                             f"{report.host_transfers:g}")))
+        if not self.densify:
+            budget = (self.dense_budget if self.dense_budget is not None
+                      else report.dense_budget_default())
+            if report.max_intermediate_elems > budget:
+                out.append(Violation(
+                    entry=where, kind="densify",
+                    message=(f"dense intermediate: "
+                             f"{report.max_intermediate_elems} elems "
+                             f"({report.max_intermediate_op}) exceeds the "
+                             f"tile budget of {budget} elems — the program "
+                             f"densifies")))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    entry: str
+    kind: str          # "collectives" | "host_transfers" | "densify" |
+                       # "recompile" | "probe"
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.entry}: [{self.kind}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class RetraceAudit:
+    """A probe's recompilation claim: ``calls()`` exercises the entry's
+    trace cache twice with equal-keyed arguments; the cache must not grow
+    between the first and second round (``sizes()`` -> int)."""
+    label: str
+    first: Callable[[], None]
+    again: Callable[[], None]
+    size: Callable[[], int]
+
+
+def contract(collectives: Optional[int] = None,
+             host_transfers: Optional[int] = 0,
+             densify: bool = False,
+             dense_budget: Optional[int] = None,
+             note: str = "",
+             name: Optional[str] = None):
+    """Declare invariants on an API entry point (registers it for
+    ``tools/d4mcheck`` and the test sweep; returns ``fn`` unchanged)."""
+    def deco(fn):
+        key = name or getattr(fn, "__qualname__", fn.__name__)
+        c = Contract(name=key, collectives=collectives,
+                     host_transfers=host_transfers, densify=densify,
+                     dense_budget=dense_budget, note=note)
+        setattr(fn, CONTRACT_ATTR, c)
+        CONTRACT_REGISTRY[key] = c
+        return fn
+    return deco
+
+
+def _ensure_registry() -> None:
+    """Import the decorated modules so their contracts register."""
+    import repro.core.assoc_tensor   # noqa: F401
+    import repro.core.dist_assoc     # noqa: F401
+    import repro.core.spgemm         # noqa: F401
+
+
+def verify_entry(name: str) -> List[Violation]:
+    """Statically verify one registered entry point.
+
+    Lowers each program its probe yields and checks the contract; also
+    runs the probe's retrace audits.  Returns all violations (empty list
+    = contract holds).
+    """
+    from . import probes
+
+    _ensure_registry()
+    c = CONTRACT_REGISTRY.get(name)
+    if c is None:
+        raise KeyError(f"no @contract registered under {name!r}")
+    probe = probes.PROBES.get(name)
+    if probe is None:
+        return [Violation(entry=name, kind="probe",
+                          message="no probe registered — contract is "
+                                  "declared but unverifiable")]
+    out: List[Violation] = []
+    for item in probe():
+        if isinstance(item, RetraceAudit):
+            item.first()
+            before = item.size()
+            item.again()
+            after = item.size()
+            if after != before:
+                out.append(Violation(
+                    entry=f"{name}[{item.label}]", kind="recompile",
+                    message=(f"trace cache grew {before} -> {after} on a "
+                             f"structurally identical repeat call — the "
+                             f"cache key is wrong (recompilation on every "
+                             f"call)")))
+            continue
+        label, hlo_text = item
+        out.extend(c.check(analyze_program(hlo_text), program=label))
+    return out
+
+
+def verify_all(names: Optional[List[str]] = None,
+               ) -> Dict[str, List[Violation]]:
+    """Sweep the whole registry (or the given subset).
+
+    Returns ``{entry_name: [violations...]}`` with an entry for every
+    checked name, so callers can report clean passes too.
+    """
+    _ensure_registry()
+    if names is None:
+        names = sorted(CONTRACT_REGISTRY)
+    return {n: verify_entry(n) for n in names}

@@ -1,0 +1,323 @@
+"""Loop-aware HLO contract walker.
+
+Grown out of ``launch/hlo_static.py``'s roofline analyzer: the same
+regex parse of HLO text into computations and the same call-graph walk
+from ENTRY with ``while``-trip multipliers, but aimed at *contract
+verification* instead of FLOP/byte estimation.  Given the lowered text
+of a jitted/shard_mapped program it reports:
+
+* **collectives by family** — ``all-reduce`` / ``all-gather`` /
+  ``reduce-scatter`` / ``all-to-all`` / ``collective-permute``, counted
+  through ``call``/``while``/``conditional`` bodies with the loop trip
+  count as a multiplier (a ``while`` of psums counts N×, exactly the
+  case a naive text grep undercounts).
+* **host round-trips** — ``infeed``/``outfeed``/``send``/``recv`` plus
+  ``custom-call``s whose target is a host callback.  The partitioner's
+  own ``Sharding``/``SPMDFullToShardShape``/``SPMDShardToFullShape``
+  markers and TPU kernel custom-calls are *not* host transfers.
+* **dense-intermediate footprint** — the largest non-parameter buffer
+  materialized anywhere in the program, in elements.  Compared against
+  a tile budget this is the densification detector: a sparse-COO
+  program that suddenly builds an ``nr×nc`` dense intermediate jumps
+  orders of magnitude above ``8 ×`` its biggest input.
+
+Both HLO header formats are accepted: post-optimization text
+(``name (args) -> result {``, what ``compiled.as_text()`` emits) and
+pre-optimization text (bare ``name {`` headers, what
+``jit(f).lower(...).as_text(dialect="hlo")`` emits).  Contract probes
+use the latter — it needs no devices, so the checks run on any host.
+
+``launch/hlo_static.py`` imports the parser from here; this module
+deliberately depends on nothing but the stdlib (JAX is imported lazily
+inside :func:`lower_hlo` only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+# --------------------------------------------------------------------------
+# Shared HLO text parser (used by launch.hlo_static as well)
+# --------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# Post-opt header:  `%name (p: f32[2]) -> f32[2] {`   (ENTRY optional)
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+# Pre-opt header:   `name {`  /  `ENTRY main.42 {`
+_COMP_HDR_BARE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+# single-name references (`body=region_0.15`) and brace lists
+# (`branch_computations={a, b}`) parse separately: a combined name class
+# with `,`/space would swallow the following `, body=` keyword and drop
+# the reference entirely.
+_CALLED_ONE = re.compile(
+    r"(?:condition|body|to_apply|fusion)=%?([\w\.\-_]+)")
+_CALLED_LIST = re.compile(
+    r"(?:called_computations|branch_computations)=\{([^}]*)\}")
+_OPERAND = re.compile(r"%([\w\.\-_]+)")
+_TARGET_RE = re.compile(r'custom_call_target="([^"]*)"')
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+class Op:
+    __slots__ = ("name", "shape", "kind", "rest", "operands", "called")
+
+    def __init__(self, name, shape, kind, rest):
+        self.name = name
+        self.shape = shape
+        self.kind = kind
+        self.rest = rest
+        self.operands = []
+        self.called = []
+
+
+def parse_hlo(text: str) -> Dict[str, List[Op]]:
+    """Parse HLO text into ``{computation_name: [Op, ...]}``.
+
+    Accepts both post-optimization headers (``name (...) -> ... {``) and
+    pre-optimization bare headers (``name {``).  The ENTRY computation is
+    aliased as ``__entry__``.
+    """
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    entry_name = None
+    for line in text.splitlines():
+        s = line.strip()
+        h = None
+        if s.endswith("{") and " = " not in s:
+            h = _COMP_HDR.match(s)
+            if h is None and "->" not in s:
+                h = _COMP_HDR_BARE.match(s)
+        if h:
+            cur = h.group(2)
+            comps[cur] = []
+            if h.group(1):
+                entry_name = cur
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, kind, rest = m.groups()
+        op = Op(name, shape, kind, rest)
+        # operand names: up to the closing paren of the op call
+        paren = rest.split(")")[0]
+        op.operands = _OPERAND.findall(paren)
+        for cm in _CALLED_ONE.finditer(rest):
+            op.called.append(cm.group(1))
+        for cm in _CALLED_LIST.finditer(rest):
+            for c in cm.group(1).split(","):
+                c = c.strip().lstrip("%")
+                if c:
+                    op.called.append(c)
+        comps[cur].append(op)
+    if entry_name is not None and entry_name != "__entry__":
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Trip count of a lax.scan while: max integer constant in condition."""
+    best = 1
+    for op in comps.get(cond_name, []):
+        m = re.search(r"\bconstant\((\d+)\)", f"{op.kind}({op.rest}")
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+# --------------------------------------------------------------------------
+# Contract analysis
+# --------------------------------------------------------------------------
+
+COLLECTIVE_FAMILIES = ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute")
+
+_HOST_TRANSFER_KINDS = ("infeed", "outfeed", "send", "recv")
+
+# Partitioner bookkeeping and on-device kernel launches: custom-calls that
+# are NOT host round-trips.
+_DEVICE_LOCAL_TARGETS = frozenset({
+    "Sharding", "SPMDFullToShardShape", "SPMDShardToFullShape",
+    "AllocateBuffer", "MoveToDevice", "MoveToHost", "LayoutConstraint",
+})
+_DEVICE_LOCAL_TARGET_PREFIXES = ("tpu_custom_call", "mosaic", "triton",
+                                 "cu_", "__cublas", "annotate")
+
+# Buffers that are bookkeeping, not materialized intermediates.
+_NON_MATERIAL_KINDS = frozenset({
+    "parameter", "get-tuple-element", "tuple", "after-all", "token",
+    "partition-id", "replica-id", "opt-barrier",
+})
+
+
+def _is_host_custom_call(rest: str) -> bool:
+    m = _TARGET_RE.search(rest)
+    if not m:
+        return False
+    target = m.group(1)
+    if target in _DEVICE_LOCAL_TARGETS:
+        return False
+    if any(target.startswith(p) for p in _DEVICE_LOCAL_TARGET_PREFIXES):
+        return False
+    return "callback" in target.lower() or "host" in target.lower()
+
+
+@dataclasses.dataclass
+class ProgramReport:
+    """What the contract walker found in one lowered program."""
+    collective_counts: Dict[str, float]      # family -> trip-weighted count
+    host_transfers: float                    # trip-weighted count
+    max_intermediate_elems: int              # largest materialized buffer
+    max_intermediate_op: str                 # "kind shape" of that buffer
+    max_input_elems: int                     # largest ENTRY parameter
+    while_trip_total: int                    # Σ trips over reachable whiles
+
+    @property
+    def collectives_total(self) -> float:
+        return sum(self.collective_counts.values())
+
+    def dense_budget_default(self) -> int:
+        """Densification threshold when the contract declares none: a COO
+        program may pad/stack/concat its inputs but never build anything
+        ~O(nr·nc); 8× the biggest input (floor 64 Ki elems) separates the
+        two regimes by orders of magnitude for the probe sizes used here."""
+        return max(8 * self.max_input_elems, 1 << 16)
+
+    def summary(self) -> str:
+        colls = {k: v for k, v in self.collective_counts.items() if v}
+        return (f"collectives={self.collectives_total:g} {colls or '{}'} "
+                f"host_transfers={self.host_transfers:g} "
+                f"max_intermediate={self.max_intermediate_elems} elems "
+                f"({self.max_intermediate_op}) "
+                f"max_input={self.max_input_elems} elems")
+
+
+def analyze_program(text: str) -> ProgramReport:
+    """Walk a lowered HLO program and report its contract-relevant facts.
+
+    Unlike :func:`repro.launch.hlo_static.analyze` (a roofline estimator
+    that only attributes HBM traffic at fusion boundaries), this walk
+    counts collectives and host transfers through *every* reachable
+    computation — ``call`` bodies included, which is where shard_map
+    bodies land in pre-optimization HLO — and multiplies through
+    ``while`` trip counts at every nesting level.
+    """
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:  # fallback: biggest computation
+        entry = max(comps.values(), key=len) if comps else []
+
+    coll_counts: Dict[str, float] = defaultdict(float)
+    host = 0.0
+    max_inter = 0
+    max_inter_op = ""
+    trip_total = 0
+    seen_stack: List[str] = []
+
+    max_input = 0
+    for op in entry:
+        if op.kind == "parameter":
+            e, _ = _shape_elems_bytes(op.shape)
+            max_input = max(max_input, e)
+
+    def walk(ops: List[Op], mult: float, is_entry: bool) -> None:
+        nonlocal host, max_inter, max_inter_op, trip_total
+        for op in ops:
+            kind = op.kind
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base in COLLECTIVE_FAMILIES and not kind.endswith("-done"):
+                coll_counts[base] += mult
+            if base in _HOST_TRANSFER_KINDS and not kind.endswith("-done"):
+                host += mult
+            elif kind == "custom-call" and _is_host_custom_call(op.rest):
+                host += mult
+            if kind not in _NON_MATERIAL_KINDS and not (
+                    is_entry and kind == "parameter"):
+                e, _ = _shape_elems_bytes(op.shape)
+                if e > max_inter:
+                    max_inter = e
+                    max_inter_op = f"{kind} {op.shape.split('{')[0].strip()}"
+            # Recurse through the whole call graph; `while` bodies get the
+            # trip count as a multiplier, everything else inherits `mult`.
+            if kind == "while":
+                mc = re.search(r"condition=\{?%?([\w\.\-_]+)", op.rest)
+                trips = _trip_count(comps, mc.group(1)) if mc else 1
+                trip_total += trips
+                for c in op.called:
+                    if c in comps and c not in seen_stack:
+                        seen_stack.append(c)
+                        walk(comps[c], mult * trips, False)
+                        seen_stack.pop()
+            else:
+                for c in op.called:
+                    if c in comps and c not in seen_stack:
+                        seen_stack.append(c)
+                        walk(comps[c], mult, False)
+                        seen_stack.pop()
+
+    walk(entry, 1.0, True)
+    return ProgramReport(
+        collective_counts=dict(coll_counts),
+        host_transfers=host,
+        max_intermediate_elems=max_inter,
+        max_intermediate_op=max_inter_op,
+        max_input_elems=max_input,
+        while_trip_total=trip_total,
+    )
+
+
+def lower_hlo(fn, *args, **kwargs) -> str:
+    """Lower a (jitted) function to pre-optimization HLO text.
+
+    Works without any devices: pass ``jax.ShapeDtypeStruct`` arguments
+    and (for shard_map programs) build the jit over an ``AbstractMesh``.
+    """
+    import jax
+
+    if not hasattr(fn, "lower"):
+        fn = jax.jit(fn)
+    lowered = fn.lower(*args, **kwargs)
+    try:
+        return lowered.as_text(dialect="hlo")
+    except TypeError:  # older jax: no dialect kwarg
+        return lowered.as_text()
+
+
+def analyze_fn(fn, *args, **kwargs) -> ProgramReport:
+    """Convenience: lower ``fn(*args)`` and analyze the program."""
+    return analyze_program(lower_hlo(fn, *args, **kwargs))

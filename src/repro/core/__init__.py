@@ -39,6 +39,24 @@ from .sorted_ops import (INT_SENTINEL, sorted_intersect,
                          sorted_intersect_padded, sorted_union,
                          sorted_union_padded)
 
+
+def reset_all_stats():
+    """Zero every telemetry counter in one call.
+
+    Covers ``UNION_STATS`` (and drops the keyspace-union cache),
+    ``CACHE_STATS`` (selector compilation — counters only; compiled
+    selectors stay warm), ``DISPATCH_STATS`` (selection execution paths)
+    and ``PLAN_STATS`` (and drops the plan cache).  Tests get this
+    between cases from the autouse fixture in ``tests/conftest.py``;
+    benchmarks call it before a measured region.
+    """
+    clear_union_cache()
+    reset_cache_stats()
+    for k in DISPATCH_STATS:
+        DISPATCH_STATS[k] = 0
+    reset_plan_stats()
+
+
 __all__ = [
     "Assoc", "AssocTensor", "DistAssoc", "KeySpace", "Semiring",
     "get_semiring",
@@ -54,6 +72,7 @@ __all__ = [
     "LazyExpr", "Source", "Select", "EwiseAdd", "EwiseMul", "MatMul",
     "Reduce", "Transpose", "lazy",
     # telemetry counters + reset helpers
+    "reset_all_stats",
     "PLAN_STATS", "reset_plan_stats", "clear_plan_cache",
     "CACHE_STATS", "clear_compile_cache", "reset_cache_stats",
     "UNION_STATS", "clear_union_cache",

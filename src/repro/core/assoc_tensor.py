@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .assoc import Assoc
+from repro.analysis.contracts import contract
+
 from .coo import SENT, dedup_sorted_coo
 from .expr import EwiseAdd, EwiseMul, MatMul, Select, Source
 from .keyspace import KeySpace
@@ -503,6 +505,8 @@ class AssocTensor:
                 self.cols, jnp.asarray(np.ascontiguousarray(cc.mask())))
         return keep
 
+    @contract(collectives=0,
+              note="device selection: range kernel / masks, never dense")
     def __getitem__(self, ij) -> "AssocTensor":
         # thin wrapper over the one-node graph (see __add__)
         i, j = ij
@@ -512,6 +516,8 @@ class AssocTensor:
         """Physical selection (the executor's device backend)."""
         return self._compact(self._selection_keep(ij))
 
+    @contract(collectives=0,
+              note="in-place value overwrite over stored entries")
     def __setitem__(self, ij, value) -> None:
         """Selector-targeted value update (in place, numeric scalar).
 

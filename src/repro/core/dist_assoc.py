@@ -41,6 +41,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.analysis.contracts import contract
+
 from .assoc_tensor import (AssocTensor, DISPATCH_STATS, coo_axis_mask_keep,
                            coo_compact, coo_mask_keep, coo_range_keep)
 from .coo import SENT, dedup_sorted_coo, expand_join_coo
@@ -63,6 +65,12 @@ __all__ = ["DistAssoc"]
 # ---------------------------------------------------------------------------
 
 _COO_SPEC = ("rows", "cols", "vals")
+
+def _local_coo_spec():
+    """PartitionSpec tree of the per-shard COO dict (``_local_spec``'s
+    static twin, so cached program builders need no instance)."""
+    return {"rows": P("data", None), "cols": P("data", None),
+            "vals": P("data", None), "nnz": P("data")}
 
 # auto-strategy crossover for DistAssoc.matmul: below this per-shard
 # expand-join size the jit-safe coo shard_map program wins (one fused
@@ -184,6 +192,119 @@ def _shard_selection_keep(a0, row_gather: bool, col_gather: bool,
     return keep
 
 
+@functools.lru_cache(maxsize=256)
+def _reduce_add_n_prog(mesh: Mesh, sr, axis: int, n_out: int, n_terms: int):
+    """Fused ``⊕-reduce(t₁ ⊕ t₂ ⊕ …, axis)`` over aligned sharded terms.
+
+    The planner's Reduce-through-EwiseAdd rewrite lands here: instead of
+    materializing the ⊕-merged array (a concat + sort per shard) and then
+    reducing it, every term's triples scatter straight into one dense
+    partial vector and the partials merge with exactly **one** psum-family
+    collective — same contract as ``_matmul_reduce_prog``.
+    """
+    spec = _local_coo_spec()
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(spec,) * n_terms,
+             out_specs=P(), check_rep=False)
+    def go(*parts):
+        vec = jnp.full((n_out,), sr.zero, jnp.float32)
+        for p in parts:
+            ok = p["rows"][0] != SENT
+            keys = p["rows"][0] if axis == 1 else p["cols"][0]
+            vec = scatter_combine(vec, jnp.where(ok, keys, n_out),
+                                  jnp.where(ok, p["vals"][0], sr.zero), sr)
+        return mesh_combine(vec, "data", sr)
+
+    return go
+
+
+@functools.lru_cache(maxsize=256)
+def _select_prog(mesh: Mesh, row_gather: bool, col_gather: bool):
+    """Shard-local selection program (``__getitem__``'s executor).
+
+    Cached by dispatch kind only: the box list / masks ride in as traced
+    arguments, so every selection with the same (mesh, dispatch) shape
+    reuses one compiled program instead of re-tracing a bare shard_map
+    per call.
+    """
+    spec = _local_coo_spec()
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(spec, P(), P(), P()),
+             out_specs=spec, check_rep=False)
+    def go(a, bnds, rm, cm):
+        a0 = jax.tree.map(lambda x: x[0], a)
+        # same raw-array primitives as AssocTensor — layers cannot drift
+        keep = _shard_selection_keep(a0, row_gather, col_gather,
+                                     bnds, rm, cm)
+        r, c, v, nnz = coo_compact(a0["rows"], a0["cols"], a0["vals"], keep)
+        return {"rows": r[None], "cols": c[None], "vals": v[None],
+                "nnz": nnz[None]}
+
+    return go
+
+
+@functools.lru_cache(maxsize=256)
+def _setvals_prog(mesh: Mesh, row_gather: bool, col_gather: bool):
+    """Selector-targeted value overwrite (``__setitem__``'s executor).
+
+    The scalar rides in as a traced argument — assigning a different
+    value hits the same compiled program.
+    """
+    spec = _local_coo_spec()
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(spec, P(), P(), P(), P()),
+             out_specs=P("data", None), check_rep=False)
+    def go(a, bnds, rm, cm, val):
+        a0 = jax.tree.map(lambda x: x[0], a)
+        keep = _shard_selection_keep(a0, row_gather, col_gather,
+                                     bnds, rm, cm)
+        return jnp.where(keep, val.astype(a0["vals"].dtype),
+                         a0["vals"])[None]
+
+    return go
+
+
+@functools.lru_cache(maxsize=256)
+def _ewise_prog(mesh: Mesh, sr, op: str):
+    """Element-wise ⊕ / ⊗ program: disjoint aligned row partitions, so the
+    whole operation is one shard-local canonical merge, zero collectives."""
+    spec = _local_coo_spec()
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+             check_rep=False)
+    def go(a, b):
+        # keyspaces are host metadata; inside shard_map the algebra runs
+        # on raw rank arrays via the same canonicalization primitive the
+        # single-device AssocTensor uses.
+        a0 = jax.tree.map(lambda x: x[0], a)
+        b0 = jax.tree.map(lambda x: x[0], b)
+        rows = jnp.concatenate([a0["rows"], b0["rows"]])
+        cols = jnp.concatenate([a0["cols"], b0["cols"]])
+        vals = jnp.concatenate([a0["vals"], b0["vals"]])
+        if op == "add":
+            r, c, v, n = dedup_sorted_coo(rows, cols, vals, sr.add,
+                                          zero=sr.zero)
+            out = {"rows": r, "cols": c, "vals": v, "nnz": n}
+        else:
+            src = jnp.concatenate([
+                jnp.zeros(a0["rows"].shape[0], jnp.int32),
+                jnp.ones(b0["rows"].shape[0], jnp.int32)])
+            r, c, v, n = dedup_sorted_coo(
+                rows, cols, vals, sr.add, zero=sr.zero,
+                require_pair=True, pair_op=sr.mul, src=src)
+            cap = min(a0["rows"].shape[0], b0["rows"].shape[0])
+            out = {"rows": r[:cap], "cols": c[:cap], "vals": v[:cap],
+                   "nnz": jnp.minimum(n, cap)}
+        return {"rows": out["rows"][None], "cols": out["cols"][None],
+                "vals": out["vals"][None], "nnz": out["nnz"][None]}
+
+    return go
+
+
 class DistAssoc:
     """Row-partitioned AssocTensor over a mesh's ``data`` axis."""
 
@@ -281,51 +402,21 @@ class DistAssoc:
     # -- element-wise (alignment-free: row ranges are disjoint) -----------------
     def _ewise(self, other: "DistAssoc", op: str, semiring) -> "DistAssoc":
         sr = get_semiring(semiring)
-        a_dict, spec = self._local_spec()
-
-        @partial(shard_map, mesh=self.mesh,
-                 in_specs=(spec, spec), out_specs=spec,
-                 check_rep=False)
-        def go(a, b):
-            # keyspaces are host metadata; inside shard_map the algebra runs
-            # on raw rank arrays via the same canonicalization primitive the
-            # single-device AssocTensor uses.
-            a0 = jax.tree.map(lambda x: x[0], a)
-            b0 = jax.tree.map(lambda x: x[0], b)
-            if op == "add":
-                rows = jnp.concatenate([a0["rows"], b0["rows"]])
-                cols = jnp.concatenate([a0["cols"], b0["cols"]])
-                vals = jnp.concatenate([a0["vals"], b0["vals"]])
-                r, c, v, n = dedup_sorted_coo(rows, cols, vals, sr.add,
-                                              zero=sr.zero)
-                out = {"rows": r, "cols": c, "vals": v, "nnz": n}
-            else:
-                src = jnp.concatenate([
-                    jnp.zeros(a0["rows"].shape[0], jnp.int32),
-                    jnp.ones(b0["rows"].shape[0], jnp.int32)])
-                rows = jnp.concatenate([a0["rows"], b0["rows"]])
-                cols = jnp.concatenate([a0["cols"], b0["cols"]])
-                vals = jnp.concatenate([a0["vals"], b0["vals"]])
-                r, c, v, n = dedup_sorted_coo(
-                    rows, cols, vals, sr.add, zero=sr.zero,
-                    require_pair=True, pair_op=sr.mul, src=src)
-                cap = min(a0["rows"].shape[0], b0["rows"].shape[0])
-                out = {"rows": r[:cap], "cols": c[:cap], "vals": v[:cap],
-                       "nnz": jnp.minimum(n, cap)}
-            return {"rows": out["rows"][None], "cols": out["cols"][None],
-                    "vals": out["vals"][None], "nnz": out["nnz"][None]}
-
+        a_dict, _ = self._local_spec()
         b_dict = {"rows": other.local.rows, "cols": other.local.cols,
                   "vals": other.local.vals, "nnz": other.local.nnz}
+        go = _ewise_prog(self.mesh, sr, op)
         out = go(a_dict, b_dict)
         new_local = AssocTensor(out["rows"], out["cols"], out["vals"],
                                 out["nnz"], self.local.row_space,
                                 self.local.col_space, self.local.val_space)
         return DistAssoc(new_local, self.mesh, row_bounds=self.row_bounds)
 
+    @contract(collectives=0, note="shard-local ⊕: disjoint aligned rows")
     def add(self, other, semiring=PLUS_TIMES):
         return self._ewise(other, "add", semiring)
 
+    @contract(collectives=0, note="shard-local ⊗: disjoint aligned rows")
     def mul(self, other, semiring=PLUS_TIMES):
         return self._ewise(other, "mul", semiring)
 
@@ -379,6 +470,8 @@ class DistAssoc:
             DISPATCH_STATS["range"] += 1
         return row_gather, col_gather, bounds, rmask, cmask
 
+    @contract(collectives=0,
+              note="selection is shard-local: compiled boxes/masks broadcast")
     def __getitem__(self, ij) -> "DistAssoc":
         # thin wrapper over the one-node graph (lazy/eager one path)
         i, j = ij
@@ -400,28 +493,16 @@ class DistAssoc:
         """
         row_gather, col_gather, bounds, rmask, cmask = \
             self._compiled_selection(ij)
-
-        a_dict, spec = self._local_spec()
-
-        @partial(shard_map, mesh=self.mesh,
-                 in_specs=(spec, P(), P(), P()), out_specs=spec,
-                 check_rep=False)
-        def go(a, bnds, rm, cm):
-            a0 = jax.tree.map(lambda x: x[0], a)
-            # same raw-array primitives as AssocTensor — layers cannot drift
-            keep = _shard_selection_keep(a0, row_gather, col_gather,
-                                         bnds, rm, cm)
-            r, c, v, nnz = coo_compact(a0["rows"], a0["cols"], a0["vals"],
-                                       keep)
-            out = {"rows": r, "cols": c, "vals": v, "nnz": nnz}
-            return {k: x[None] for k, x in out.items()}
-
+        a_dict, _ = self._local_spec()
+        go = _select_prog(self.mesh, row_gather, col_gather)
         out = go(a_dict, bounds, rmask, cmask)
         new_local = AssocTensor(out["rows"], out["cols"], out["vals"],
                                 out["nnz"], self.local.row_space,
                                 self.local.col_space, self.local.val_space)
         return DistAssoc(new_local, self.mesh, row_bounds=self.row_bounds)
 
+    @contract(collectives=0,
+              note="scalar assignment is shard-local over stored entries")
     def __setitem__(self, ij, value) -> None:
         """Selector-targeted scalar assignment, sharded (in place).
 
@@ -440,25 +521,16 @@ class DistAssoc:
             raise TypeError("DistAssoc __setitem__ requires numeric values")
         row_gather, col_gather, bounds, rmask, cmask = \
             self._compiled_selection(ij)
-
-        a_dict, spec = self._local_spec()
-
-        @partial(shard_map, mesh=self.mesh,
-                 in_specs=(spec, P(), P(), P()),
-                 out_specs=P("data", None), check_rep=False)
-        def go(a, bnds, rm, cm):
-            a0 = jax.tree.map(lambda x: x[0], a)
-            keep = _shard_selection_keep(a0, row_gather, col_gather,
-                                         bnds, rm, cm)
-            return jnp.where(keep, jnp.float32(value), a0["vals"])[None]
-
-        new_vals = go(a_dict, bounds, rmask, cmask)
+        a_dict, _ = self._local_spec()
+        go = _setvals_prog(self.mesh, row_gather, col_gather)
+        new_vals = go(a_dict, bounds, rmask, cmask, jnp.float32(value))
         self.local = AssocTensor(self.local.rows, self.local.cols, new_vals,
                                  self.local.nnz, self.local.row_space,
                                  self.local.col_space,
                                  self.local.val_space)
 
     # -- global reductions --------------------------------------------------------
+    @contract(collectives=1, note="local segment scatter + one mesh_combine")
     def col_reduce(self, semiring=PLUS_TIMES) -> jnp.ndarray:
         """⊕ over rows per column → dense [n_cols] (one collective)."""
         sr = get_semiring(semiring)
@@ -466,6 +538,7 @@ class DistAssoc:
                               self.local.vals.dtype)
         return go(self.local.cols, self.local.vals, self.local.rows)
 
+    @contract(collectives=1, note="disjoint-support concat as one collective")
     def row_reduce(self, semiring=PLUS_TIMES) -> jnp.ndarray:
         """⊕ over cols per row → dense [n_rows] (one collective).
 
@@ -478,6 +551,7 @@ class DistAssoc:
                               self.local.vals.dtype)
         return go(self.local.rows, self.local.vals, self.local.rows)
 
+    @contract(collectives=1, note="one psum of per-shard counts")
     def col_degree(self) -> jnp.ndarray:
         """Stored-entry count per column → dense int32 [n_cols] (one psum).
 
@@ -488,6 +562,7 @@ class DistAssoc:
         go = _col_degree_prog(self.mesh, len(self.local.col_space))
         return go(self.local.cols, self.local.rows)
 
+    @contract(collectives=1, note="per-shard y rows + one mesh_combine")
     def matmul_dense_vec(self, x: jnp.ndarray, semiring=PLUS_TIMES) -> jnp.ndarray:
         """y = A ⊗.⊕ x for a dense vector over the column keyspace.
 
@@ -546,6 +621,8 @@ class DistAssoc:
         expand = int(max(8, _round_up(int(per_shard.max(initial=0)) or 1, 8)))
         return a_loc.rows, a_cols, a_loc.vals, b, expand
 
+    @contract(collectives=0,
+              note="row-sharded A x broadcast B: shard-local expand-join")
     def matmul(self, other, semiring=PLUS_TIMES, *, impl: str = "auto",
                kernel_impl: str = "auto",
                out_capacity_per_shard: Optional[int] = None) -> "DistAssoc":
@@ -644,6 +721,7 @@ class DistAssoc:
             return MatMul(Source(self), Source(other)).collect()
         return NotImplemented
 
+    @contract(collectives=1, note="fused epilogue: exactly one psum-family op")
     def matmul_reduce(self, other, axis: int = 1,
                       semiring=PLUS_TIMES) -> jnp.ndarray:
         """Fused ``⊕-reduce(A ⊗.⊕ B, axis)`` — one collective, no C.
@@ -665,6 +743,7 @@ class DistAssoc:
         go = _matmul_reduce_prog(self.mesh, sr, expand, n_out, axis)
         return go(a_dict, b.rows, b.cols, b.vals)
 
+    @contract(collectives=1, note="fused reduce= epilogue (AA^T)")
     def sqout(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
         """AAᵀ — the row-key graph, sharded; ``reduce=0/1`` runs the fused
         epilogue instead (dense vector over the row keyspace, one
@@ -674,6 +753,7 @@ class DistAssoc:
             return self.matmul(t, semiring)
         return self.matmul_reduce(t, reduce, semiring)
 
+    @contract(collectives=1, note="fused reduce= epilogue (A^T A)")
     def sqin(self, semiring=PLUS_TIMES, reduce: Optional[int] = None):
         """AᵀA — the correlation idiom.  The transpose breaks the row
         partition, so this runs as gathered-Aᵀ × broadcast-A from the

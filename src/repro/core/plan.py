@@ -75,6 +75,7 @@ PLAN_STATS = {
     "plan_hits": 0, "plan_misses": 0,
     "pushdown": 0, "fused_matmul_reduce": 0,
     "fused_select_matmul": 0, "ewise_fused": 0,
+    "reduce_through_add": 0,
 }
 
 
@@ -206,6 +207,26 @@ class _EwiseAddN(LazyExpr):
                 self.semiring.name)
 
 
+class _ReduceAddN(LazyExpr):
+    """Fused ``⊕-reduce(t₁ ⊕ t₂ ⊕ …, axis)`` — the Reduce-through-EwiseAdd
+    rewrite.  Valid when the ⊕ of the chain IS the reduction combine (same
+    ``add_kind`` monoid): then ⊕-folding every term's entries straight into
+    the output vector equals reducing the materialized merge, and the
+    concat + canonicalize sort of the merge never happens.  Keeps the ewise
+    semiring too: the executor's non-numeric fallback must materialize with
+    the chain's own ⊕."""
+
+    def __init__(self, terms, axis, semiring, ewise_semiring):
+        self.terms = list(terms)
+        self.axis = axis
+        self.semiring = semiring
+        self.ewise_semiring = ewise_semiring
+
+    def key(self):
+        return ("reduce_add_n", tuple(t.key() for t in self.terms),
+                self.axis, self.semiring.name, self.ewise_semiring.name)
+
+
 def _flatten_add(node, sr) -> List[LazyExpr]:
     if isinstance(node, EwiseAdd) and node.semiring.name == sr.name:
         return _flatten_add(node.a, sr) + _flatten_add(node.b, sr)
@@ -221,6 +242,20 @@ def _fuse(node: LazyExpr) -> LazyExpr:
                 and child.semiring.name == node.semiring.name):
             PLAN_STATS["fused_matmul_reduce"] += 1
             return _MatMulReduce(child.a, child.b, node.axis, child.semiring)
+        if (isinstance(child, (EwiseAdd, _EwiseAddN))
+                and node.axis is not None
+                and child.semiring.add_kind == node.semiring.add_kind):
+            # reduce(A ⊕ B) → scatter both operands' entries into the
+            # reduce vector directly.  add_kind equality is the exact
+            # condition: it names the ⊕ monoid (sum/max/min) for every
+            # registered semiring, so the chain's ⊕ and the reduction
+            # combine are the same associative-commutative op and the
+            # per-entry fold order cannot matter.
+            PLAN_STATS["reduce_through_add"] += 1
+            terms = (child.terms if isinstance(child, _EwiseAddN)
+                     else [child.a, child.b])
+            return _ReduceAddN(terms, node.axis, node.semiring,
+                               child.semiring)
         return Reduce(child, node.axis, node.semiring)
     if isinstance(node, EwiseAdd):
         terms = _flatten_add(node, node.semiring)
@@ -361,6 +396,10 @@ def _eval_inner(node: LazyExpr, memo: dict):
     if isinstance(node, _EwiseAddN):
         terms = [_eval(t, memo) for t in node.terms]
         return _add_n(terms, node.semiring)
+    if isinstance(node, _ReduceAddN):
+        terms = [_eval(t, memo) for t in node.terms]
+        return _reduce_add_n(terms, node.axis, node.semiring,
+                             node.ewise_semiring)
     raise TypeError(f"cannot execute node {node!r}")
 
 
@@ -657,6 +696,87 @@ def _axis_reduce(arr, axis: Optional[int], sr):
     if vec.shape[0] == 0:
         return jnp.float32(srr.zero)
     return srr.add_reduce(vec)
+
+
+# ---------------------------------------------------------------------------
+# Fused ⊕-chain reductions (Reduce pushed through EwiseAdd: every term's
+# entries scatter straight into the output vector — the ⊕-merged array is
+# never materialized, so its concat + canonicalize sort never runs)
+# ---------------------------------------------------------------------------
+
+def _reduce_add_n(terms, axis, sr, ewise_sr):
+    sr = get_semiring(sr)
+    ewise_sr = get_semiring(ewise_sr)
+    layers = {_layer(t) for t in terms}
+    if len(layers) != 1:
+        raise TypeError(f"⊕ chain mixes layers: {sorted(layers)}")
+    layer = layers.pop()
+    numeric = all((t.local.numeric if layer == "dist" else t.numeric)
+                  for t in terms)
+    if not numeric:
+        # string ⊕ concatenates before logical() flattens — per-entry
+        # scatter would count overlaps twice; materialize the chain
+        return _axis_reduce(_add_n(terms, ewise_sr), axis, sr)
+    if layer == "host":
+        return _host_reduce_add_n(terms, axis, sr)
+    if layer == "device":
+        return _device_reduce_add_n(terms, axis, sr)
+    return _dist_reduce_add_n(terms, axis, sr, ewise_sr)
+
+
+def _host_reduce_add_n(terms, axis, sr):
+    live = [t for t in terms if t.nnz()]
+    if not live:
+        return np.full(0, sr.zero, dtype=np.float64)
+    key_u = live[0].row if axis == 1 else live[0].col
+    for t in live[1:]:
+        key_u, _, _ = sorted_union(key_u, t.row if axis == 1 else t.col)
+    out = np.full(len(key_u), sr.zero, dtype=np.float64)
+    for t in live:
+        coo = t.adj.tocoo()
+        keys = t.row if axis == 1 else t.col
+        kmap = np.searchsorted(key_u, keys)
+        sr.add_np.at(out, kmap[coo.row if axis == 1 else coo.col], coo.data)
+    return out
+
+
+def _device_reduce_add_n(terms, axis, sr):
+    rs_space, cs_space = terms[0].row_space, terms[0].col_space
+    for t in terms[1:]:
+        rs_space, _, _ = rs_space.union(t.row_space)
+        cs_space, _, _ = cs_space.union(t.col_space)
+    out_space = rs_space if axis == 1 else cs_space
+    n_out = max(len(out_space), 0)
+    dt = jnp.result_type(*[t.vals.dtype for t in terms])
+    vec = jnp.full((n_out,), sr.zero, dt)
+    for t in terms:
+        ok = t.valid_mask()
+        space = t.row_space if axis == 1 else t.col_space
+        keys = t.rows if axis == 1 else t.cols
+        if space != out_space:
+            kmap = jnp.asarray(np.searchsorted(
+                out_space.keys, space.keys).astype(np.int32))
+            if kmap.shape[0]:
+                keys = kmap[jnp.clip(keys, 0, kmap.shape[0] - 1)]
+        vec = scatter_combine(vec, jnp.where(ok, keys, n_out),
+                              jnp.where(ok, t.vals, sr.zero), sr)
+    return vec
+
+
+def _dist_reduce_add_n(terms, axis, sr, ewise_sr):
+    from .dist_assoc import _reduce_add_n_prog
+
+    d0 = terms[0]
+    if any(t.local.row_space != d0.local.row_space
+           or t.local.col_space != d0.local.col_space for t in terms[1:]):
+        # dist ⊕ requires aligned spaces anyway (_dist_add_n's contract);
+        # an exotic graph that mixes them falls back to materializing
+        return _axis_reduce(_add_n(terms, ewise_sr), axis, sr)
+    n_out = len(d0.local.row_space if axis == 1 else d0.local.col_space)
+    go = _reduce_add_n_prog(d0.mesh, sr, axis, n_out, len(terms))
+    dicts = tuple({"rows": t.local.rows, "cols": t.local.cols,
+                   "vals": t.local.vals, "nnz": t.local.nnz} for t in terms)
+    return go(*dicts)
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,8 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import contract
+
 from .coo import SENT, dedup_sorted_coo, expand_join_coo
 from .semiring import PLUS_TIMES, Semiring, get_semiring, scatter_combine
 
@@ -450,6 +452,8 @@ def _scatter_dense(rows: np.ndarray, cols: np.ndarray, vals: jnp.ndarray,
         vals.astype(jnp.float32), mode="drop")
 
 
+@contract(collectives=0, name="spgemm.matmul",
+          note="single-device planned product: BSR pair-list kernel path")
 def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
            out_capacity: Optional[int] = None, use_kernel: bool = True,
            kernel_impl: str = "auto",
@@ -547,6 +551,8 @@ def matmul(a, b, semiring=PLUS_TIMES, *, impl: str = "auto",
     return out
 
 
+@contract(collectives=0, name="spgemm.matmul_reduce",
+          note="fused epilogue: C tiles never materialized")
 def matmul_reduce(a, b, axis: int, semiring=PLUS_TIMES, *,
                   impl: str = "auto", kernel_impl: str = "auto",
                   a_keep: Optional[np.ndarray] = None,

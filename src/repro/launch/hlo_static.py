@@ -28,20 +28,13 @@ import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->\s*.+\{\s*$")
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
-_CALLED = re.compile(
-    r"(?:condition|body|to_apply|called_computations|branch_computations|"
-    r"fusion)=\{?%?([\w\.\-_,%\s]+)\}?")
-_OPERAND = re.compile(r"%([\w\.\-_]+)")
+# The HLO text parser (computation split, op regexes, shape sizing, while
+# trip-count recovery) is shared with the contract checker; it lives in
+# repro.analysis.hlo_contracts and accepts both post-optimization headers
+# (what this roofline path consumes) and pre-optimization bare headers.
+from repro.analysis.hlo_contracts import (_DTYPE_BYTES, _SHAPE_RE, Op,  # noqa: F401
+                                          _shape_dims, _shape_elems_bytes,
+                                          _trip_count, parse_hlo)
 
 _ALGO_FACTOR = {
     "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
@@ -57,86 +50,6 @@ _HBM_OPS_PREFIX = (
     "add", "multiply", "subtract", "divide", "exponential", "rsqrt", "tanh",
     "convert", "compare", "maximum", "minimum", "log", "custom-call",
 ) + _COLL_BASE
-
-
-def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
-    elems = 0
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(shape_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        elems += n
-        total += n * _DTYPE_BYTES[dt]
-    return elems, total
-
-
-def _shape_dims(shape_str: str) -> List[int]:
-    m = _SHAPE_RE.search(shape_str)
-    if not m or not m.group(2):
-        return []
-    return [int(d) for d in m.group(2).split(",")]
-
-
-class Op:
-    __slots__ = ("name", "shape", "kind", "rest", "operands", "called")
-
-    def __init__(self, name, shape, kind, rest):
-        self.name = name
-        self.shape = shape
-        self.kind = kind
-        self.rest = rest
-        self.operands = []
-        self.called = []
-
-
-def parse_hlo(text: str) -> Dict[str, List[Op]]:
-    comps: Dict[str, List[Op]] = {}
-    cur: Optional[str] = None
-    entry_name = None
-    for line in text.splitlines():
-        h = _COMP_HDR.match(line.strip()) if ("{" in line and "->" in line) else None
-        if h:
-            cur = h.group(2)
-            comps[cur] = []
-            if h.group(1):
-                entry_name = cur
-            continue
-        if cur is None:
-            continue
-        if line.strip() == "}":
-            cur = None
-            continue
-        m = _OP_RE.match(line)
-        if not m:
-            continue
-        name, shape, kind, rest = m.groups()
-        op = Op(name, shape, kind, rest)
-        # operand names: up to the closing paren of the op call
-        paren = rest.split(")")[0]
-        op.operands = _OPERAND.findall(paren)
-        for cm in _CALLED.finditer(rest):
-            for c in cm.group(1).split(","):
-                c = c.strip().lstrip("%")
-                if c:
-                    op.called.append(c)
-        comps[cur].append(op)
-    if entry_name is not None and entry_name != "__entry__":
-        comps["__entry__"] = comps[entry_name]
-    return comps
-
-
-def _trip_count(comps, cond_name: str) -> int:
-    """Trip count of a lax.scan while: max integer constant in condition."""
-    best = 1
-    for op in comps.get(cond_name, []):
-        m = re.search(r"\bconstant\((\d+)\)", f"{op.kind}({op.rest}")
-        if m:
-            best = max(best, int(m.group(1)))
-    return best
 
 
 def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:

@@ -14,7 +14,7 @@ import pytest
 from repro.core import (Assoc, AssocTensor, DISPATCH_STATS, EwiseAdd,
                         EwiseMul, LazyExpr, MatMul, Mask, PLAN_STATS,
                         Positions, Range, Reduce, REGISTRY, Select, Source,
-                        StartsWith, Transpose, lazy, reset_plan_stats)
+                        StartsWith, Transpose, lazy)
 from repro.core import plan
 from repro.core.dist_assoc import DistAssoc
 from repro.core.select import All
@@ -156,7 +156,6 @@ def _src():
 
 
 def test_pushdown_through_transpose():
-    reset_plan_stats()
     e = plan.optimize(Transpose(_src())[StartsWith("a"), Range("b", "c")])
     assert isinstance(e, Transpose)
     inner = e.child
@@ -167,7 +166,6 @@ def test_pushdown_through_transpose():
 
 
 def test_pushdown_through_ewise_and_matmul():
-    reset_plan_stats()
     e = plan.optimize(EwiseAdd(_src(), _src())[StartsWith("a"), :])
     assert isinstance(e, EwiseAdd)
     assert isinstance(e.a, Select) and isinstance(e.b, Select)
@@ -185,7 +183,6 @@ def test_nested_selects_compose():
 
 
 def test_positions_and_mask_not_pushed():
-    reset_plan_stats()
     e = plan.optimize(Transpose(_src())[Positions([0, 2]), :])
     assert isinstance(e, Select)                  # stayed on top
     assert isinstance(e.child, Transpose)
@@ -206,11 +203,80 @@ def test_matmul_reduce_fuses_only_on_matching_semiring():
 
 
 def test_ewise_chain_flattens():
-    reset_plan_stats()
     e = plan.optimize(_src() + _src() + _src() + _src())
     assert isinstance(e, plan._EwiseAddN)
     assert len(e.terms) == 4
     assert PLAN_STATS["ewise_fused"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Reduce pushed through EwiseAdd (⊕-chain reduction without materializing
+# the merged array)
+# ---------------------------------------------------------------------------
+
+def test_reduce_through_add_structural():
+    from repro.core.semiring import get_semiring
+    sr = get_semiring("plus_times")
+    e = plan.optimize(Reduce(EwiseAdd(_src(), _src(), semiring=sr), 1, sr))
+    assert isinstance(e, plan._ReduceAddN)
+    assert len(e.terms) == 2
+    assert PLAN_STATS["reduce_through_add"] == 1
+    # a flattened 3-term chain fuses as one _ReduceAddN
+    e3 = plan.optimize(Reduce(_src() + _src() + _src(), 0, sr))
+    assert isinstance(e3, plan._ReduceAddN)
+    assert len(e3.terms) == 3
+    # mismatched ⊕ monoids must NOT fuse (sum-merge then max-reduce)
+    e2 = plan.optimize(Reduce(EwiseAdd(_src(), _src(), semiring=sr), 1,
+                              get_semiring("max_plus")))
+    assert isinstance(e2, Reduce)
+    # axis=None keeps the merged array (scalar reduce needs it whole)
+    en = plan.optimize(Reduce(EwiseAdd(_src(), _src(), semiring=sr),
+                              None, sr))
+    assert isinstance(en, Reduce)
+
+
+@pytest.mark.parametrize("sr_name", ["plus_times", "max_plus", "min_plus"])
+@pytest.mark.parametrize("axis", [0, 1])
+def test_reduce_through_add_parity(layers, sr_name, axis):
+    ha, hb, da, db, Da = layers
+    sr = REGISTRY[sr_name]
+    merged = ha.add(hb, sr)
+    keys = merged.row if axis == 1 else merged.col
+    want = _vec_dict(plan.host_axis_reduce(merged, axis, sr),
+                     keys.tolist(), sr.zero)
+
+    got_h = (ha.lazy().add(hb.lazy(), semiring=sr)
+             .sum(axis=axis, semiring=sr).collect())
+    assert PLAN_STATS["reduce_through_add"] >= 1
+    _close(_vec_dict(got_h, keys.tolist(), sr.zero), want)
+
+    got_d = (da.lazy().add(db.lazy(), semiring=sr)
+             .sum(axis=axis, semiring=sr).collect())
+    dspace = da.row_space.union(db.row_space)[0] if axis == 1 else \
+        da.col_space.union(db.col_space)[0]
+    _close(_vec_dict(got_d, dspace.keys.tolist(), sr.zero), want, tol=1e-4)
+
+    # dist ⊕ needs aligned keyspaces: A ⊕ A over the same DistAssoc
+    want_s = _vec_dict(plan.host_axis_reduce(ha.add(ha, sr), axis, sr),
+                       (ha.row if axis == 1 else ha.col).tolist(), sr.zero)
+    got_D = ((Da.lazy().add(Da.lazy(), semiring=sr))
+             .sum(axis=axis, semiring=sr).collect())
+    Dspace = Da.local.row_space if axis == 1 else Da.local.col_space
+    _close(_vec_dict(got_D, Dspace.keys.tolist(), sr.zero), want_s, tol=1e-4)
+
+
+def test_reduce_through_add_string_fallback():
+    # string ⊕ concatenates before logical() flattens — the scatter fast
+    # path would double-count overlaps, so the planner's rewrite still
+    # fires but the executor materializes the chain first
+    a = Assoc(["r1", "r2"], ["c1", "c1"], ["x", "y"])
+    b = Assoc(["r1", "r3"], ["c1", "c1"], ["z", "w"])
+    # ("r1","c1") overlaps: concat-then-logical counts it ONCE; a naive
+    # per-entry scatter would have counted 2
+    want = plan.host_axis_reduce(a.add(b), 1)
+    got = (a.lazy() + b.lazy()).sum(axis=1).collect()
+    assert PLAN_STATS["reduce_through_add"] == 1      # rewrite fired…
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +285,6 @@ def test_ewise_chain_flattens():
 
 def test_hash_consing_repeated_subtree(layers):
     ha, hb, *_ = layers
-    reset_plan_stats()
     sq = ha.lazy() @ ha.lazy().T
     out = (sq * sq).collect()
     # the repeated AAᵀ subtree evaluates once: one hit, and the memoized
@@ -231,7 +296,6 @@ def test_hash_consing_repeated_subtree(layers):
 
 def test_fusion_counters_fire(layers):
     ha, hb, da, db, _ = layers
-    reset_plan_stats()
     (ha.lazy()[SEL, :] @ hb.lazy()).sum(axis=1).collect()
     assert PLAN_STATS["fused_matmul_reduce"] == 1
     assert PLAN_STATS["fused_select_matmul"] == 1
@@ -357,8 +421,7 @@ def test_dist_setitem_parity(mesh):
 # ---------------------------------------------------------------------------
 
 def test_plan_stats_exported():
-    from repro.core import PLAN_STATS as ps, reset_plan_stats as rps
-    rps()
+    from repro.core import PLAN_STATS as ps
     assert set(ps) >= {"hits", "misses", "pushdown", "fused_matmul_reduce",
                        "fused_select_matmul", "ewise_fused"}
     assert all(v == 0 for v in ps.values())

@@ -295,10 +295,9 @@ def _pipeline(da, db):
 
 
 def test_plan_cache_second_collect_hits():
-    from repro.core import PLAN_STATS, reset_plan_stats
+    from repro.core import PLAN_STATS
 
     ha, hb, da, db = _random_pair(seed=21)
-    reset_plan_stats()  # also clears the plan cache
     r1 = _pipeline(da, db).collect()
     assert PLAN_STATS["plan_misses"] == 1
     assert PLAN_STATS["plan_hits"] == 0
@@ -310,11 +309,10 @@ def test_plan_cache_second_collect_hits():
 
 
 def test_plan_cache_distinct_sources_miss():
-    from repro.core import PLAN_STATS, reset_plan_stats
+    from repro.core import PLAN_STATS
 
     _, _, da, db = _random_pair(seed=22)
     _, _, da2, db2 = _random_pair(seed=23)
-    reset_plan_stats()
     _pipeline(da, db).collect()
     _pipeline(da2, db2).collect()  # different source arrays → new key
     assert PLAN_STATS["plan_misses"] == 2
@@ -322,10 +320,9 @@ def test_plan_cache_distinct_sources_miss():
 
 
 def test_plan_cache_clear_forces_miss():
-    from repro.core import PLAN_STATS, clear_plan_cache, reset_plan_stats
+    from repro.core import PLAN_STATS, clear_plan_cache
 
     _, _, da, db = _random_pair(seed=24)
-    reset_plan_stats()
     _pipeline(da, db).collect()
     clear_plan_cache()
     _pipeline(da, db).collect()

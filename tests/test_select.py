@@ -397,3 +397,119 @@ def test_sorted_intersect_string_and_empty():
     k2, _, _ = sorted_intersect(np.asarray([], dtype=np.int64),
                                 np.asarray([1, 2]))
     assert len(k2) == 0
+
+# ---------------------------------------------------------------------------
+# dispatch-path coverage: the membership-gather fallback and the
+# plan_boxes >4-interval-run spill, on BOTH device layers (DISPATCH_STATS
+# pins which execution path actually ran; the autouse conftest fixture
+# zeroes the counters before each test)
+# ---------------------------------------------------------------------------
+
+WIDE_ROWS = [f"r{i:02d}" for i in range(20)]
+WIDE_COLS = [f"d{i:02d}" for i in range(20)]
+
+
+@pytest.fixture(scope="module")
+def wide_layers():
+    """20×20 keyspace — wide enough that an every-other-key selection
+    forms 10 interval runs (>4, the plan_boxes box budget)."""
+    rng = np.random.default_rng(11)
+    rows = np.asarray(WIDE_ROWS * 4)
+    cols = np.asarray([WIDE_COLS[(3 * i) % 20] for i in range(len(rows))])
+    vals = np.round(rng.uniform(0.5, 9.5, len(rows)), 2)
+    host = Assoc(rows, cols, vals, aggregate="sum")
+    dev = AssocTensor.from_triples(rows, cols, vals, aggregate="sum",
+                                   capacity=128)
+    mesh = jax.make_mesh((1,), ("data",))
+    dist = DistAssoc.from_triples(rows, cols, vals, mesh, aggregate="sum")
+    return host, dev, dist
+
+
+SCATTER_ROWS = Keys(WIDE_ROWS[::2])          # ranks 0,2,…,18 → 10 runs
+SCATTER_COLS = Keys(WIDE_COLS[::2])
+# 5 runs of 2 — interval-decomposable but over the 4-box budget
+SPILL_ROWS = Keys([k for i, k in enumerate(WIDE_ROWS) if i % 4 in (0, 1)])
+
+
+def _q(arr, ij):
+    got = arr[ij[0], ij[1]]
+    return got.to_dict() if isinstance(got, Assoc) else \
+        got.to_assoc().to_dict()
+
+
+def _dispatch_of(arr, ij):
+    from repro.core import DISPATCH_STATS, reset_all_stats
+    reset_all_stats()
+    got = _q(arr, ij)
+    fired = [k for k, v in DISPATCH_STATS.items() if v]
+    assert len(fired) == 1, DISPATCH_STATS
+    return fired[0], got
+
+
+@pytest.mark.parametrize("layer", ["device", "dist"])
+def test_scattered_both_axes_takes_gather(wide_layers, layer):
+    host, dev, dist = wide_layers
+    arr = dev if layer == "device" else dist
+    want = _q(host, (SCATTER_ROWS, SCATTER_COLS))
+    kind, got = _dispatch_of(arr, (SCATTER_ROWS, SCATTER_COLS))
+    assert kind == "gather"        # 10 runs/axis → no boxes fit → 2 masks
+    assert _dict_close(got, want), (got, want)
+
+
+@pytest.mark.parametrize("layer", ["device", "dist"])
+def test_scattered_one_axis_takes_hybrid(wide_layers, layer):
+    host, dev, dist = wide_layers
+    arr = dev if layer == "device" else dist
+    want = _q(host, (SCATTER_ROWS, All()))
+    kind, got = _dispatch_of(arr, (SCATTER_ROWS, All()))
+    assert kind == "hybrid"        # col axis one open box + row mask
+    assert _dict_close(got, want), (got, want)
+
+
+@pytest.mark.parametrize("layer", ["device", "dist"])
+def test_run_spill_over_box_budget_falls_back(wide_layers, layer):
+    # 5 interval runs is one over the 4-box budget: plan_boxes must spill
+    # the row axis to a membership gather instead of dropping a run
+    host, dev, dist = wide_layers
+    arr = dev if layer == "device" else dist
+    want = _q(host, (SPILL_ROWS, All()))
+    kind, got = _dispatch_of(arr, (SPILL_ROWS, All()))
+    assert kind == "hybrid"
+    assert _dict_close(got, want), (got, want)
+    # …and the same 5-run set on BOTH axes double-spills to plain gather
+    want2 = _q(host, (SPILL_ROWS, Keys([k for i, k in enumerate(WIDE_COLS)
+                                        if i % 4 in (0, 1)])))
+    kind2, got2 = _dispatch_of(arr, (SPILL_ROWS,
+                                     Keys([k for i, k in enumerate(WIDE_COLS)
+                                           if i % 4 in (0, 1)])))
+    assert kind2 == "gather"
+    assert _dict_close(got2, want2), (got2, want2)
+
+
+@pytest.mark.parametrize("layer", ["device", "dist"])
+def test_box_product_spill_keeps_boxable_axis(wide_layers, layer):
+    # 2 row runs × 3 col runs = 6 boxes > 4: the planner keeps the row
+    # boxes (≤4) and spills only the col axis to a gather (counted as
+    # "multirange" — >1 box; "hybrid" is reserved for the 1-box+gather
+    # shape)
+    host, dev, dist = wide_layers
+    two_row_runs = Keys(WIDE_ROWS[0:3] + WIDE_ROWS[8:11])
+    three_col_runs = Keys([WIDE_COLS[0], WIDE_COLS[5], WIDE_COLS[10]])
+    want = _q(host, (two_row_runs, three_col_runs))
+    arr = dev if layer == "device" else dist
+    kind, got = _dispatch_of(arr, (two_row_runs, three_col_runs))
+    assert kind == "multirange"
+    assert _dict_close(got, want), (got, want)
+
+
+@pytest.mark.parametrize("layer", ["device", "dist"])
+def test_few_runs_stay_on_multirange(wide_layers, layer):
+    # control: 2 runs × 2 runs = 4 boxes fits the budget → pure multirange
+    host, dev, dist = wide_layers
+    rows2 = Keys(WIDE_ROWS[0:2] + WIDE_ROWS[10:12])
+    cols2 = Keys([WIDE_COLS[0], WIDE_COLS[9]])
+    want = _q(host, (rows2, cols2))
+    arr = dev if layer == "device" else dist
+    kind, got = _dispatch_of(arr, (rows2, cols2))
+    assert kind == "multirange"
+    assert _dict_close(got, want), (got, want)
