@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--no-device]
                                             [--select-only] [--matmul-only]
-                                            [--pipeline-only] [--n-hi N]
+                                            [--pipeline-only] [--serve-only]
+                                            [--n-hi N]
 
 Prints ``name,us_per_call,derived`` CSV rows:
   * the paper's five benchmarks (Figs 3–7), host (paper-faithful) and
@@ -15,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * pipeline benches (eager chain vs planned lazy pipeline — fused
     select+matmul+reduce and n-ary ⊕ chains, clustered-sparse regime) —
     dumped to ``BENCH_pipeline.json``;
+  * serve benches (closed-loop concurrent clients against the in-process
+    query server: hot/cold/mixed payload mixes, p50 latency +
+    plan-cache hit rate) — dumped to ``BENCH_serve.json``
+    (``benchmarks.run_serve`` runs them standalone);
   * roofline summary rows derived from the dry-run artifacts (if
     dryrun_results.jsonl exists): per-cell dominant-term seconds.
 
@@ -38,10 +43,12 @@ def main() -> None:
     ap.add_argument("--select-only", action="store_true")
     ap.add_argument("--matmul-only", action="store_true")
     ap.add_argument("--pipeline-only", action="store_true")
+    ap.add_argument("--serve-only", action="store_true")
     ap.add_argument("--n-hi", type=int, default=None)
     ap.add_argument("--select-json", default="BENCH_select.json")
     ap.add_argument("--matmul-json", default="BENCH_matmul.json")
     ap.add_argument("--pipeline-json", default="BENCH_pipeline.json")
+    ap.add_argument("--serve-json", default="BENCH_serve.json")
     ap.add_argument("--results", default="dryrun_results.jsonl")
     args = ap.parse_args()
 
@@ -50,7 +57,7 @@ def main() -> None:
 
     n_hi = args.n_hi if args.n_hi is not None else (18 if args.full else 12)
     run_core = not (args.select_only or args.matmul_only
-                    or args.pipeline_only)
+                    or args.pipeline_only or args.serve_only)
     print("name,us_per_call,derived")
 
     def emit(rows):
@@ -84,6 +91,18 @@ def main() -> None:
         with open(args.pipeline_json, "w") as f:
             json.dump(pipeline_rows, f, indent=1)
     if args.pipeline_only:
+        return
+
+    if run_core or args.serve_only:
+        from benchmarks.run_serve import run_serve
+        serve_rows = run_serve(clients=4,
+                               requests=25 if args.full else 8,
+                               n=256 if args.full else 64,
+                               nnz=4096 if args.full else 512)
+        emit(serve_rows)
+        with open(args.serve_json, "w") as f:
+            json.dump(serve_rows, f, indent=1)
+    if args.serve_only:
         return
 
     select_rows = run_select(5, min(n_hi, 12), device=not args.no_device)

@@ -1,0 +1,183 @@
+"""Closed-loop serve benchmark: concurrent clients against an in-process
+query server.
+
+    PYTHONPATH=src python -m benchmarks.run_serve [--smoke]
+        [--clients 4] [--requests 25] [--json BENCH_serve.json]
+
+Boots a :class:`~repro.serve.server.D4MServer` on a loopback port with
+resident device-layer tables, then drives it with ``--clients``
+closed-loop client threads (each issues its next request as soon as the
+previous one returns) over three mixes:
+
+* ``hot``   — every client repeats ONE multi-node pipeline
+  ``(A[StartsWith, :] @ B).sum(axis=1)``; after the first plan, every
+  request is a plan-cache hit (the cross-request hash-consing the serve
+  layer exists to exploit);
+* ``cold``  — every request selects a fresh ``Keys`` window, so every
+  plan is a structural miss (planner + selector-compile on each request);
+* ``mixed`` — 4 hot : 1 cold interleave.
+
+Each mix reports client-observed p50/p99 latency, closed-loop throughput,
+and the server's plan-cache hit/miss counters from ``/stats``.  Rows land
+in ``BENCH_serve.json`` with ``seconds`` = p50 latency so
+``benchmarks/compare.py`` gates regressions on the serving fast path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def _payload_hot():
+    from repro.core import StartsWith
+    from repro.serve import TableRef, to_wire
+
+    A, B = TableRef("edges"), TableRef("feat")
+    return to_wire((A[StartsWith("r0"), :] @ B).sum(axis=1))
+
+
+def _payload_cold(i: int, n: int):
+    from repro.core import Keys
+    from repro.serve import TableRef, to_wire
+
+    width = len(str(n - 1))
+    lo = (i * 7) % (n - 8)
+    keys = [f"r{v:0{width}d}" for v in range(lo, lo + 4)]
+    A, B = TableRef("edges"), TableRef("feat")
+    return to_wire((A[Keys(keys), :] @ B).sum(axis=1))
+
+
+def _drive(url: str, mix: str, clients: int, requests: int,
+           n_keys: int) -> Dict:
+    """Run one closed-loop mix; returns latencies + wall time."""
+    from repro.serve import D4MClient
+
+    hot = _payload_hot()
+    lats: List[float] = []
+    lock = threading.Lock()
+    errs: List[Exception] = []
+    barrier = threading.Barrier(clients)
+
+    def loop(cid: int):
+        c = D4MClient(url, timeout=300)
+        mine = []
+        try:
+            barrier.wait(timeout=60)
+            for i in range(requests):
+                seq = cid * requests + i
+                if mix == "hot":
+                    p = hot
+                elif mix == "cold":
+                    p = _payload_cold(seq, n_keys)
+                else:                      # mixed: 4 hot : 1 cold
+                    p = hot if seq % 5 else _payload_cold(seq, n_keys)
+                t0 = time.perf_counter()
+                c.query(p)
+                mine.append(time.perf_counter() - t0)
+        except Exception as exc:           # surfaced to the caller
+            errs.append(exc)
+        with lock:
+            lats.extend(mine)
+
+    threads = [threading.Thread(target=loop, args=(i,))
+               for i in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    return {"lats": lats, "wall": wall}
+
+
+def run_serve(clients: int = 4, requests: int = 25, n: int = 256,
+              nnz: int = 4096, workers: int = 4,
+              max_batch: int = 8) -> List[Dict]:
+    from repro.serve import D4MClient, TableRegistry, start_server
+
+    registry = TableRegistry.from_specs([
+        {"name": "edges", "generator": "random", "n": n, "nnz": nnz,
+         "seed": 0, "layer": "device"},
+        {"name": "feat", "generator": "random", "n": n, "nnz": nnz,
+         "seed": 1, "layer": "device"},
+    ])
+    srv = start_server(registry, workers=workers, max_batch=max_batch)
+    admin = D4MClient(srv.url, timeout=300)
+    rows: List[Dict] = []
+    try:
+        # warm the trace caches once (first device dispatch compiles)
+        admin.query(_payload_hot())
+        admin.query(_payload_cold(0, n))
+        for mix in ("hot", "cold", "mixed"):
+            admin.reset_stats()
+            out = _drive(srv.url, mix, clients, requests, n)
+            st = admin.stats()
+            lats = np.asarray(sorted(out["lats"]))
+            n_req = len(lats)
+            hits = st["plan"]["plan_hits"]
+            misses = st["plan"]["plan_misses"]
+            rows.append({
+                "bench": "serve", "impl": mix, "n": clients,
+                "seconds": float(np.percentile(lats, 50)),
+                "nnz": n_req,
+                "p50_s": float(np.percentile(lats, 50)),
+                "p99_s": float(np.percentile(lats, 99)),
+                "throughput_rps": n_req / out["wall"],
+                "plan_hits": hits, "plan_misses": misses,
+                "plan_hit_rate": hits / max(hits + misses, 1),
+                "batch_mean": st["server"].get("batch_mean", 1.0),
+                "requests": requests, "workers": workers,
+            })
+    finally:
+        srv.close()
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tables + few requests (CI gate)")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=25)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--nnz", type=int, default=4096)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--json", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.requests = min(args.requests, 6)
+        args.n = min(args.n, 64)
+        args.nnz = min(args.nnz, 512)
+
+    rows = run_serve(clients=args.clients, requests=args.requests,
+                     n=args.n, nnz=args.nnz, workers=args.workers)
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = f"{r['bench']}[{r['impl']},n={r['n']}]"
+        derived = (f"p99_us={r['p99_s'] * 1e6:.0f};"
+                   f"rps={r['throughput_rps']:.1f};"
+                   f"plan_hit_rate={r['plan_hit_rate']:.2f};"
+                   f"batch_mean={r['batch_mean']:.2f}")
+        print(f"{name},{r['seconds'] * 1e6:.1f},{derived}")
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    hot = next(r for r in rows if r["impl"] == "hot")
+    if hot["plan_hits"] <= hot["plan_misses"]:
+        print(f"FAIL: hot mix plan_hits={hot['plan_hits']} <= "
+              f"plan_misses={hot['plan_misses']} — cross-request plan "
+              f"caching is not engaging")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

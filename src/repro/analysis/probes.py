@@ -339,6 +339,41 @@ def _probe_dist_col_degree():
                                   _sds((_NSHARDS, _CAP), jnp.int32))
 
 
+# --------------------------------------------------------------------------
+# Serve path: the server's execution entry point dispatches the same
+# compiled programs as the eager layers, so its contract is checked over
+# the shard-local programs a query mix reaches — selection (range +
+# gather dispatch kinds), ewise ⊕, and the replicated-B matmul of a hot
+# `A[sel, :] @ B` query.  (Fused matmul-*reduce* carries its one
+# legitimate all-reduce and is budgeted under DistAssoc.matmul_reduce;
+# the serve contract asserts the serve layer itself ADDS no collective.)
+# --------------------------------------------------------------------------
+
+@probe_for("serve.execute")
+def _probe_serve_execute():
+    from repro.core.dist_assoc import (_ewise_prog, _matmul_prog,
+                                       _select_prog)
+
+    mesh = _abstract_mesh()
+    a = _coo_dict_sds()
+    for label, (rg, cg, k) in [("select-range", (False, False, 1)),
+                               ("select-gather", (True, True, 1))]:
+        prog = _select_prog(mesh, rg, cg)
+        yield label, lower_hlo(prog, a, *_sel_args_sds(rg, cg, k))
+    yield "ewise-add", lower_hlo(_ewise_prog(mesh, _plus_times(), "add"),
+                                 a, a)
+    a_mm = {k: v for k, v in a.items() if k != "nnz"}
+    prog = _matmul_prog(mesh, _plus_times(), 256, 256)
+    yield "matmul", lower_hlo(prog, a_mm, *_b_triples_sds())
+
+    def run():
+        _select_prog(mesh, False, False)
+
+    # repeated identical serve queries must not retrace the dispatch
+    yield RetraceAudit(label="serve-repeat-query", first=run, again=run,
+                       size=lambda: _select_prog.cache_info().currsize)
+
+
 @probe_for("DistAssoc.matmul_dense_vec")
 def _probe_dist_matvec():
     import jax.numpy as jnp

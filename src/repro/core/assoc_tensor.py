@@ -24,6 +24,7 @@ exception is the eager-only in-place ``__setitem__`` (see its docstring).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from functools import partial
 from typing import Optional, Tuple
 
@@ -85,6 +86,14 @@ def coo_axis_mask_keep(idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
 # scattered).  Mirrors select.CACHE_STATS; tests and benchmarks read these
 # to pin the fast path.
 DISPATCH_STATS = {"range": 0, "multirange": 0, "hybrid": 0, "gather": 0}
+
+# Dict += is a read-modify-write: serve workers bump these concurrently.
+_DISPATCH_LOCK = threading.Lock()
+
+
+def _bump_dispatch(key: str) -> None:
+    with _DISPATCH_LOCK:
+        DISPATCH_STATS[key] += 1
 
 
 def coo_compact(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
@@ -482,14 +491,14 @@ class AssocTensor:
         nc = max(len(self.col_space), 1)
         boxes, row_gather, col_gather = plan_boxes(rc, cc, nr, nc)
         if row_gather and col_gather:
-            DISPATCH_STATS["gather"] += 1
+            _bump_dispatch("gather")
             return self._mask_keep(*self._device_masks(rc, cc))
         if len(boxes) > 1:
-            DISPATCH_STATS["multirange"] += 1
+            _bump_dispatch("multirange")
         elif row_gather or col_gather:
-            DISPATCH_STATS["hybrid"] += 1
+            _bump_dispatch("hybrid")
         else:
-            DISPATCH_STATS["range"] += 1
+            _bump_dispatch("range")
         keep = self._range_keep((int(boxes[0][0]), int(boxes[0][1])),
                                 (int(boxes[0][2]), int(boxes[0][3])))
         for b in boxes[1:]:

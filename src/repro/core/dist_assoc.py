@@ -43,8 +43,9 @@ from jax.experimental.shard_map import shard_map
 
 from repro.analysis.contracts import contract
 
-from .assoc_tensor import (AssocTensor, DISPATCH_STATS, coo_axis_mask_keep,
-                           coo_compact, coo_mask_keep, coo_range_keep)
+from .assoc_tensor import (AssocTensor, DISPATCH_STATS, _bump_dispatch,
+                           coo_axis_mask_keep, coo_compact, coo_mask_keep,
+                           coo_range_keep)
 from .coo import SENT, dedup_sorted_coo, expand_join_coo
 from .expr import EwiseAdd, EwiseMul, MatMul, Select, Source
 from .keyspace import KeySpace
@@ -461,13 +462,13 @@ class DistAssoc:
         cmask = (jnp.asarray(np.pad(cc.mask(), (0, nc - cc.n)))
                  if col_gather else jnp.zeros((1,), bool))
         if row_gather and col_gather:
-            DISPATCH_STATS["gather"] += 1
+            _bump_dispatch("gather")
         elif len(boxes) > 1:
-            DISPATCH_STATS["multirange"] += 1
+            _bump_dispatch("multirange")
         elif row_gather or col_gather:
-            DISPATCH_STATS["hybrid"] += 1
+            _bump_dispatch("hybrid")
         else:
-            DISPATCH_STATS["range"] += 1
+            _bump_dispatch("range")
         return row_gather, col_gather, bounds, rmask, cmask
 
     @contract(collectives=0,

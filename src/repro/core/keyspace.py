@@ -14,6 +14,7 @@ on host to a rank interval, executed on device as an integer mask.
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Optional, Tuple, Union
 
@@ -32,11 +33,16 @@ _UNION_CACHE_CAP = 256
 
 UNION_STATS = {"hits": 0, "misses": 0}
 
+# Guards LRU mutation + counter bumps under concurrent union() calls
+# (serve workers union keyspaces from many threads).
+_UNION_LOCK = threading.RLock()
+
 
 def clear_union_cache() -> None:
-    _UNION_CACHE.clear()
-    UNION_STATS["hits"] = 0
-    UNION_STATS["misses"] = 0
+    with _UNION_LOCK:
+        _UNION_CACHE.clear()
+        UNION_STATS["hits"] = 0
+        UNION_STATS["misses"] = 0
 
 
 class KeySpace:
@@ -145,12 +151,13 @@ class KeySpace:
         if self.is_string != other.is_string:
             raise TypeError("cannot merge string and numeric keyspaces")
         cache_key = (self._digest, other._digest)
-        hit = _UNION_CACHE.get(cache_key)
-        if hit is not None:
-            UNION_STATS["hits"] += 1
-            _UNION_CACHE.move_to_end(cache_key)
-            return hit
-        UNION_STATS["misses"] += 1
+        with _UNION_LOCK:
+            hit = _UNION_CACHE.get(cache_key)
+            if hit is not None:
+                UNION_STATS["hits"] += 1
+                _UNION_CACHE.move_to_end(cache_key)
+                return hit
+        # merge outside the lock (pure; a cold-key race just merges twice)
         merged = KeySpace(np.concatenate([self.keys, other.keys]))
         self_map = np.searchsorted(merged.keys, self.keys).astype(np.int32)
         other_map = np.searchsorted(merged.keys, other.keys).astype(np.int32)
@@ -158,9 +165,12 @@ class KeySpace:
         # in-place tweak cannot poison later unions of the same pair
         self_map.setflags(write=False)
         other_map.setflags(write=False)
-        while len(_UNION_CACHE) >= _UNION_CACHE_CAP:
-            _UNION_CACHE.popitem(last=False)
-        _UNION_CACHE[cache_key] = (merged, self_map, other_map)
+        with _UNION_LOCK:
+            UNION_STATS["misses"] += 1
+            if cache_key not in _UNION_CACHE:
+                while len(_UNION_CACHE) >= _UNION_CACHE_CAP:
+                    _UNION_CACHE.popitem(last=False)
+                _UNION_CACHE[cache_key] = (merged, self_map, other_map)
         return merged, self_map, other_map
 
     @staticmethod

@@ -45,6 +45,7 @@ helpers (``scatter_combine`` / ``add_np``) in one place.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import List, Optional, Tuple
 
@@ -79,13 +80,28 @@ PLAN_STATS = {
 }
 
 
+# One lock guards the plan cache's LRU mutation AND the PLAN_STATS bumps:
+# a concurrent server collects from many worker threads, and OrderedDict
+# move_to_end/popitem under concurrent mutation corrupts the dict.  RLock
+# (not Lock) because reset_plan_stats() -> clear_plan_cache() re-enters.
+_PLAN_LOCK = threading.RLock()
+
+
+def _bump(key: str, n: int = 1) -> None:
+    """Locked PLAN_STATS increment (dict ``+=`` is a read-modify-write —
+    concurrent collects would silently lose counts)."""
+    with _PLAN_LOCK:
+        PLAN_STATS[key] += n
+
+
 def reset_plan_stats() -> None:
     """Zero the counters AND cold-start the planner (plan cache cleared):
     a fresh measurement window should see its own misses and rewrites, not
     inherit plans memoized by earlier pipelines."""
-    for k in PLAN_STATS:
-        PLAN_STATS[k] = 0
-    clear_plan_cache()
+    with _PLAN_LOCK:
+        for k in PLAN_STATS:
+            PLAN_STATS[k] = 0
+        clear_plan_cache()
 
 
 # Cross-collect plan cache: optimized graph memoized by the hash-consed
@@ -102,7 +118,8 @@ _PLAN_CACHE_CAP = 256
 def clear_plan_cache() -> None:
     """Invalidation hook: drop every memoized optimized plan (and with it
     the pinned references to their source arrays/selectors)."""
-    _PLAN_CACHE.clear()
+    with _PLAN_LOCK:
+        _PLAN_CACHE.clear()
 
 
 def _layer(x) -> str:
@@ -150,21 +167,21 @@ def _push(node: LazyExpr) -> LazyExpr:
         rs, cs = node.row_sel, node.col_sel
         if isinstance(child, Select) and all(
                 _pushable(s) for s in (rs, cs, child.row_sel, child.col_sel)):
-            PLAN_STATS["pushdown"] += 1
+            _bump("pushdown")
             return _push(Select(child.child,
                                 as_selector(child.row_sel) & as_selector(rs),
                                 as_selector(child.col_sel) & as_selector(cs)))
         if _pushable(rs) and _pushable(cs):
             if isinstance(child, Transpose):
-                PLAN_STATS["pushdown"] += 1
+                _bump("pushdown")
                 return Transpose(_push(Select(child.child, cs, rs)))
             if isinstance(child, (EwiseAdd, EwiseMul)):
-                PLAN_STATS["pushdown"] += 1
+                _bump("pushdown")
                 return type(child)(_push(Select(child.a, rs, cs)),
                                    _push(Select(child.b, rs, cs)),
                                    semiring=child.semiring)
             if isinstance(child, MatMul):
-                PLAN_STATS["pushdown"] += 1
+                _bump("pushdown")
                 return MatMul(_push(Select(child.a, rs, All())),
                               _push(Select(child.b, All(), cs)),
                               semiring=child.semiring)
@@ -240,7 +257,7 @@ def _fuse(node: LazyExpr) -> LazyExpr:
         child = _fuse(node.child)
         if (isinstance(child, MatMul) and node.axis is not None
                 and child.semiring.name == node.semiring.name):
-            PLAN_STATS["fused_matmul_reduce"] += 1
+            _bump("fused_matmul_reduce")
             return _MatMulReduce(child.a, child.b, node.axis, child.semiring)
         if (isinstance(child, (EwiseAdd, _EwiseAddN))
                 and node.axis is not None
@@ -251,7 +268,7 @@ def _fuse(node: LazyExpr) -> LazyExpr:
             # registered semiring, so the chain's ⊕ and the reduction
             # combine are the same associative-commutative op and the
             # per-entry fold order cannot matter.
-            PLAN_STATS["reduce_through_add"] += 1
+            _bump("reduce_through_add")
             terms = (child.terms if isinstance(child, _EwiseAddN)
                      else [child.a, child.b])
             return _ReduceAddN(terms, node.axis, node.semiring,
@@ -260,7 +277,7 @@ def _fuse(node: LazyExpr) -> LazyExpr:
     if isinstance(node, EwiseAdd):
         terms = _flatten_add(node, node.semiring)
         if len(terms) >= 3:
-            PLAN_STATS["ewise_fused"] += 1
+            _bump("ewise_fused")
             return _EwiseAddN([_fuse(t) for t in terms], node.semiring)
         return EwiseAdd(_fuse(node.a), _fuse(node.b), semiring=node.semiring)
     if isinstance(node, (EwiseMul, MatMul)):
@@ -312,16 +329,22 @@ def execute(node: LazyExpr):
     if fast is not _MISS:
         return fast
     key = node.key()
-    plan = _PLAN_CACHE.get(key)
+    with _PLAN_LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            PLAN_STATS["plan_hits"] += 1
+            _PLAN_CACHE.move_to_end(key)
     if plan is None:
-        PLAN_STATS["plan_misses"] += 1
+        # optimize() outside the lock: rewrites are pure and idempotent, so
+        # two threads racing the same cold key just do the walk twice and
+        # one insert wins — cheaper than serializing every cold plan.
         plan = optimize(node)
-        _PLAN_CACHE[key] = plan
-        if len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
-            _PLAN_CACHE.popitem(last=False)
-    else:
-        PLAN_STATS["plan_hits"] += 1
-        _PLAN_CACHE.move_to_end(key)
+        with _PLAN_LOCK:
+            PLAN_STATS["plan_misses"] += 1
+            if key not in _PLAN_CACHE:
+                _PLAN_CACHE[key] = plan
+                if len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
+                    _PLAN_CACHE.popitem(last=False)
     return _eval(plan, {})
 
 
@@ -330,9 +353,9 @@ def _eval(node: LazyExpr, memo: dict):
         return node.array
     k = node.key()
     if k in memo:
-        PLAN_STATS["hits"] += 1
+        _bump("hits")
         return memo[k]
-    PLAN_STATS["misses"] += 1
+    _bump("misses")
     out = _eval_inner(node, memo)
     memo[k] = out
     return out
@@ -423,7 +446,7 @@ def _eval_matmul(a_node, b_node, sr, axis, memo):
         if axis is None:
             return a.matmul(b, sr)
         return a.matmul_reduce(b, axis, sr)
-    PLAN_STATS["fused_select_matmul"] += 1
+    _bump("fused_select_matmul")
     layer = _layer(a)
     if layer == "host":
         return host_matmul(a, asels, b, bsels, sr, axis)

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import hashlib
 import re
+import threading
 from collections import OrderedDict
 from typing import Callable, Optional, Sequence, Tuple, Union
 
@@ -600,17 +601,24 @@ _CACHE_CAP = 4096
 
 CACHE_STATS = {"hits": 0, "misses": 0}
 
+# Guards the LRU mutation + counter bumps: the serve engine compiles
+# selectors from many worker threads, and concurrent move_to_end/popitem
+# corrupts the OrderedDict.
+_COMPILE_LOCK = threading.RLock()
+
 
 def clear_compile_cache() -> None:
     """Drop all cached compilations and zero the counters (mirrors
     ``keyspace.clear_union_cache``)."""
-    _COMPILE_CACHE.clear()
-    reset_cache_stats()
+    with _COMPILE_LOCK:
+        _COMPILE_CACHE.clear()
+        reset_cache_stats()
 
 
 def reset_cache_stats() -> None:
-    CACHE_STATS["hits"] = 0
-    CACHE_STATS["misses"] = 0
+    with _COMPILE_LOCK:
+        CACHE_STATS["hits"] = 0
+        CACHE_STATS["misses"] = 0
 
 
 def compile_selector(sel, space: KeySpace) -> Compiled:
@@ -620,14 +628,19 @@ def compile_selector(sel, space: KeySpace) -> Compiled:
         key = (space.digest, sel.cache_key())
     except TypeError:        # unhashable component: compile uncached
         return sel._compile(space)
-    hit = _COMPILE_CACHE.get(key)
-    if hit is not None:
-        CACHE_STATS["hits"] += 1
-        _COMPILE_CACHE.move_to_end(key)      # LRU: refresh on hit
-        return hit
-    CACHE_STATS["misses"] += 1
+    with _COMPILE_LOCK:
+        hit = _COMPILE_CACHE.get(key)
+        if hit is not None:
+            CACHE_STATS["hits"] += 1
+            _COMPILE_CACHE.move_to_end(key)  # LRU: refresh on hit
+            return hit
+    # _compile outside the lock: it is pure, so racing threads at worst
+    # compile the same key twice and the second insert is a no-op.
     comp = sel._compile(space)
-    while len(_COMPILE_CACHE) >= _CACHE_CAP:
-        _COMPILE_CACHE.popitem(last=False)   # evict LRU, no clear-all cliff
-    _COMPILE_CACHE[key] = comp
+    with _COMPILE_LOCK:
+        CACHE_STATS["misses"] += 1
+        if key not in _COMPILE_CACHE:
+            while len(_COMPILE_CACHE) >= _CACHE_CAP:
+                _COMPILE_CACHE.popitem(last=False)   # evict LRU, no cliff
+            _COMPILE_CACHE[key] = comp
     return comp

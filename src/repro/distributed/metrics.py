@@ -10,47 +10,99 @@ Merging across hosts, restarts or duplicated retries is the semiring ⊕:
 That uniform merge semantics is what lets the fault-tolerance layer replay
 work without bookkeeping — D4M's aggregation-on-collision doing systems
 work (§4 of DESIGN.md).
+
+``log()`` is **buffered**: updates append to a pending triple buffer and
+are folded into the table in one batched ``Assoc`` construction + at most
+one ``combine`` on the next read (``flush()``).  The old implementation
+rebuilt the whole table per ``log`` call — O(n²) over a run; a serve
+worker logging per request made that quadratic cost per *request*.  The ⊕
+semantics are unchanged: ``canonicalize_np`` merges duplicate (step, name)
+runs left-to-right in stable input order, so order-sensitive aggregates
+(``last``) see updates exactly as the sequential implementation did.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import threading
+from typing import Dict, List
 
 import numpy as np
 
 from repro.core import Assoc
 
+_COMBINE = {"last": lambda a, b: b, "max": max, "min": min,
+            "sum": lambda a, b: a + b}
+
 
 class MetricsStore:
     def __init__(self, aggregate="last"):
-        self.table = Assoc()
+        self._table = Assoc()
         self.aggregate = aggregate
+        self._pending_steps: List[float] = []
+        self._pending_names: List[str] = []
+        self._pending_vals: List[float] = []
+        self._lock = threading.RLock()
+        # incremented once per Assoc.combine call — the regression tests
+        # pin "one combine per flush, zero per log"
+        self.combine_calls = 0
 
+    # -- writes (cheap: append-only) ----------------------------------------
     def log(self, step: int, values: Dict[str, float]):
-        names = list(values)
-        upd = Assoc([float(step)] * len(names), names,
-                    [float(values[n]) for n in names])
-        self.table = self.table.combine(upd, {"last": lambda a, b: b,
-                                              "max": max, "min": min,
-                                              "sum": lambda a, b: a + b,
-                                              }[self.aggregate]) \
-            if self.table.nnz() else upd
+        with self._lock:
+            for n in values:
+                self._pending_steps.append(float(step))
+                self._pending_names.append(n)
+                self._pending_vals.append(float(values[n]))
 
+    # -- the batched fold ---------------------------------------------------
+    def flush(self) -> None:
+        """Fold every pending update into the table: one batched Assoc
+        construction (intra-batch collisions resolved by ⊕ in log order)
+        plus at most one ``combine`` against the existing table."""
+        with self._lock:
+            if not self._pending_steps:
+                return
+            upd = Assoc(self._pending_steps, self._pending_names,
+                        self._pending_vals, aggregate=self.aggregate)
+            self._pending_steps = []
+            self._pending_names = []
+            self._pending_vals = []
+            if self._table.nnz():
+                self._table = self._table.combine(
+                    upd, _COMBINE[self.aggregate])
+                self.combine_calls += 1
+            else:
+                self._table = upd
+
+    @property
+    def table(self) -> Assoc:
+        """The materialized metrics table (flushes pending updates)."""
+        self.flush()
+        return self._table
+
+    @table.setter
+    def table(self, value: Assoc) -> None:
+        with self._lock:
+            self._table = value
+            self._pending_steps = []
+            self._pending_names = []
+            self._pending_vals = []
+
+    # -- reads --------------------------------------------------------------
     def merge(self, other: "MetricsStore") -> "MetricsStore":
         """Cross-host / cross-restart merge — ⊕ on collisions."""
         out = MetricsStore(self.aggregate)
-        if self.table.nnz() and other.table.nnz():
-            out.table = self.table.combine(
-                other.table, {"last": lambda a, b: b, "max": max,
-                              "min": min, "sum": lambda a, b: a + b
-                              }[self.aggregate])
+        mine, theirs = self.table, other.table
+        if mine.nnz() and theirs.nnz():
+            out.table = mine.combine(theirs, _COMBINE[self.aggregate])
         else:
-            out.table = (self.table if self.table.nnz() else other.table).copy()
+            out.table = (mine if mine.nnz() else theirs).copy()
         return out
 
     def series(self, name: str):
-        if self.table.nnz() == 0:
+        table = self.table
+        if table.nnz() == 0:
             return np.zeros((0,)), np.zeros((0,))
-        col = self.table[:, name]
+        col = table[:, name]
         r, _, v = col.triples()
         order = np.argsort(r.astype(float))
         return r.astype(float)[order], v[order]

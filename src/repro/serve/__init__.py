@@ -1,0 +1,37 @@
+"""repro.serve — D4M-as-a-service: the resident sharded query server.
+
+The D4M line's endgame was always a database engine serving queries over
+resident associative arrays (D4M: Bringing Associative Arrays to Database
+Engines, arXiv:1508.07371; D4M 3.0, arXiv:1702.03253).  This package is
+that layer for the reproduction: a long-lived process holds named
+``Assoc``/``AssocTensor``/``DistAssoc`` tables resident (device tables
+stay pinned on the mesh), clients ship *expression graphs* — not data —
+over a JSON wire format, and the server plans each graph through the
+existing ``plan.optimize()`` so structurally repeated queries hit the
+cross-collect ``_PLAN_CACHE`` across requests and clients.
+
+* :mod:`~repro.serve.wire`     — LazyExpr/Selector ⇄ JSON wire format
+  (``TableRef`` leaves name resident tables; semirings by registry name).
+* :mod:`~repro.serve.registry` — named resident tables, loaded once at
+  startup from triples files or generator configs.
+* :mod:`~repro.serve.engine`   — worker pool + admission/batching queue:
+  compatible queued queries (same table set / same layer) are admitted as
+  a batch so the mesh stays busy; per-request timing; per-worker
+  ``MetricsStore`` telemetry ⊕-merged at read time.
+* :mod:`~repro.serve.server`   — stdlib ``ThreadingHTTPServer`` JSON
+  transport (``/query``, ``/tables``, ``/stats``, ``/health``) + CLI.
+* :mod:`~repro.serve.client`   — thin stdlib HTTP client.
+"""
+from .wire import (TableRef, WireError, from_wire, to_wire, sel_from_wire,
+                   sel_to_wire, register_predicate)
+from .registry import TableRegistry
+from .engine import Engine, serve_execute
+from .server import D4MServer, start_server
+from .client import D4MClient, ServerError
+
+__all__ = [
+    "TableRef", "WireError", "from_wire", "to_wire", "sel_from_wire",
+    "sel_to_wire", "register_predicate", "TableRegistry", "Engine",
+    "serve_execute", "D4MServer", "start_server", "D4MClient",
+    "ServerError",
+]

@@ -1,0 +1,338 @@
+"""Query engine: worker pool, admission/batching queue, live metrics.
+
+The execution model is the D4M 3.0 server loop grown onto the lazy
+planner:
+
+* **admission batching** — queued queries are *compatible* when they
+  touch the same table set on the same layer(s).  A worker admitting work
+  takes the oldest request plus up to ``max_batch - 1`` compatible queued
+  requests and executes them back-to-back, so a burst of same-shape
+  traffic runs against warm trace caches and a warm plan cache instead of
+  interleaving with unrelated shapes (``DISPATCH``/jit caches are keyed
+  by structure; interleaving thrashes them).  Batch sizes are recorded —
+  ``/stats`` exposes the distribution.
+* **cross-request plan caching** — every query executes through
+  ``LazyExpr.collect()``, i.e. ``plan.optimize()`` memoized by the
+  graph's structural key in ``_PLAN_CACHE``.  Resident tables make the
+  ``Source`` identity stable, and the wire format preserves selector
+  structure, so two clients sending the same query — or one client
+  repeating it — plan once (``PLAN_STATS['plan_hits']`` counts this).
+* **⊕-merged telemetry** — each worker logs into its own
+  :class:`~repro.distributed.metrics.MetricsStore` (no cross-thread
+  contention); a ``/stats`` read ⊕-merges the per-worker stores on
+  demand — the D4M aggregation-on-collision semantics doing the
+  cross-thread reduction that a conventional metrics library needs locks
+  for.
+
+The execution entry point :func:`serve_execute` carries a ``@contract``:
+shard-local serve queries inherit the zero-collective / never-densify
+budgets of the ops they dispatch, and ``tools/d4mcheck`` sweeps the serve
+path like any other entry point.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.analysis.contracts import contract
+from repro.distributed.metrics import MetricsStore
+
+from .registry import TableRegistry
+from .wire import WireError, from_wire, table_names
+
+__all__ = ["Engine", "QueryError", "serve_execute", "format_result"]
+
+
+class QueryError(Exception):
+    """Execution-time failure of a structurally valid query (wraps the
+    underlying exception with a structured code for the transport)."""
+
+    def __init__(self, code: str, message: str):
+        self.code = code
+        super().__init__(message)
+
+    def to_dict(self) -> dict:
+        return {"code": self.code, "message": str(self)}
+
+
+@contract(collectives=0, densify=False, name="serve.execute",
+          note="shard-local serve queries: zero collectives, no "
+               "densification — budgets inherited from the dispatched ops")
+def serve_execute(expr):
+    """THE server execution entry point: optimize (plan-cached) +
+    execute one decoded expression graph."""
+    return expr.collect()
+
+
+def format_result(res, limit: Optional[int] = None) -> Dict[str, Any]:
+    """Layer-native result → JSON-safe payload.
+
+    Arrays return COO triples (gathered to host — the result of a query
+    is small by design; resident operands never move), reductions return
+    dense vectors or scalars.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import Assoc, AssocTensor, DistAssoc
+
+    if isinstance(res, (AssocTensor, DistAssoc)):
+        res = res.to_assoc()
+    if isinstance(res, Assoc) or res is None:
+        if res is None:
+            res = Assoc()
+        r, c, v = res.triples()
+        n = len(r)
+        truncated = limit is not None and n > limit
+        if truncated:
+            r, c, v = r[:limit], c[:limit], v[:limit]
+        return {"kind": "triples", "nnz": n,
+                "rows": [x.item() if hasattr(x, "item") else x
+                         for x in r.tolist()],
+                "cols": [x.item() if hasattr(x, "item") else x
+                         for x in c.tolist()],
+                "vals": v.tolist(), "truncated": truncated}
+    if isinstance(res, (jnp.ndarray, np.ndarray)):
+        arr = np.asarray(res)
+        if arr.ndim == 0:
+            return {"kind": "scalar", "val": float(arr)}
+        return {"kind": "vector", "n": int(arr.shape[0]),
+                "vals": [float(x) for x in arr]}
+    if isinstance(res, (float, int, np.floating, np.integer)):
+        return {"kind": "scalar", "val": float(res)}
+    raise QueryError("bad_result",
+                     f"unformattable result type {type(res).__name__}")
+
+
+class _Request:
+    """One admitted query: decoded expression + its future-ish result."""
+
+    __slots__ = ("payload", "expr", "options", "batch_key", "t_enqueue",
+                 "event", "result", "error", "timing", "batch_size")
+
+    def __init__(self, payload, expr, options, batch_key):
+        self.payload = payload
+        self.expr = expr
+        self.options = options
+        self.batch_key = batch_key
+        self.t_enqueue = time.perf_counter()
+        self.event = threading.Event()
+        self.result: Optional[dict] = None
+        self.error: Optional[Exception] = None
+        self.timing: Dict[str, float] = {}
+        self.batch_size = 1
+
+    def wait(self, timeout: Optional[float] = None) -> dict:
+        if not self.event.wait(timeout):
+            raise QueryError("timeout", "query did not complete in time")
+        if self.error is not None:
+            raise self.error
+        assert self.result is not None
+        return self.result
+
+
+class Engine:
+    """Worker pool + admission queue over a :class:`TableRegistry`."""
+
+    def __init__(self, registry: TableRegistry, *, workers: int = 4,
+                 max_batch: int = 8, batch_window_s: float = 0.0,
+                 default_limit: Optional[int] = 100_000):
+        self.registry = registry
+        self.workers = max(1, int(workers))
+        self.max_batch = max(1, int(max_batch))
+        self.batch_window_s = float(batch_window_s)
+        self.default_limit = default_limit
+        self._queue: deque = deque()
+        self._cv = threading.Condition()
+        self._threads: List[threading.Thread] = []
+        self._stop = False
+        self._started = False
+        # per-worker stores: single-writer each, ⊕-merged on /stats reads
+        self._stores = [MetricsStore("sum") for _ in range(self.workers)]
+        self._latencies: deque = deque(maxlen=2048)   # recent, for p50/p99
+        self._lat_lock = threading.Lock()
+        self.t_start = time.time()
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "Engine":
+        if self._started:
+            return self
+        self._started = True
+        self._stop = False
+        for i in range(self.workers):
+            t = threading.Thread(target=self._worker_loop, args=(i,),
+                                 name=f"d4m-serve-worker-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads.clear()
+        self._started = False
+
+    def __enter__(self) -> "Engine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- admission ----------------------------------------------------------
+    def _admission_key(self, payload) -> tuple:
+        """Compatibility key: (table names, their layers).  Same key ⇒
+        same resident operands and same execution layer ⇒ batchable."""
+        tables = table_names(payload)
+        if not tables:
+            raise WireError("bad_payload",
+                            "query references no tables")
+        layers = tuple(self.registry.layer_of(n) for n in tables)
+        return (tables, layers)
+
+    def submit(self, payload, options: Optional[dict] = None) -> _Request:
+        """Validate + enqueue one wire payload; returns the request handle
+        (``.wait()`` for the result).  Malformed payloads raise
+        :class:`WireError` synchronously — they never enter the queue."""
+        if not self._started:
+            raise RuntimeError("engine not started")
+        expr = from_wire(payload, resolve=self.registry.resolve)
+        key = self._admission_key(payload)
+        req = _Request(payload, expr, dict(options or {}), key)
+        with self._cv:
+            self._queue.append(req)
+            self._cv.notify()
+        return req
+
+    def query(self, payload, options: Optional[dict] = None,
+              timeout: Optional[float] = 120.0) -> dict:
+        """Synchronous submit + wait (the in-process client path)."""
+        return self.submit(payload, options).wait(timeout)
+
+    # -- the worker ---------------------------------------------------------
+    def _take_batch(self) -> List[_Request]:
+        """Admit the oldest request + up to ``max_batch - 1`` compatible
+        queued requests (same admission key), preserving queue order for
+        the rest."""
+        with self._cv:
+            while not self._queue and not self._stop:
+                self._cv.wait(timeout=0.1)
+            if self._stop and not self._queue:
+                return []
+            head = self._queue.popleft()
+            batch = [head]
+            if self.max_batch > 1:
+                keep = deque()
+                while self._queue and len(batch) < self.max_batch:
+                    r = self._queue.popleft()
+                    if r.batch_key == head.batch_key:
+                        batch.append(r)
+                    else:
+                        keep.append(r)
+                self._queue.extendleft(reversed(keep))
+        if (len(batch) < self.max_batch and self.batch_window_s > 0):
+            # optional accumulation window: let same-shape stragglers join
+            time.sleep(self.batch_window_s)
+            with self._cv:
+                keep = deque()
+                while self._queue and len(batch) < self.max_batch:
+                    r = self._queue.popleft()
+                    if r.batch_key == head.batch_key:
+                        batch.append(r)
+                    else:
+                        keep.append(r)
+                self._queue.extendleft(reversed(keep))
+        return batch
+
+    def _worker_loop(self, idx: int) -> None:
+        while True:
+            batch = self._take_batch()
+            if not batch:
+                if self._stop:
+                    return
+                continue
+            # re-read per iteration: reset_stats() swaps the store list
+            store = self._stores[idx]
+            store.log(0, {"batches": 1.0, "batch_n": float(len(batch))})
+            for req in batch:
+                req.batch_size = len(batch)
+                t0 = time.perf_counter()
+                try:
+                    res = serve_execute(req.expr)
+                    limit = req.options.get("limit", self.default_limit)
+                    body = format_result(res, limit=limit)
+                except (WireError, QueryError) as exc:
+                    req.error = exc
+                except Exception as exc:   # execution-time type errors etc.
+                    req.error = QueryError("execution_error",
+                                           f"{type(exc).__name__}: {exc}")
+                else:
+                    t1 = time.perf_counter()
+                    req.timing = {
+                        "queue_s": round(t0 - req.t_enqueue, 6),
+                        "exec_s": round(t1 - t0, 6),
+                        "total_s": round(t1 - req.t_enqueue, 6),
+                    }
+                    req.result = {"result": body, "timing": req.timing,
+                                  "batch": req.batch_size}
+                t_total = time.perf_counter() - req.t_enqueue
+                store.log(0, {"requests": 1.0,
+                              "errors": 1.0 if req.error else 0.0,
+                              "latency_s": t_total})
+                with self._lat_lock:
+                    self._latencies.append(t_total)
+                req.event.set()
+
+    # -- telemetry ----------------------------------------------------------
+    def metrics(self) -> MetricsStore:
+        """⊕-merge of every worker's store (one ``combine`` per worker)."""
+        merged = MetricsStore("sum")
+        for s in self._stores:
+            merged = merged.merge(s)
+        return merged
+
+    def stats(self) -> Dict[str, Any]:
+        """The /stats body: server counters + core telemetry dicts."""
+        from repro.core import (CACHE_STATS, DISPATCH_STATS, PLAN_STATS,
+                                UNION_STATS)
+
+        merged = self.metrics()
+        server: Dict[str, float] = {}
+        if merged.table.nnz():
+            _, names, vals = merged.table.triples()
+            for n, v in zip(names.tolist(), vals.tolist()):
+                server[str(n)] = server.get(str(n), 0.0) + float(v)
+        with self._lat_lock:
+            lats = sorted(self._latencies)
+        if lats:
+            server["p50_s"] = float(np.percentile(lats, 50))
+            server["p99_s"] = float(np.percentile(lats, 99))
+        n_req = server.get("requests", 0.0)
+        if server.get("batches"):
+            server["batch_mean"] = server["batch_n"] / server["batches"]
+        server["uptime_s"] = time.time() - self.t_start
+        if n_req and server.get("latency_s") is not None:
+            server["latency_mean_s"] = server["latency_s"] / n_req
+        return {
+            "server": server,
+            "plan": dict(PLAN_STATS),
+            "cache": dict(CACHE_STATS),
+            "union": dict(UNION_STATS),
+            "dispatch": dict(DISPATCH_STATS),
+            "queue_depth": len(self._queue),
+            "workers": self.workers,
+        }
+
+    def reset_stats(self) -> None:
+        """Zero core + server telemetry (a fresh measurement window —
+        the bench harness calls this between hot/cold mixes)."""
+        from repro.core import reset_all_stats
+        reset_all_stats()
+        self._stores = [MetricsStore("sum") for _ in range(self.workers)]
+        with self._lat_lock:
+            self._latencies.clear()

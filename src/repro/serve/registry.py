@@ -1,0 +1,203 @@
+"""Resident table registry: named associative arrays pinned for serving.
+
+Tables are loaded ONCE at startup — from triples files (TSV/CSV
+``row<TAB>col<TAB>val`` lines) or generator configs — and stay resident
+for the server's lifetime: host ``Assoc`` in process memory, device
+``AssocTensor`` pinned in device memory, ``DistAssoc`` row-sharded across
+the mesh.  Queries reference tables by name through the wire format; the
+registry is the resolver that binds :class:`~repro.serve.wire.TableRef`
+leaves to the resident arrays, so the planner's ``_PLAN_CACHE`` keys
+(which include ``id(array)``) are stable across requests and clients.
+
+Spec format (one dict per table, JSON-friendly)::
+
+    {"name": "edges", "path": "edges.tsv", "layer": "device"}
+    {"name": "rand",  "generator": "random", "n": 512, "nnz": 4096,
+     "seed": 0, "layer": "host"}
+
+``layer`` is ``host`` (default) / ``device`` / ``dist``; ``dist`` shards
+over ``mesh`` (default: a 1-D ``data`` mesh over every visible device).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from .wire import WireError
+
+__all__ = ["TableRegistry", "load_triples_file", "generate_triples"]
+
+
+def load_triples_file(path: str):
+    """Parse a triples file: one ``row<sep>col<sep>val`` line each
+    (separator: tab, or comma when no tab present); ``#`` comments and
+    blank lines skipped.  Values parse as float when possible, else
+    string."""
+    rows: List[str] = []
+    cols: List[str] = []
+    vals: List[Any] = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split("\t") if "\t" in line else line.split(",")
+            if len(parts) != 3:
+                raise ValueError(
+                    f"{path}:{ln}: expected 'row<sep>col<sep>val', got "
+                    f"{line!r}")
+            rows.append(parts[0].strip())
+            cols.append(parts[1].strip())
+            vals.append(parts[2].strip())
+    try:
+        vals_arr: np.ndarray = np.asarray([float(v) for v in vals])
+    except ValueError:
+        vals_arr = np.asarray(vals, dtype=str)
+    return np.asarray(rows, dtype=str), np.asarray(cols, dtype=str), vals_arr
+
+
+def generate_triples(spec: Dict[str, Any]):
+    """Deterministic synthetic tables for benches/demos.
+
+    ``generator="random"``: ``nnz`` triples over an ``n × n`` string
+    keyspace.  ``dist="clustered"`` (default) draws keys zipf-ishly so the
+    COO has the clustered block structure the BSR planner likes;
+    ``"uniform"`` draws uniformly.
+    """
+    kind = spec.get("generator", "random")
+    if kind != "random":
+        raise ValueError(f"unknown generator {kind!r}")
+    n = int(spec.get("n", 256))
+    nnz = int(spec.get("nnz", 4 * n))
+    rng = np.random.default_rng(int(spec.get("seed", 0)))
+    if spec.get("dist", "clustered") == "clustered":
+        # quadratic warp concentrates mass at low ranks (hub keys)
+        r = (rng.uniform(0, 1, nnz) ** 2 * n).astype(np.int64) % n
+        c = (rng.uniform(0, 1, nnz) ** 2 * n).astype(np.int64) % n
+    else:
+        r = rng.integers(0, n, nnz)
+        c = rng.integers(0, n, nnz)
+    width = len(str(max(n - 1, 1)))
+    rows = np.asarray([f"r{v:0{width}d}" for v in r])
+    cols = np.asarray([f"c{v:0{width}d}" for v in c])
+    vals = rng.uniform(0.5, 5.0, nnz)
+    return rows, cols, vals
+
+
+def _default_mesh():
+    import jax
+    return jax.make_mesh((len(jax.devices()),), ("data",))
+
+
+class TableRegistry:
+    """Named resident tables + the wire resolver over them."""
+
+    def __init__(self):
+        self._tables: Dict[str, Any] = {}
+        self._lock = threading.RLock()
+
+    # -- registration -------------------------------------------------------
+    def register(self, name: str, array) -> Any:
+        from repro.core import Assoc, AssocTensor, DistAssoc
+        if not isinstance(array, (Assoc, AssocTensor, DistAssoc)):
+            raise TypeError(
+                f"table {name!r}: expected Assoc/AssocTensor/DistAssoc, "
+                f"got {type(array).__name__}")
+        with self._lock:
+            self._tables[str(name)] = array
+        return array
+
+    def load(self, spec: Dict[str, Any], mesh=None) -> Any:
+        """Load one table from a spec dict (``path`` or ``generator``)."""
+        name = spec.get("name")
+        if not name:
+            raise ValueError(f"table spec needs a 'name': {spec!r}")
+        if "path" in spec:
+            rows, cols, vals = load_triples_file(spec["path"])
+        else:
+            rows, cols, vals = generate_triples(spec)
+        layer = spec.get("layer", "host")
+        aggregate = spec.get("aggregate", "sum")
+        if layer == "host":
+            from repro.core import Assoc
+            arr = Assoc(rows, cols, vals, aggregate=aggregate)
+        elif layer == "device":
+            from repro.core import AssocTensor
+            arr = AssocTensor.from_triples(rows, cols, vals,
+                                           aggregate=aggregate)
+        elif layer == "dist":
+            from repro.core import DistAssoc
+            arr = DistAssoc.from_triples(rows, cols, vals,
+                                         mesh or _default_mesh(),
+                                         aggregate=aggregate)
+        else:
+            raise ValueError(f"table {name!r}: unknown layer {layer!r}")
+        return self.register(name, arr)
+
+    @classmethod
+    def from_specs(cls, specs: Iterable[Dict[str, Any]],
+                   mesh=None) -> "TableRegistry":
+        reg = cls()
+        for spec in specs:
+            reg.load(spec, mesh=mesh)
+        return reg
+
+    # -- lookup -------------------------------------------------------------
+    def get(self, name: str):
+        with self._lock:
+            arr = self._tables.get(str(name))
+        if arr is None:
+            raise WireError("unknown_table",
+                            f"no table registered under {name!r}; "
+                            f"known: {self.names()}")
+        return arr
+
+    def resolve(self, name: str):
+        """The ``from_wire`` resolver (alias of :meth:`get`)."""
+        return self.get(name)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._tables)
+
+    def wire_names(self) -> Dict[int, str]:
+        """``id(array) -> name`` map for serializing server-side graphs."""
+        with self._lock:
+            return {id(a): n for n, a in self._tables.items()}
+
+    def layer_of(self, name: str) -> str:
+        from repro.core.plan import _layer
+        return _layer(self.get(name))
+
+    # -- introspection (the /tables endpoint) -------------------------------
+    def info(self, name: str) -> Dict[str, Any]:
+        from repro.core import Assoc, AssocTensor, DistAssoc
+        arr = self.get(name)
+        if isinstance(arr, Assoc):
+            return {"name": name, "layer": "host", "shape": list(arr.shape),
+                    "nnz": int(arr.nnz()), "numeric": bool(arr.numeric)}
+        if isinstance(arr, AssocTensor):
+            return {"name": name, "layer": "device",
+                    "shape": [len(arr.row_space), len(arr.col_space)],
+                    "nnz": int(arr.nnz_host()),
+                    "numeric": bool(arr.numeric)}
+        assert isinstance(arr, DistAssoc)
+        loc = arr.local
+        return {"name": name, "layer": "dist",
+                "shape": [len(loc.row_space), len(loc.col_space)],
+                "nnz": int(np.asarray(loc.nnz).sum()),
+                "numeric": bool(loc.numeric),
+                "shards": int(arr.mesh.shape["data"])}
+
+    def list_info(self) -> List[Dict[str, Any]]:
+        return [self.info(n) for n in self.names()]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._tables)
+
+    def __contains__(self, name) -> bool:
+        with self._lock:
+            return str(name) in self._tables

@@ -43,3 +43,61 @@ def test_serialization_roundtrip():
     ms2 = MetricsStore.from_dict(ms.to_dict())
     s, v = ms2.series("loss")
     np.testing.assert_array_equal(v, [1.5])
+
+
+def test_log_is_buffered_one_combine_per_flush():
+    """Regression for the O(n²) log path: N log() calls cost ZERO table
+    rebuilds; a flush folds them with ONE batched construction + at most
+    one combine against the existing table."""
+    ms = MetricsStore("sum")
+    for step in range(50):
+        ms.log(step, {"loss": 1.0, "tok": 2.0})
+    assert ms.combine_calls == 0            # nothing merged during logging
+    table = ms.table                        # first read flushes
+    assert ms.combine_calls == 0            # empty table: batch IS the table
+    assert table.nnz() == 100
+    for step in range(50, 100):
+        ms.log(step, {"loss": 1.0})
+    assert ms.table.nnz() == 150
+    assert ms.combine_calls == 1            # second flush: exactly one ⊕
+    ms.flush()                              # nothing pending: no combine
+    assert ms.combine_calls == 1
+
+
+def test_buffered_semantics_match_sequential():
+    """Intra-batch collisions resolve by ⊕ in log order — identical to the
+    old rebuild-per-log behaviour for every aggregate kind."""
+    for agg, expect in [("last", 3.0), ("sum", 6.0), ("max", 3.0),
+                        ("min", 1.0)]:
+        ms = MetricsStore(agg)
+        ms.log(0, {"m": 1.0})
+        ms.log(0, {"m": 2.0})
+        ms.log(0, {"m": 3.0})
+        _, v = ms.series("m")
+        np.testing.assert_array_equal(v, [expect], err_msg=agg)
+        # and across a flush boundary (pending batch ⊕ existing table)
+        ms.flush()
+        ms.log(0, {"m": 2.0})
+        _, v = ms.series("m")
+        expect2 = {"last": 2.0, "sum": 8.0, "max": 3.0, "min": 1.0}[agg]
+        np.testing.assert_array_equal(v, [expect2], err_msg=agg)
+
+
+def test_concurrent_logging_threads():
+    import threading
+
+    ms = MetricsStore("sum")
+    n_threads, n_iter = 8, 100
+
+    def worker():
+        for i in range(n_iter):
+            ms.log(i, {"count": 1.0})
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    steps, vals = ms.series("count")
+    assert len(steps) == n_iter
+    np.testing.assert_array_equal(vals, np.full(n_iter, float(n_threads)))

@@ -1,0 +1,249 @@
+"""Wire-format tests: round trips over every node/selector/semiring, and
+structured rejection of malformed payloads (never a bare exception)."""
+import json
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, st
+
+from repro.core import (All, Keys, Mask, Match, Positions, Range, REGISTRY,
+                        StartsWith, Where)
+from repro.core.select import And, Not, Or
+from repro.serve.wire import (TableRef, WireError, WIRE_VERSION, from_wire,
+                              register_predicate, sel_from_wire, sel_to_wire,
+                              table_names, to_wire)
+
+
+def roundtrip_sel(sel):
+    return sel_from_wire(sel_to_wire(sel))
+
+
+def roundtrip(expr):
+    return from_wire(to_wire(expr))
+
+
+# ---------------------------------------------------------------------------
+# Selector round trips — every selector kind in core/select.py
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sel", [
+    All(),
+    Keys(["r01", "r07", "r03"]),
+    Keys(np.asarray([3.0, 1.0, 2.0])),
+    Positions([0, 5, 2]),
+    Positions(slice(2, 20, 3)),
+    Range("a", "m"),
+    Range("a", "m", inclusive=(True, False)),
+    Range(None, "k"),
+    Range(1.5, 9.0),
+    StartsWith("r0"),
+    StartsWith(["r0", "r1"]),
+    Match(r"r0[0-4]$"),
+    Mask([True, False, True, True]),
+], ids=lambda s: type(s).__name__ + str(id(s) % 97))
+def test_selector_roundtrip(sel):
+    back = roundtrip_sel(sel)
+    assert type(back) is type(sel)
+    assert back.cache_key() == sel.cache_key()
+
+
+def test_selector_compound_roundtrip():
+    sel = (StartsWith("r0") & Match("r.[02468]")) | ~Keys(["r11"])
+    back = roundtrip_sel(sel)
+    assert back.cache_key() == sel.cache_key()
+
+
+def test_selector_raw_forms_coerce():
+    # raw __getitem__ arguments serialize through as_selector coercion
+    assert roundtrip_sel("r05").cache_key() == Keys(["r05"]).cache_key()
+    assert isinstance(roundtrip_sel(slice(None)), All)
+    got = roundtrip_sel([2, 4, 6])
+    assert got.cache_key() == Positions([2, 4, 6]).cache_key()
+
+
+def test_where_crosses_by_registered_name_only():
+    fn = lambda v: v > 2.0              # noqa: E731
+    with pytest.raises(WireError) as ei:
+        sel_to_wire(Where(fn))
+    assert ei.value.code == "unserializable_selector"
+
+    register_predicate("gt2", fn)
+    back = roundtrip_sel(Where(fn))
+    assert isinstance(back, Where)
+    assert back.fn is fn
+
+    with pytest.raises(WireError) as ei:
+        sel_from_wire({"sel": "where", "name": "no_such_predicate"})
+    assert ei.value.code == "unknown_predicate"
+
+
+# ---------------------------------------------------------------------------
+# Expression round trips — every node type × every registered semiring
+# ---------------------------------------------------------------------------
+
+def test_expr_roundtrip_every_node_type():
+    A, B = TableRef("edges"), TableRef("feat")
+    expr = ((A[StartsWith("r0"), :] @ B).sum(axis=1))
+    back = roundtrip(expr)
+    assert back.key() == expr.key()
+
+    expr2 = (A + B) * A.T
+    assert roundtrip(expr2).key() == expr2.key()
+
+    expr3 = A[Range("a", "m"), Keys(["c01"])].sum(axis=None)
+    assert roundtrip(expr3).key() == expr3.key()
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_expr_roundtrip_every_semiring(name):
+    A, B = TableRef("edges"), TableRef("feat")
+    expr = A.matmul(B, semiring=name).sum(axis=0, semiring=name)
+    back = roundtrip(expr)
+    assert back.key() == expr.key()
+
+
+def test_shared_subtree_serializes_once():
+    A = TableRef("edges")
+    sub = A[StartsWith("r0"), :]
+    expr = sub @ sub                # same structural subtree twice
+    payload = to_wire(expr)
+    sel_nodes = [n for n in payload["nodes"] if n["op"] == "select"]
+    assert len(sel_nodes) == 1      # hash-consed: one node, referenced twice
+    back = roundtrip(expr)
+    assert back.key() == expr.key()
+    assert back.a is back.b         # decoded back into one shared node
+
+
+# -- property test: random expression graphs survive the full JSON trip ----
+
+def _rand_selector(draw):
+    kind = draw(st.integers(0, 4))
+    if kind == 0:
+        return All()
+    if kind == 1:
+        ks = draw(st.lists(st.integers(0, 63), min_size=1, max_size=6))
+        return Keys([f"r{k:02d}" for k in ks])
+    if kind == 2:
+        lo, hi = sorted(draw(st.lists(st.integers(0, 63), min_size=2,
+                                      max_size=2)))
+        return Range(f"r{lo:02d}", f"r{hi:02d}")
+    if kind == 3:
+        return StartsWith(f"r{draw(st.integers(0, 9))}")
+    return Positions(draw(st.lists(st.integers(0, 63), min_size=1,
+                                   max_size=6)))
+
+
+def _rand_expr(draw, depth):
+    if depth <= 0 or draw(st.booleans()):
+        return TableRef(draw(st.sampled_from(["edges", "feat", "other"])))
+    op = draw(st.integers(0, 5))
+    sr = draw(st.sampled_from(sorted(REGISTRY)))
+    if op == 0:
+        return _rand_expr(draw, depth - 1)[
+            _rand_selector(draw), _rand_selector(draw)]
+    if op == 1:
+        return _rand_expr(draw, depth - 1).add(
+            _rand_expr(draw, depth - 1), semiring=sr)
+    if op == 2:
+        return _rand_expr(draw, depth - 1).mul(
+            _rand_expr(draw, depth - 1), semiring=sr)
+    if op == 3:
+        return _rand_expr(draw, depth - 1).matmul(
+            _rand_expr(draw, depth - 1), semiring=sr)
+    if op == 4:
+        return _rand_expr(draw, depth - 1).sum(
+            axis=draw(st.sampled_from([None, 0, 1])), semiring=sr)
+    return _rand_expr(draw, depth - 1).T
+
+
+@given(data=st.data())
+def test_random_graph_json_roundtrip(data):
+    expr = _rand_expr(data.draw, depth=4)
+    payload = to_wire(expr)
+    # through actual JSON text — what the HTTP layer ships
+    back = from_wire(json.loads(json.dumps(payload)))
+    assert back.key() == expr.key()
+
+
+def test_table_names_admission_key():
+    A, B = TableRef("edges"), TableRef("feat")
+    payload = to_wire((A @ B) + A)
+    assert table_names(payload) == ("edges", "feat")
+
+
+# ---------------------------------------------------------------------------
+# Malformed payloads: structured WireError codes, not arbitrary crashes
+# ---------------------------------------------------------------------------
+
+def _payload(nodes, root=None):
+    return {"version": WIRE_VERSION, "nodes": nodes,
+            "root": len(nodes) - 1 if root is None else root}
+
+
+def _code(payload, resolve=None):
+    with pytest.raises(WireError) as ei:
+        from_wire(payload, resolve=resolve)
+    return ei.value.code
+
+
+def test_reject_bad_version():
+    assert _code({"version": 99, "nodes": [], "root": 0}) == "bad_version"
+    assert _code({"nodes": [{"op": "table", "name": "t"}],
+                  "root": 0}) == "bad_version"
+
+
+def test_reject_unknown_semiring():
+    p = _payload([{"op": "table", "name": "t"},
+                  {"op": "matmul", "a": 0, "b": 0,
+                   "semiring": "frobnicate"}])
+    assert _code(p) == "unknown_semiring"
+
+
+def test_reject_unknown_op():
+    assert _code(_payload([{"op": "quantum_join"}])) == "unknown_op"
+
+
+def test_reject_cyclic_refs():
+    # self reference
+    p = _payload([{"op": "table", "name": "t"},
+                  {"op": "transpose", "child": 1}])
+    assert _code(p) == "cycle"
+    # forward reference
+    p = _payload([{"op": "transpose", "child": 1},
+                  {"op": "table", "name": "t"}], root=0)
+    assert _code(p) == "cycle"
+
+
+def test_reject_structural_garbage():
+    assert _code("not a dict") == "bad_payload"
+    assert _code({"version": WIRE_VERSION, "nodes": [],
+                  "root": 0}) == "bad_payload"
+    assert _code(_payload([{"no_op": True}])) == "bad_payload"
+    assert _code(_payload([{"op": "table", "name": ""}])) == "bad_payload"
+    assert _code(_payload([{"op": "table", "name": "t"}],
+                          root=7)) == "bad_payload"
+    assert _code(_payload([{"op": "table", "name": "t"},
+                           {"op": "select", "child": 0,
+                            "row": {"sel": "martian"},
+                            "col": {"sel": "all"}}])) == "bad_selector"
+    assert _code(_payload([{"op": "table", "name": "t"},
+                           {"op": "reduce", "child": 0,
+                            "axis": 7}])) == "bad_payload"
+
+
+def test_reject_unknown_table_via_resolver():
+    from repro.serve.registry import TableRegistry
+    reg = TableRegistry()
+    p = _payload([{"op": "table", "name": "ghost"}])
+    assert _code(p, resolve=reg.resolve) == "unknown_table"
+
+
+def test_source_without_name_mapping_rejected():
+    from repro.core import Assoc, lazy
+    a = Assoc(["r0"], ["c0"], [1.0])
+    with pytest.raises(WireError) as ei:
+        to_wire(lazy(a))
+    assert ei.value.code == "unknown_table"
+    # with the mapping it serializes as a named table node
+    payload = to_wire(lazy(a), names={id(a): "mytab"})
+    assert table_names(payload) == ("mytab",)
