@@ -374,6 +374,92 @@ def _probe_serve_execute():
                        size=lambda: _select_prog.cache_info().currsize)
 
 
+# --------------------------------------------------------------------------
+# Sharded-B distribution strategies (exact collective budgets: the cost
+# model may only ever choose between programs that are provably no
+# chattier than declared — replicate 0, all_to_all 1, 2D pc−1)
+# --------------------------------------------------------------------------
+
+def _a2a_args_sds():
+    import jax.numpy as jnp
+    ar = _sds((_NSHARDS, _CAP), jnp.int32)
+    av = _sds((_NSHARDS, _CAP), jnp.float32)
+    b = {k: v for k, v in _coo_dict_sds().items() if k != "nnz"}
+    bm = _sds((_NKEYS,), jnp.int32)
+    return ar, av, b, bm
+
+
+@probe_for("dist.matmul_all_to_all")
+def _probe_dist_matmul_a2a():
+    import jax.numpy as jnp
+    from repro.core.dist_assoc import _matmul_a2a_prog
+
+    mesh = _abstract_mesh()
+    ar, av, b, bm = _a2a_args_sds()
+    prog = _matmul_a2a_prog(mesh, _plus_times(), 256, 64, 256, _NSHARDS)
+    yield "a2a-exchange", lower_hlo(prog, ar, ar, av, b, bm,
+                                    _sds((_NSHARDS + 1,), jnp.int32))
+
+    def run():
+        _matmul_a2a_prog(mesh, _plus_times(), 256, 64, 256, _NSHARDS)
+
+    yield RetraceAudit(label="a2a-prog-cache", first=run, again=run,
+                       size=lambda: _matmul_a2a_prog.cache_info().currsize)
+
+
+@probe_for("dist.matmul_2d")
+def _probe_dist_matmul_2d():
+    from repro.core.dist_assoc import _matmul_ring_prog
+
+    mesh = _abstract_mesh()
+    a = {k: v for k, v in _coo_dict_sds().items() if k != "nnz"}
+    # 2×4 grid over the 8-shard mesh: exactly pc−1 = 3 ring ppermutes
+    prog = _matmul_ring_prog(mesh, _plus_times(), 2, 4, 256, 256)
+    yield "ring-2x4", lower_hlo(prog, a, a)
+
+    def run():
+        _matmul_ring_prog(mesh, _plus_times(), 2, 4, 256, 256)
+
+    yield RetraceAudit(label="ring-prog-cache", first=run, again=run,
+                       size=lambda: _matmul_ring_prog.cache_info().currsize)
+
+
+@probe_for("dist.matmul_reduce_all_to_all")
+def _probe_dist_matmul_reduce_a2a():
+    from repro.core.dist_assoc import _matmul_reduce_a2a_prog
+
+    mesh = _abstract_mesh()
+    ar, av, b, bm = _a2a_args_sds()
+    for axis in (1, 0):
+        prog = _matmul_reduce_a2a_prog(mesh, _plus_times(), 256, _NKEYS,
+                                       axis)
+        yield f"axis{axis}", lower_hlo(prog, ar, ar, av, b, bm)
+
+
+@probe_for("dist.matmul_bsr")
+def _probe_dist_matmul_bsr():
+    import jax.numpy as jnp
+    from repro.core.dist_assoc import _matmul_bsr_prog
+
+    mesh = _abstract_mesh()
+    n_a, n_c, n_pairs = 2, 2, 16
+    prog = _matmul_bsr_prog(mesh, _plus_times(), n_a, n_c, _NKEYS, _NKEYS,
+                            256, "ref")
+    ints = _sds((_NSHARDS, _CAP), jnp.int32)
+    pint = _sds((_NSHARDS, n_pairs), jnp.int32)
+    yield "bsr-one-program", lower_hlo(
+        prog, _sds((_NSHARDS, _CAP), jnp.float32), ints, ints, ints,
+        _sds((n_a, 128, 128), jnp.float32), pint, pint, pint,
+        _sds((_NSHARDS, n_c, 2), jnp.int32))
+
+    def run():
+        _matmul_bsr_prog(mesh, _plus_times(), n_a, n_c, _NKEYS, _NKEYS,
+                         256, "ref")
+
+    yield RetraceAudit(label="bsr-prog-cache", first=run, again=run,
+                       size=lambda: _matmul_bsr_prog.cache_info().currsize)
+
+
 @probe_for("DistAssoc.matmul_dense_vec")
 def _probe_dist_matvec():
     import jax.numpy as jnp

@@ -385,3 +385,34 @@ def expand_join_coo(a_rows, a_cols, a_vals, b_rows, b_cols, b_vals,
     cols = jnp.where(valid, b_cols[b_idx], SENT)
     vals = jnp.where(valid, mul(a_vals[a_of], b_vals[b_idx]), zero)
     return rows, cols, vals, total
+
+
+def bucket_coo_by_range(rows, cols, vals, bounds, n_buckets: int,
+                        bucket_cap: int, *, zero: float):
+    """Scatter COO triples into ``[n_buckets, bucket_cap]`` buckets keyed by
+    the range of ``rows`` — jit/shard_map-safe.
+
+    The routing step of the sharded-B all-to-all product: partial products
+    land on the shard that owns their output row, so each producer buckets
+    its triples by ``searchsorted(bounds[1:], rows)`` before the exchange.
+    ``bounds`` is the ``[n_buckets+1]`` rank-boundary array (the same
+    ``row_bounds`` the DistAssoc partition uses); sentinel rows and bucket
+    overflow beyond ``bucket_cap`` are dropped via out-of-bounds scatter —
+    callers size ``bucket_cap`` from host-side exact counts so the main
+    path never overflows.  Returns ``(rows, cols, vals)`` each shaped
+    ``[n_buckets, bucket_cap]``, sentinel/zero padded.
+    """
+    ok = rows != SENT
+    dest = jnp.searchsorted(bounds[1:], rows, side="right").astype(jnp.int32)
+    dest = jnp.where(ok, dest, n_buckets)          # invalid → OOB → dropped
+    order = jnp.argsort(dest, stable=True)
+    d = dest[order]
+    # rank within bucket: position minus the bucket's run start
+    slot = jnp.arange(rows.shape[0]) - jnp.searchsorted(d, d, side="left")
+    out_r = jnp.full((n_buckets, bucket_cap), SENT, jnp.int32)
+    out_c = jnp.full((n_buckets, bucket_cap), SENT, jnp.int32)
+    out_v = jnp.full((n_buckets, bucket_cap), zero, vals.dtype)
+    out_r = out_r.at[d, slot].set(rows[order], mode="drop")
+    out_c = out_c.at[d, slot].set(cols[order], mode="drop")
+    out_v = out_v.at[d, slot].set(vals[order], mode="drop")
+    return out_r, out_c, out_v

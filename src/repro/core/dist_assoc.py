@@ -24,16 +24,34 @@ shard), and the paper's operations decompose as:
 
 Shards keep the full keyspaces (host-side, cheap) and static capacity
 ``cap / n_shards``; re-sharding for elasticity is a host-side split by
-row-rank ranges (same code path the checkpoint restore uses).  Sparse-B
-*distribution* strategies (sharding B instead of broadcasting it) are a
-ROADMAP follow-on; ``DistAssoc`` operands are transparently gathered to a
-replicated ``AssocTensor`` today.
+row-rank ranges (same code path the checkpoint restore uses).
+
+The product supports three *communication strategies*, chosen per multiply
+by the host cost model (:func:`repro.core.spgemm.plan_dist_matmul`) from
+the exact per-block product counts the planner already computes:
+
+  * ``replicate`` — broadcast-B as above: **0** collectives, moves
+    ``P·nnz(B)`` triples at staging.  Wins while B is small.
+  * ``all_to_all`` — B stays sharded by contraction range (a resident
+    ``DistAssoc`` B is reused *in place*: the monotone
+    :meth:`KeySpace.union` rank maps keep its row partition a contiguous
+    contraction partition); each shard expand-joins the replicated A
+    triples against its own B block, buckets the partial products by
+    destination row shard, and **one** packed ``all_to_all`` delivers
+    them for the ⊕-merge.  B's triples never replicate.
+  * ``2d`` — SUMMA-flavored grid ``(pr, pc)`` picked by
+    :func:`repro.core.spgemm.suggest_grid`: B splits into ``pc``
+    contraction blocks (each staged to ``pr`` shards), A never moves, and
+    ``pc`` rounds of shard-local expand-join interleave with ``pc−1``
+    ring ``ppermute`` shifts of the packed block.  Wins the square /
+    hub-heavy regime where both replication and bucket padding hurt.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from functools import partial
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,12 +64,14 @@ from repro.analysis.contracts import contract
 from .assoc_tensor import (AssocTensor, DISPATCH_STATS, _bump_dispatch,
                            coo_axis_mask_keep, coo_compact, coo_mask_keep,
                            coo_range_keep)
-from .coo import SENT, dedup_sorted_coo, expand_join_coo
+from .coo import (SENT, bucket_coo_by_range, dedup_sorted_coo,
+                  expand_join_coo)
 from .expr import EwiseAdd, EwiseMul, MatMul, Select, Source
 from .keyspace import KeySpace
 from .semiring import (PLUS_TIMES, get_semiring, mesh_combine,
                        scatter_combine)
-from .spgemm import _round_up, pad_to_cap
+from .spgemm import (BSR_AUTO_EXPAND, TILE, _round_up, pad_to_cap,
+                     plan_dist_matmul)
 
 __all__ = ["DistAssoc"]
 
@@ -76,8 +96,10 @@ def _local_coo_spec():
 # auto-strategy crossover for DistAssoc.matmul: below this per-shard
 # expand-join size the jit-safe coo shard_map program wins (one fused
 # dispatch, no host loop); above it the tiled pair-list strategy's
-# O(products-touched) work beats the full expansion buffer
-_BSR_AUTO_EXPAND = 1 << 14
+# O(products-touched) work beats the full expansion buffer.  Lives in
+# spgemm so the distribution cost model can price the switch (its host
+# planning rescans B per shard).
+_BSR_AUTO_EXPAND = BSR_AUTO_EXPAND
 
 
 @functools.lru_cache(maxsize=256)
@@ -304,6 +326,244 @@ def _ewise_prog(mesh: Mesh, sr, op: str):
                 "vals": out["vals"][None], "nnz": out["nnz"][None]}
 
     return go
+
+
+# ---------------------------------------------------------------------------
+# Sharded-B communication strategies.  The partial-product exchange and the
+# ring shift both move ONE packed int32 array (rows, cols, bitcast values
+# stacked on a trailing axis) — three separate collectives would triple the
+# trip count the contracts pin down.
+# ---------------------------------------------------------------------------
+
+def _pack_coo(rows, cols, vals):
+    """Stack COO triples into one int32 array (vals bitcast) — the unit a
+    single collective can move."""
+    return jnp.stack(
+        [rows, cols,
+         jax.lax.bitcast_convert_type(vals.astype(jnp.float32), jnp.int32)],
+        axis=-1)
+
+
+def _unpack_coo(packed):
+    return (packed[..., 0], packed[..., 1],
+            jax.lax.bitcast_convert_type(packed[..., 2], jnp.float32))
+
+
+@contract(collectives=1, name="dist.matmul_all_to_all",
+          note="sharded-B product: one packed all_to_all of partial "
+               "products, B never replicated")
+@functools.lru_cache(maxsize=256)
+def _matmul_a2a_prog(mesh: Mesh, sr, expand: int, bucket_cap: int,
+                     out_cap: int, n_shards: int):
+    """Sharded-B all-to-all product program.
+
+    A's triples arrive replicated (``[n_shards, cap]``, flattened in the
+    body); each shard expand-joins them against its OWN contraction block
+    of B, buckets the partial products by destination row shard
+    (:func:`bucket_coo_by_range` over the result's ``row_bounds``), and
+    exactly one ``all_to_all`` of the packed ``[P, bucket_cap, 3]`` buffer
+    delivers every product to the shard owning its output row, where one
+    canonical merge ⊕-dedups them.  ``true_nnz`` rides along for the
+    overflow warning, as in ``_matmul_prog``.
+    """
+    b_spec = {k: P("data", None) for k in _COO_SPEC}
+    out_spec = {"rows": P("data", None), "cols": P("data", None),
+                "vals": P("data", None), "nnz": P("data"),
+                "true_nnz": P("data")}
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(), P(), P(), b_spec, P(), P()),
+             out_specs=out_spec, check_rep=False)
+    def go(ar, ac, av, b, bm, bounds):
+        # rerank the resident B block's rows onto the merged contraction
+        # space in-program (bm is monotone, so the block stays sorted);
+        # staged B passes the identity map
+        rb0 = b["rows"][0]
+        okb = rb0 != SENT
+        rb = jnp.where(okb, bm[jnp.clip(rb0, 0, bm.shape[0] - 1)], SENT)
+        pr, pc, pv, _ = expand_join_coo(
+            ar.reshape(-1), ac.reshape(-1), av.reshape(-1),
+            rb, b["cols"][0], b["vals"][0],
+            sr.mul, zero=sr.zero, expand=expand)
+        br, bc, bv = bucket_coo_by_range(pr, pc, pv, bounds, n_shards,
+                                         bucket_cap, zero=sr.zero)
+        got = jax.lax.all_to_all(_pack_coo(br, bc, bv), "data",
+                                 split_axis=0, concat_axis=0, tiled=True)
+        rows, cols, vals = _unpack_coo(got)
+        r, c, v, nnz = dedup_sorted_coo(rows.reshape(-1), cols.reshape(-1),
+                                        vals.reshape(-1), sr.add,
+                                        zero=sr.zero)
+        r, c, v = pad_to_cap(r, c, v, out_cap, sr.zero)
+        return {"rows": r[None], "cols": c[None], "vals": v[None],
+                "nnz": jnp.minimum(nnz, out_cap)[None],
+                "true_nnz": nnz[None]}
+
+    return go
+
+
+@contract(collectives=3, name="dist.matmul_2d",
+          note="SUMMA-style grid: pc−1 packed ring ppermutes "
+               "(probe grid 2×4 → 3); A never moves")
+@functools.lru_cache(maxsize=256)
+def _matmul_ring_prog(mesh: Mesh, sr, pr: int, pc: int, round_expand: int,
+                      out_cap: int):
+    """2D-grid ring product program.
+
+    Shard ``s = (g, p)`` (``g = s // pc``) keeps its own A rows and starts
+    with B contraction block ``p``; each of the ``pc`` rounds contracts
+    the resident block locally, then one ``ppermute`` ring-shifts the
+    packed block within the group (``pc−1`` shifts total — the last round
+    skips it).  Output rows never leave their owner shard, so the round
+    buffers concat + one canonical merge finish the product with no
+    further communication.
+    """
+    a_spec = {k: P("data", None) for k in _COO_SPEC}
+    out_spec = {"rows": P("data", None), "cols": P("data", None),
+                "vals": P("data", None), "nnz": P("data"),
+                "true_nnz": P("data")}
+    n_shards = pr * pc
+    perm = [(s, (s // pc) * pc + ((s % pc) - 1) % pc)
+            for s in range(n_shards)]
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(a_spec, a_spec),
+             out_specs=out_spec, check_rep=False)
+    def go(a, b):
+        ar, ac, av = a["rows"][0], a["cols"][0], a["vals"][0]
+        bpk = _pack_coo(b["rows"][0], b["cols"][0], b["vals"][0])
+        parts = []
+        for rnd in range(pc):
+            br, bc, bv = _unpack_coo(bpk)
+            parts.append(expand_join_coo(ar, ac, av, br, bc, bv, sr.mul,
+                                         zero=sr.zero,
+                                         expand=round_expand)[:3])
+            if rnd + 1 < pc:
+                bpk = jax.lax.ppermute(bpk, "data", perm)
+        rows = jnp.concatenate([p[0] for p in parts])
+        cols = jnp.concatenate([p[1] for p in parts])
+        vals = jnp.concatenate([p[2] for p in parts])
+        r, c, v, nnz = dedup_sorted_coo(rows, cols, vals, sr.add,
+                                        zero=sr.zero)
+        r, c, v = pad_to_cap(r, c, v, out_cap, sr.zero)
+        return {"rows": r[None], "cols": c[None], "vals": v[None],
+                "nnz": jnp.minimum(nnz, out_cap)[None],
+                "true_nnz": nnz[None]}
+
+    return go
+
+
+@contract(collectives=1, name="dist.matmul_reduce_all_to_all",
+          note="sharded-B fused epilogue: one mesh_combine, no exchange "
+               "of partial products needed")
+@functools.lru_cache(maxsize=256)
+def _matmul_reduce_a2a_prog(mesh: Mesh, sr, expand: int, n_out: int,
+                            axis: int):
+    """Sharded-B twin of ``_matmul_reduce_prog``: each shard folds the
+    products of ITS contraction block straight into the dense output
+    vector, and the one psum-family collective both merges the partials
+    and replaces the partial-product exchange — the all-to-all variant of
+    the fused epilogue is no chattier than the replicate one."""
+    b_spec = {k: P("data", None) for k in _COO_SPEC}
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(P(), P(), P(), b_spec, P()),
+             out_specs=P(), check_rep=False)
+    def go(ar, ac, av, b, bm):
+        rb0 = b["rows"][0]
+        okb = rb0 != SENT
+        rb = jnp.where(okb, bm[jnp.clip(rb0, 0, bm.shape[0] - 1)], SENT)
+        pr, pc, pv, _ = expand_join_coo(
+            ar.reshape(-1), ac.reshape(-1), av.reshape(-1),
+            rb, b["cols"][0], b["vals"][0],
+            sr.mul, zero=sr.zero, expand=expand)
+        keys = pr if axis == 1 else pc
+        vec = jnp.full((n_out,), sr.zero, jnp.float32)
+        vec = scatter_combine(vec, keys, pv, sr)  # SENT keys drop
+        return mesh_combine(vec, "data", sr)
+
+    return go
+
+
+@contract(collectives=0, name="dist.matmul_bsr",
+          note="one shard_map for the whole tiled product: per-shard "
+               "pair lists ride in as traced operands")
+@functools.lru_cache(maxsize=256)
+def _matmul_bsr_prog(mesh: Mesh, sr, n_a: int, n_c: int, m: int, n: int,
+                     out_cap: int, kernel_impl: str):
+    """Single-program tiled (BSR pair-list) replicate-strategy product.
+
+    Replaces the eager per-shard host loop: every shard packs its own A
+    tiles from traced scatter targets, contracts its planned tile-pair
+    list against the once-packed replicated B tiles
+    (:func:`repro.kernels.bsr_spgemm.ops.bsr_pairlist` — the
+    scalar-prefetch Pallas kernel on TPU, the jnp oracle elsewhere), and
+    extracts canonical COO from its C tiles — one dispatch for the whole
+    mesh instead of ``n_shards`` planner+kernel round-trips.  Per-shard
+    plans are padded to uniform static sizes on host: dummy pairs target
+    the extra C slot ``n_c`` (discarded), padded entries/blocks scatter
+    out of bounds (dropped) or land past ``(m, n)`` (filtered).
+    """
+    shard1 = P("data", None)
+    out_spec = {"rows": shard1, "cols": shard1, "vals": shard1,
+                "nnz": P("data"), "true_nnz": P("data")}
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh,
+             in_specs=(shard1, shard1, shard1, shard1, P(),
+                       shard1, shard1, shard1, P("data", None, None)),
+             out_specs=out_spec, check_rep=False)
+    def go(av, tof, lr, lc, b_tiles, pa, pb, pcc, cblk):
+        from repro.kernels.bsr_spgemm.ops import bsr_pairlist
+        a_tiles = jnp.full((n_a, TILE, TILE), sr.zero, jnp.float32)
+        a_tiles = a_tiles.at[tof[0], lr[0], lc[0]].set(
+            av[0].astype(jnp.float32), mode="drop")
+        c_tiles = bsr_pairlist(a_tiles, b_tiles, pa[0], pb[0], pcc[0],
+                               n_c=n_c + 1, semiring=sr, impl=kernel_impl)
+        c_use = c_tiles[:n_c]                      # drop the dummy slot
+        iota = jnp.arange(TILE, dtype=jnp.int32)
+        rows_g = (cblk[0][:, 0, None, None] * TILE
+                  + iota[None, :, None])
+        cols_g = (cblk[0][:, 1, None, None] * TILE
+                  + iota[None, None, :])
+        rows_g = jnp.broadcast_to(rows_g, c_use.shape).reshape(-1)
+        cols_g = jnp.broadcast_to(cols_g, c_use.shape).reshape(-1)
+        vals_g = c_use.reshape(-1)
+        keep = (vals_g != sr.zero) & (rows_g < m) & (cols_g < n)
+        r, c, v, nnz = coo_compact(rows_g, cols_g, vals_g, keep)
+        r, c, v = pad_to_cap(r, c, v, out_cap, sr.zero)
+        return {"rows": r[None], "cols": c[None], "vals": v[None],
+                "nnz": jnp.minimum(nnz, out_cap)[None],
+                "true_nnz": nnz[None]}
+
+    return go
+
+
+@dataclasses.dataclass
+class _MatmulSetup:
+    """Host-side product prologue state shared by every strategy.
+
+    ``a_*_h`` / ``counts`` / ``b_rows_h`` feed the distribution cost model
+    (:func:`repro.core.spgemm.plan_dist_matmul`); the ``b_*_h`` triples are
+    already in the merged contraction rank space, sorted by row, and back
+    both the staging paths and the lazily built replicated-B tensor.
+    """
+
+    a_loc: AssocTensor             # sharded stacked triples, logical-coerced
+    a_cols: jnp.ndarray            # device [P, cap] contraction-space cols
+    a_rows_h: np.ndarray
+    a_cols_h: np.ndarray
+    counts: np.ndarray             # [P, cap] exact per-entry product counts
+    ks: KeySpace                   # merged contraction keyspace
+    b_col_space: KeySpace
+    b_resident: bool               # B is a DistAssoc on this mesh
+    b_repl: Optional[AssocTensor]  # replicated reranked B (lazy if resident)
+    b_other: Optional["DistAssoc"]
+    b_map: np.ndarray              # B row rank → merged rank (monotone)
+    b_rows_h: np.ndarray           # sorted valid merged contraction ranks
+    b_cols_h: np.ndarray
+    b_vals_h: np.ndarray
+    a2a_bounds: Optional[np.ndarray]   # resident B's mapped partition
 
 
 class DistAssoc:
@@ -590,77 +850,185 @@ class DistAssoc:
             return other.to_tensor()
         raise TypeError(f"cannot multiply DistAssoc by {type(other)!r}")
 
-    def _matmul_prologue(self, other):
-        """Shared setup: logical() strings, align the contraction keyspace,
-        and size the per-shard expand-join buffer from exact host counts.
+    def _matmul_setup(self, other) -> "_MatmulSetup":
+        """Shared product prologue: logical() strings, align the contraction
+        keyspace, and collect the host metadata the distribution cost model
+        runs on (exact per-entry product counts, B's sorted contraction
+        ranks, B's own partition bounds when it is mesh-resident).
 
-        (Semiring-independent: this is the sharded-A twin of
-        ``spgemm._contraction_aligned`` — alignment is pure key/rank work.)
-        Returns ``(a_rows, a_cols, a_vals, b, expand)`` where the A arrays
-        are the [n_shards, cap] sharded triples with cols reranked onto the
-        contraction space and ``b`` is the replicated, reranked B tensor.
+        Semiring-independent — this is the sharded twin of
+        ``spgemm._contraction_aligned``: alignment is pure key/rank work.
         """
         a_loc = self.local.logical() if not self.local.numeric else self.local
-        b = self._as_replicated_operand(other)
-        b = b.logical() if not b.numeric else b
-        ks, a_map, b_map = a_loc.col_space.union(b.row_space)
-        b = b.reranked(ks, b.col_space, b_map,
-                       np.arange(len(b.col_space), dtype=np.int32))
+        b_resident = isinstance(other, DistAssoc) and other.mesh == self.mesh
+        b_repl = None
+        if b_resident:
+            b_loc = (other.local.logical() if not other.local.numeric
+                     else other.local)
+            b_row_space, b_col_space = b_loc.row_space, b_loc.col_space
+        else:
+            b_t = self._as_replicated_operand(other)
+            b_t = b_t.logical() if not b_t.numeric else b_t
+            b_row_space, b_col_space = b_t.row_space, b_t.col_space
+        ks, a_map, b_map = a_loc.col_space.union(b_row_space)
+        b_map = np.asarray(b_map, np.int32)
+
+        # device: rerank the sharded A cols onto the contraction space
         ok = a_loc.rows != SENT
         cm = jnp.asarray(a_map) if len(a_map) else jnp.zeros(1, jnp.int32)
         a_cols = jnp.where(ok, cm[jnp.clip(a_loc.cols, 0, cm.shape[0] - 1)],
                            SENT)
-        # exact per-shard product counts (host): worst shard sizes the
-        # static expansion buffer, so the main path can never overflow
-        b_rows_h = np.asarray(b.rows)
-        a_cols_h = np.asarray(a_cols)
         a_rows_h = np.asarray(a_loc.rows)
+        a_cols_h = np.asarray(a_cols)
+
+        # host B triples in the merged contraction space, sorted by row:
+        # shard supports are disjoint and ranges ordered, and the union
+        # rank maps are monotone, so ravel order IS sorted order
+        a2a_bounds = None
+        if b_resident:
+            rws = np.asarray(b_loc.rows).ravel()
+            keep = rws != int(SENT)
+            rh = rws[keep]
+            b_rows_h = b_map[rh] if len(b_map) else rh
+            b_cols_h = np.asarray(b_loc.cols).ravel()[keep]
+            b_vals_h = np.asarray(b_loc.vals).ravel()[keep]
+            rb = np.asarray(other.row_bounds, np.int64)
+            if len(b_map):
+                a2a_bounds = np.where(
+                    rb < len(b_map),
+                    b_map.astype(np.int64)[np.clip(rb, 0, len(b_map) - 1)],
+                    len(ks))
+            else:
+                a2a_bounds = np.zeros_like(rb)
+        else:
+            b_repl = b_t.reranked(ks, b_col_space, b_map,
+                                  np.arange(len(b_col_space), dtype=np.int32))
+            rws = np.asarray(b_repl.rows)
+            keep = rws != int(SENT)
+            b_rows_h = rws[keep]
+            b_cols_h = np.asarray(b_repl.cols)[keep]
+            b_vals_h = np.asarray(b_repl.vals)[keep]
+
+        # exact per-entry product counts (host): two searchsorteds over
+        # B's contraction ranks — the cost model's only data dependence
         lo = np.searchsorted(b_rows_h, a_cols_h.ravel(), side="left")
         hi = np.searchsorted(b_rows_h, a_cols_h.ravel(), side="right")
-        counts = np.where(a_rows_h.ravel() != int(SENT), hi - lo, 0)
-        per_shard = counts.reshape(a_rows_h.shape).sum(axis=1)
-        expand = int(max(8, _round_up(int(per_shard.max(initial=0)) or 1, 8)))
-        return a_loc.rows, a_cols, a_loc.vals, b, expand
+        counts = np.where(a_rows_h.ravel() != int(SENT),
+                          hi - lo, 0).reshape(a_rows_h.shape)
+        return _MatmulSetup(a_loc=a_loc, a_cols=a_cols, a_rows_h=a_rows_h,
+                            a_cols_h=a_cols_h, counts=counts, ks=ks,
+                            b_col_space=b_col_space, b_resident=b_resident,
+                            b_repl=b_repl,
+                            b_other=other if b_resident else None,
+                            b_map=b_map, b_rows_h=b_rows_h,
+                            b_cols_h=b_cols_h, b_vals_h=b_vals_h,
+                            a2a_bounds=a2a_bounds)
 
-    @contract(collectives=0,
-              note="row-sharded A x broadcast B: shard-local expand-join")
-    def matmul(self, other, semiring=PLUS_TIMES, *, impl: str = "auto",
-               kernel_impl: str = "auto",
-               out_capacity_per_shard: Optional[int] = None) -> "DistAssoc":
-        """Array multiplication ``A ⊗.⊕ B`` — row-sharded × broadcast-B.
+    def _b_replicated(self, st: "_MatmulSetup") -> AssocTensor:
+        """Replicated reranked B for the replicate strategy (built lazily:
+        the sharded strategies never pay for it)."""
+        if st.b_repl is None:
+            st.b_repl = AssocTensor(
+                jnp.asarray(st.b_rows_h, jnp.int32),
+                jnp.asarray(st.b_cols_h, jnp.int32),
+                jnp.asarray(st.b_vals_h, jnp.float32),
+                jnp.int32(len(st.b_rows_h)), st.ks, st.b_col_space, None)
+        return st.b_repl
 
-        Each shard runs a LOCAL sparse product of its rows against the
-        replicated B triples; because row supports are disjoint the shard
-        outputs ARE the row-sharded result: **zero collectives**, the
-        Graphulo tablet-server product.  ``other`` may be an
-        ``AssocTensor``, host ``Assoc``, or another ``DistAssoc`` (gathered
-        to replicated — sharded-B strategies are a ROADMAP item).
+    def _put_sharded(self, tree):
+        return jax.tree.map(
+            lambda x: jax.device_put(
+                jnp.asarray(x),
+                NamedSharding(self.mesh,
+                              P(*(("data",) + (None,) * (x.ndim - 1))))),
+            tree)
 
-        ``impl`` picks the shard-local strategy: ``"coo"`` is the jit-safe
-        expand-join + canonical-merge shard_map program; ``"bsr"`` runs
-        each shard through the tiled pair-list strategy of
-        :func:`repro.core.spgemm.matmul` (eager host loop over shards,
-        results re-stacked onto the same row partition — ``kernel_impl``
-        forwards to the pair-list kernel dispatch).  ``"auto"`` stays on
-        coo until the per-shard expansion buffer crosses
-        ``_BSR_AUTO_EXPAND`` products, where tiling starts to win.
+    def _a2a_b_operand(self, st: "_MatmulSetup", sr):
+        """The sharded-B operand + row rank map for the all_to_all programs.
+
+        A mesh-resident B is reused IN PLACE (its row partition is already
+        a contraction partition; the program reranks through ``bm``); any
+        other B stages once, split by equal contraction ranges — the same
+        bounds the cost model's product table used.
         """
-        if impl not in ("auto", "coo", "bsr"):
-            raise ValueError(f"unknown DistAssoc matmul impl {impl!r}; "
-                             f"expected auto/coo/bsr")
-        sr = get_semiring(semiring)
-        if impl == "bsr":
-            return self._matmul_bsr(other, sr, kernel_impl=kernel_impl,
-                                    out_capacity_per_shard=out_capacity_per_shard)
-        a_rows, a_cols, a_vals, b, expand = self._matmul_prologue(other)
-        if impl == "auto" and expand >= _BSR_AUTO_EXPAND:
-            return self._matmul_bsr(other, sr, kernel_impl=kernel_impl,
-                                    out_capacity_per_shard=out_capacity_per_shard)
-        out_cap = out_capacity_per_shard or expand
+        n_shards = self.mesh.shape["data"]
+        if st.b_resident:
+            loc = st.b_other.local
+            b_dict = {"rows": loc.rows, "cols": loc.cols,
+                      "vals": loc.vals.astype(jnp.float32)}
+            bm = (jnp.asarray(st.b_map) if len(st.b_map)
+                  else jnp.zeros(1, jnp.int32))
+            return b_dict, bm
+        k = len(st.ks)
+        bnds = np.linspace(0, k, n_shards + 1).astype(np.int64)
+        idx = np.searchsorted(st.b_rows_h, bnds)
+        cap = int(max(8, _round_up(int(np.diff(idx).max(initial=0)) or 1, 8)))
+        rows = np.full((n_shards, cap), int(SENT), np.int32)
+        cols = np.full((n_shards, cap), int(SENT), np.int32)
+        vals = np.full((n_shards, cap), sr.zero, np.float32)
+        for s in range(n_shards):
+            seg = slice(int(idx[s]), int(idx[s + 1]))
+            length = seg.stop - seg.start
+            rows[s, :length] = st.b_rows_h[seg]
+            cols[s, :length] = st.b_cols_h[seg]
+            vals[s, :length] = st.b_vals_h[seg]
+        b_dict = self._put_sharded({"rows": rows, "cols": cols,
+                                    "vals": vals})
+        bm = jnp.arange(max(k, 1), dtype=jnp.int32)  # already merged-space
+        return b_dict, bm
 
-        a_dict = {"rows": a_rows, "cols": a_cols, "vals": a_vals}
-        go = _matmul_prog(self.mesh, sr, expand, out_cap)
-        out = go(a_dict, b.rows, b.cols, b.vals)
+    def _stage_b_blocks(self, st: "_MatmulSetup", sr, pr: int, pc: int,
+                        block_cap: int):
+        """Stage B's contraction blocks for the 2D grid: block ``p`` lands
+        on every shard ``(g, p)`` (``pr``-fold staging replication — the
+        cost model's ``pr·nnz(B)`` term), SENT/zero-padded to the uniform
+        ``block_cap`` so whole blocks ring-shift as one packed array."""
+        k = len(st.ks)
+        n_shards = pr * pc
+        bnds = np.linspace(0, k, pc + 1).astype(np.int64)
+        idx = np.searchsorted(st.b_rows_h, bnds)
+        rows = np.full((n_shards, block_cap), int(SENT), np.int32)
+        cols = np.full((n_shards, block_cap), int(SENT), np.int32)
+        vals = np.full((n_shards, block_cap), sr.zero, np.float32)
+        for s in range(n_shards):
+            blk = s % pc
+            seg = slice(int(idx[blk]), int(idx[blk + 1]))
+            length = seg.stop - seg.start
+            rows[s, :length] = st.b_rows_h[seg]
+            cols[s, :length] = st.b_cols_h[seg]
+            vals[s, :length] = st.b_vals_h[seg]
+        return self._put_sharded({"rows": rows, "cols": cols, "vals": vals})
+
+    def _estimated_out_cap(self, st: "_MatmulSetup", plan) -> int:
+        """Per-shard output capacity from shard-local structure.
+
+        The replicate expand size (total products of the worst shard) is a
+        correct but hub-pessimal bound; past a threshold it is worth a host
+        pass of :func:`repro.core.spgemm.estimate_out_nnz` over each
+        shard's own blocks — the sketch can in principle under-estimate,
+        so the saturation ``RuntimeWarning`` downstream stays the safety
+        net.
+        """
+        from .spgemm import estimate_out_nnz, plan_matmul
+        expand = plan.expands["replicate"]
+        if expand <= (1 << 12):
+            return expand
+        m = len(self.local.row_space)
+        k, n = len(st.ks), len(st.b_col_space)
+        best = 0
+        for s in range(st.a_rows_h.shape[0]):
+            mask = st.a_rows_h[s] != int(SENT)
+            if not mask.any():
+                continue
+            p = plan_matmul(st.a_rows_h[s][mask], st.a_cols_h[s][mask],
+                            st.b_rows_h, st.b_cols_h, m, k, n, impl="bsr")
+            best = max(best, estimate_out_nnz(p))
+        return int(min(expand, max(8, _round_up(best or 1, 8))))
+
+    def _matmul_finish(self, out, st: "_MatmulSetup", out_cap: int
+                       ) -> "DistAssoc":
+        """Shared epilogue: overflow surfacing + result assembly (row
+        partition unchanged — every strategy emits row-sharded output)."""
         true_nnz = np.asarray(out.pop("true_nnz"))
         overflowed = bool((true_nnz > out_cap).any())
         if overflowed:
@@ -670,51 +1038,159 @@ class DistAssoc:
                 f"DistAssoc.matmul: a shard produced {worst} entries but "
                 f"out_capacity_per_shard is {out_cap}; excess entries were "
                 f"dropped — pass a larger out_capacity_per_shard",
-                RuntimeWarning, stacklevel=2)
+                RuntimeWarning, stacklevel=3)
         new_local = AssocTensor(out["rows"], out["cols"], out["vals"],
                                 out["nnz"], self.local.row_space,
-                                b.col_space, None)
+                                st.b_col_space, None)
         result = DistAssoc(new_local, self.mesh, row_bounds=self.row_bounds)
         result.overflow = overflowed
         return result
 
-    def _matmul_bsr(self, other, sr, *, kernel_impl: str = "auto",
-                    out_capacity_per_shard: Optional[int] = None) -> "DistAssoc":
-        """Shard-local tiled products through the pair-list BSR strategy.
+    @contract(collectives=0,
+              note="replicate strategy: shard-local expand-join, zero "
+                   "collectives; sharded-B strategies carry their own "
+                   "contracts (dist.matmul_all_to_all / dist.matmul_2d)")
+    def matmul(self, other, semiring=PLUS_TIMES, *, impl: str = "auto_dist",
+               kernel_impl: str = "auto",
+               grid: Optional[Tuple[int, int]] = None,
+               out_capacity_per_shard: Optional[int] = None) -> "DistAssoc":
+        """Array multiplication ``A ⊗.⊕ B``, communication-strategy-tuned.
 
-        Eager host loop: each shard's triples become a standalone
-        ``AssocTensor`` and run the full :func:`repro.core.spgemm.matmul`
-        planner (tile-pair lists → scalar-prefetch pair-list kernel, or
-        its ref/interpret twins per ``kernel_impl``).  Shard row supports
-        are disjoint, so the per-shard outputs re-stack onto the SAME row
-        partition with zero collectives; capacities are re-padded to the
-        max shard before stacking (static shapes stay uniform).
+        ``other`` may be an ``AssocTensor``, host ``Assoc``, or another
+        ``DistAssoc`` (mesh-resident B is reused in place on the sharded
+        paths).  ``impl`` picks the communication strategy:
+
+        ``"auto_dist"`` (default)
+            host cost model (:func:`repro.core.spgemm.plan_dist_matmul`)
+            chooses per multiply from exact product counts; the choice
+            lands in ``PLAN_STATS["dist_replicate"/"dist_all_to_all"/
+            "dist_2d"]``.
+        ``"replicate"``
+            broadcast-B, shard-local product, zero collectives (the
+            Graphulo tablet-server pattern).
+        ``"all_to_all"``
+            B sharded by contraction range; one packed ``all_to_all`` of
+            partial products.
+        ``"2d"``
+            SUMMA-style ``(pr, pc)`` grid (``grid=`` forces it), ``pc−1``
+            ring ``ppermute`` shifts of B blocks; A never moves.
+        ``"auto"`` / ``"coo"`` / ``"bsr"`` (legacy spelling)
+            replicate strategy with that shard-local compute: ``coo`` the
+            expand-join program, ``bsr`` the tiled pair-list program
+            (``kernel_impl`` forwards to the kernel dispatch), ``auto``
+            the ``_BSR_AUTO_EXPAND`` crossover.
         """
-        from .spgemm import matmul as spgemm_matmul
-        b = self._as_replicated_operand(other)
+        if impl not in ("auto_dist", "replicate", "all_to_all", "2d",
+                        "auto", "coo", "bsr"):
+            raise ValueError(
+                f"unknown DistAssoc matmul impl {impl!r}; expected "
+                f"auto_dist/replicate/all_to_all/2d or legacy auto/coo/bsr")
+        sr = get_semiring(semiring)
+        st = self._matmul_setup(other)
         n_shards = self.mesh.shape["data"]
-        outs = []
+        plan = plan_dist_matmul(st.a_rows_h, st.a_cols_h, st.counts,
+                                st.b_rows_h, len(st.ks), n_shards,
+                                b_resident=st.b_resident, grid=grid,
+                                a2a_bounds=st.a2a_bounds)
+        if impl == "auto_dist":
+            strategy, local = plan.strategy, "auto"
+        elif impl in ("replicate", "all_to_all", "2d"):
+            strategy, local = impl, "auto"
+        else:  # legacy spellings pin the replicate strategy's local compute
+            strategy, local = "replicate", impl
+        from .plan import _bump  # lazy: plan.py imports this module
+        _bump(f"dist_{strategy}")
+        out_cap = out_capacity_per_shard or self._estimated_out_cap(st, plan)
+
+        if strategy == "all_to_all":
+            b_dict, bm = self._a2a_b_operand(st, sr)
+            go = _matmul_a2a_prog(self.mesh, sr, plan.expands["all_to_all"],
+                                  plan.bucket_cap, out_cap, n_shards)
+            out = go(st.a_rows_h, st.a_cols_h, np.asarray(st.a_loc.vals),
+                     b_dict, bm, jnp.asarray(self.row_bounds, jnp.int32))
+            return self._matmul_finish(out, st, out_cap)
+        if strategy == "2d":
+            pr, pc = plan.grid
+            b_dict = self._stage_b_blocks(st, sr, pr, pc, plan.block_cap)
+            a_dict = {"rows": st.a_loc.rows, "cols": st.a_cols,
+                      "vals": st.a_loc.vals}
+            go = _matmul_ring_prog(self.mesh, sr, pr, pc,
+                                   plan.expands["2d"], out_cap)
+            out = go(a_dict, b_dict)
+            return self._matmul_finish(out, st, out_cap)
+
+        # replicate strategy: coo program vs tiled pair-list program
+        expand = plan.expands["replicate"]
+        if local == "bsr" or (local == "auto" and expand >= _BSR_AUTO_EXPAND):
+            return self._matmul_bsr(st, sr, kernel_impl=kernel_impl,
+                                    out_cap=out_cap)
+        b = self._b_replicated(st)
+        a_dict = {"rows": st.a_loc.rows, "cols": st.a_cols,
+                  "vals": st.a_loc.vals}
+        go = _matmul_prog(self.mesh, sr, expand, out_cap)
+        out = go(a_dict, b.rows, b.cols, b.vals)
+        return self._matmul_finish(out, st, out_cap)
+
+    def _matmul_bsr(self, st: "_MatmulSetup", sr, *,
+                    kernel_impl: str = "auto", out_cap: int) -> "DistAssoc":
+        """Replicate-strategy tiled product as ONE cached shard_map program.
+
+        The per-shard host planning survives (tile-pair lists are cheap
+        numpy over rank triples), but execution is a single dispatch of
+        :func:`_matmul_bsr_prog` for the whole mesh instead of the old
+        eager per-shard planner+kernel loop.  Per-shard plans pad to
+        uniform static sizes: invalid A entries scatter out of bounds
+        (dropped), dummy pairs accumulate into an extra C slot (discarded),
+        padded C blocks land past ``(m, n)`` (filtered).  B's entry→tile
+        lists depend only on B's triples, so its packed tiles build once
+        and broadcast.
+        """
+        from .spgemm import pack_tiles, plan_matmul
+        n_shards = self.mesh.shape["data"]
+        m = len(self.local.row_space)
+        k, n = len(st.ks), len(st.b_col_space)
+        plans = []
         for s in range(n_shards):
-            local = jax.tree.map(lambda x: x[s], self.local)
-            outs.append(spgemm_matmul(local, b, sr, impl="bsr",
-                                      kernel_impl=kernel_impl,
-                                      out_capacity=out_capacity_per_shard))
-        cap = max(o.rows.shape[0] for o in outs)
-        rows, cols, vals, nnz = [], [], [], []
-        for o in outs:
-            r, c, v = pad_to_cap(o.rows, o.cols, o.vals, cap, sr.zero)
-            rows.append(r); cols.append(c); vals.append(v); nnz.append(o.nnz)
-        stacked = AssocTensor(jnp.stack(rows), jnp.stack(cols),
-                              jnp.stack(vals), jnp.stack(nnz),
-                              self.local.row_space, outs[0].col_space, None)
-        sharded = jax.tree.map(
-            lambda x: jax.device_put(
-                x, NamedSharding(self.mesh,
-                                 P(*(("data",) + (None,) * (x.ndim - 1))))),
-            stacked)
-        result = DistAssoc(sharded, self.mesh, row_bounds=self.row_bounds)
-        result.overflow = any(getattr(o, "overflow", False) for o in outs)
-        return result
+            mask = st.a_rows_h[s] != int(SENT)
+            plans.append(plan_matmul(st.a_rows_h[s][mask],
+                                     st.a_cols_h[s][mask],
+                                     st.b_rows_h, st.b_cols_h,
+                                     m, k, n, impl="bsr"))
+        n_a = max(max(len(p.a_blocks) for p in plans), 1)
+        n_c = max(max(len(p.c_blocks) for p in plans), 1)
+        n_pairs = max(max(len(p.pair_a) for p in plans), 1)
+        cap_a = st.a_rows_h.shape[1]
+
+        tof = np.full((n_shards, cap_a), n_a, np.int32)   # OOB → dropped
+        lr = np.zeros((n_shards, cap_a), np.int32)
+        lc = np.zeros((n_shards, cap_a), np.int32)
+        pa = np.zeros((n_shards, n_pairs), np.int32)
+        pb = np.zeros((n_shards, n_pairs), np.int32)
+        pcc = np.full((n_shards, n_pairs), n_c, np.int32)  # dummy C slot
+        cblk = np.full((n_shards, n_c, 2), 1 << 20, np.int32)
+        for s, p in enumerate(plans):
+            ne, np_, nc_ = len(p.a_tile_of), len(p.pair_a), len(p.c_blocks)
+            tof[s, :ne] = p.a_tile_of
+            lr[s, :ne] = p.a_lr
+            lc[s, :ne] = p.a_lc
+            pa[s, :np_] = p.pair_a
+            pb[s, :np_] = p.pair_b
+            pcc[s, :np_] = p.pair_c
+            cblk[s, :nc_] = p.c_blocks
+        b_tiles = pack_tiles(jnp.asarray(st.b_vals_h, jnp.float32),
+                             plans[0].b_tile_of, plans[0].b_lr,
+                             plans[0].b_lc, len(plans[0].b_blocks),
+                             TILE, TILE, sr.zero)
+        sharded = self._put_sharded({"av": np.asarray(st.a_loc.vals),
+                                     "tof": tof, "lr": lr, "lc": lc,
+                                     "pa": pa, "pb": pb, "pcc": pcc,
+                                     "cblk": cblk})
+        go = _matmul_bsr_prog(self.mesh, sr, n_a, n_c, m, n, out_cap,
+                              kernel_impl)
+        out = go(sharded["av"], sharded["tof"], sharded["lr"],
+                 sharded["lc"], b_tiles, sharded["pa"], sharded["pb"],
+                 sharded["pcc"], sharded["cblk"])
+        return self._matmul_finish(out, st, out_cap)
 
     def __matmul__(self, other):
         # thin wrapper over the one-node graph (see __add__)
@@ -723,25 +1199,61 @@ class DistAssoc:
         return NotImplemented
 
     @contract(collectives=1, note="fused epilogue: exactly one psum-family op")
-    def matmul_reduce(self, other, axis: int = 1,
-                      semiring=PLUS_TIMES) -> jnp.ndarray:
+    def matmul_reduce(self, other, axis: int = 1, semiring=PLUS_TIMES, *,
+                      impl: str = "auto_dist") -> jnp.ndarray:
         """Fused ``⊕-reduce(A ⊗.⊕ B, axis)`` — one collective, no C.
 
-        Shards ⊕-fold their local products straight into a dense vector
-        (no merge, no sort — ⊕ over every product per row/col IS the
-        answer) and the partials combine with exactly one psum-family
-        collective.  ``axis=1`` → vector over the row keyspace (disjoint
-        supports: the collective is a concatenation); ``axis=0`` → vector
-        over B's col keyspace (true cross-shard ⊕).
+        Shards ⊕-fold products straight into a dense vector (no merge, no
+        sort — ⊕ over every product per row/col IS the answer) and the
+        partials combine with exactly one psum-family collective.
+        ``axis=1`` → vector over the row keyspace; ``axis=0`` → vector
+        over B's col keyspace.
+
+        ``impl`` follows :meth:`matmul`: ``"replicate"`` broadcasts B and
+        each shard folds its own rows' products; ``"all_to_all"`` keeps B
+        sharded by contraction range — each shard folds the products of
+        ITS block, and the same single collective that merges the partials
+        replaces the partial-product exchange, so the sharded variant is
+        no chattier.  ``"auto_dist"`` compares the two staging costs (the
+        2D path has nothing to add here — there is no C to ring-shift
+        for).
         """
         assert axis in (0, 1), axis
+        if impl not in ("auto_dist", "replicate", "all_to_all"):
+            raise ValueError(
+                f"unknown matmul_reduce impl {impl!r}; expected "
+                f"auto_dist/replicate/all_to_all")
         sr = get_semiring(semiring)
-        a_rows, a_cols, a_vals, b, expand = self._matmul_prologue(other)
+        st = self._matmul_setup(other)
+        n_shards = self.mesh.shape["data"]
+        plan = plan_dist_matmul(st.a_rows_h, st.a_cols_h, st.counts,
+                                st.b_rows_h, len(st.ks), n_shards,
+                                b_resident=st.b_resident,
+                                a2a_bounds=st.a2a_bounds)
+        if impl == "auto_dist":
+            strategy = ("all_to_all"
+                        if n_shards > 1 and (plan.costs["all_to_all"]
+                                             < plan.costs["replicate"])
+                        else "replicate")
+        else:
+            strategy = impl
+        from .plan import _bump  # lazy: plan.py imports this module
+        _bump(f"dist_{strategy}")
         n_out = (len(self.local.row_space) if axis == 1
-                 else len(b.col_space))
+                 else len(st.b_col_space))
 
-        a_dict = {"rows": a_rows, "cols": a_cols, "vals": a_vals}
-        go = _matmul_reduce_prog(self.mesh, sr, expand, n_out, axis)
+        if strategy == "all_to_all":
+            b_dict, bm = self._a2a_b_operand(st, sr)
+            go = _matmul_reduce_a2a_prog(self.mesh, sr,
+                                         plan.expands["all_to_all"],
+                                         n_out, axis)
+            return go(st.a_rows_h, st.a_cols_h, np.asarray(st.a_loc.vals),
+                      b_dict, bm)
+        b = self._b_replicated(st)
+        a_dict = {"rows": st.a_loc.rows, "cols": st.a_cols,
+                  "vals": st.a_loc.vals}
+        go = _matmul_reduce_prog(self.mesh, sr, plan.expands["replicate"],
+                                 n_out, axis)
         return go(a_dict, b.rows, b.cols, b.vals)
 
     @contract(collectives=1, note="fused reduce= epilogue (AA^T)")

@@ -76,7 +76,11 @@ PLAN_STATS = {
     "plan_hits": 0, "plan_misses": 0,
     "pushdown": 0, "fused_matmul_reduce": 0,
     "fused_select_matmul": 0, "ewise_fused": 0,
-    "reduce_through_add": 0,
+    "reduce_through_add": 0, "fused_select_ewise": 0,
+    # distributed matmul strategy choices (DistAssoc.matmul/_reduce):
+    # which communication pattern the cost model — or an explicit impl=
+    # override — actually ran
+    "dist_replicate": 0, "dist_all_to_all": 0, "dist_2d": 0,
 }
 
 
@@ -389,6 +393,15 @@ def _eval_inner(node: LazyExpr, memo: dict):
             return arr.gather_replicated().transpose()
         return arr.transpose()
     if isinstance(node, EwiseAdd):
+        a_node, asels = _strip_select(node.a)
+        b_node, bsels = _strip_select(node.b)
+        if asels is not None or bsels is not None:
+            # the pushdown's (A ⊕ B)[sel] → A[sel] ⊕ B[sel] shape: fold
+            # the selections into the one canonical merge instead of
+            # materializing each slice (compact + lexsort per operand)
+            a, b = _eval(a_node, memo), _eval(b_node, memo)
+            _require_same_layer(a, b, "⊕")
+            return _fused_select_add(a, asels, b, bsels, node.semiring)
         a, b = _eval(node.a, memo), _eval(node.b, memo)
         _require_same_layer(a, b, "⊕")
         return a.add(b, node.semiring)
@@ -655,6 +668,134 @@ def _dist_fused_matmul(a, asels, b, bsels, sr, axis=None):
     if axis is None:
         return d.matmul(bt, sr)
     return d.matmul_reduce(bt, axis, sr)
+
+
+# ---------------------------------------------------------------------------
+# Fused select→ewise-add (the pushdown's (A ⊕ B)[sel] → A[sel] ⊕ B[sel]
+# shape): the slices never materialize — compiled keep masks filter each
+# operand's entries inside the ONE canonical merge, exactly how matmul
+# operands fuse.  Saves a compact + lexsort per sliced operand.
+# ---------------------------------------------------------------------------
+
+def _fused_select_add(a, asels, b, bsels, sr):
+    sr = get_semiring(sr)
+    layer = _layer(a)
+    numeric = (a.local.numeric and b.local.numeric if layer == "dist"
+               else a.numeric and b.numeric)
+    if not numeric:
+        # string ⊕ concatenates (order-sensitive, no zero to drop): keep
+        # the materializing path rather than re-deriving its semantics
+        aa = a._select_eager(asels) if asels is not None else a
+        bb = b._select_eager(bsels) if bsels is not None else b
+        return aa.add(bb, sr)
+    _bump("fused_select_ewise")
+    if layer == "host":
+        return _host_fused_select_add(a, asels, b, bsels, sr)
+    if layer == "device":
+        return _device_fused_select_add(a, asels, b, bsels, sr)
+    return _dist_fused_select_add(a, asels, b, bsels, sr)
+
+
+def _host_fused_select_add(a, asels, b, bsels, sr):
+    from .assoc import Assoc
+
+    acoo = a.adj.tocoo()
+    bcoo = b.adj.tocoo()
+    a_keep = _host_entry_keep(a, acoo, asels)
+    b_keep = _host_entry_keep(b, bcoo, bsels)
+    row_u, _, _ = sorted_union(a.row, b.row)
+    col_u, _, _ = sorted_union(a.col, b.col)
+    rs, cs, vs = [], [], []
+    for t, coo, keep in ((a, acoo, a_keep), (b, bcoo, b_keep)):
+        rmap = np.searchsorted(row_u, t.row)
+        cmap = np.searchsorted(col_u, t.col)
+        er, ec, ev = coo.row, coo.col, coo.data
+        if keep is not None:
+            er, ec, ev = er[keep], ec[keep], ev[keep]
+        rs.append(rmap[er])
+        cs.append(cmap[ec])
+        vs.append(ev)
+    if not sum(len(x) for x in rs):
+        return Assoc()
+    r, c, v = canonicalize_np(np.concatenate(rs), np.concatenate(cs),
+                              np.concatenate(vs), combine=sr.add_np)
+    keep = v != sr.zero
+    return Assoc._assemble(row_u, col_u, r[keep], c[keep], v[keep])
+
+
+def _masked_rows(t, sels) -> jnp.ndarray:
+    """Rows array with deselected entries sentinel-masked in place (the
+    canonical merge skips SENT — no compact, no per-operand sort)."""
+    keep = _tensor_entry_keep(t, sels)
+    if keep is None:
+        return t.rows
+    full = np.zeros(t.rows.shape[0], bool)
+    full[:len(keep)] = keep
+    return jnp.where(jnp.asarray(full), t.rows, SENT)
+
+
+def _device_fused_select_add(a, asels, b, bsels, sr):
+    from .assoc_tensor import AssocTensor
+
+    rs_space, ra_m, rb_m = a.row_space.union(b.row_space)
+    cs_space, ca_m, cb_m = a.col_space.union(b.col_space)
+
+    def remap(t, sels, rm, cm):
+        rows = _masked_rows(t, sels)
+        ok = rows != SENT
+        rmj = jnp.asarray(rm) if len(rm) else jnp.zeros(1, jnp.int32)
+        cmj = jnp.asarray(cm) if len(cm) else jnp.zeros(1, jnp.int32)
+        rr = jnp.where(ok, rmj[jnp.clip(rows, 0, rmj.shape[0] - 1)], SENT)
+        cc = jnp.where(ok, cmj[jnp.clip(t.cols, 0, cmj.shape[0] - 1)], SENT)
+        return rr, cc, t.vals
+    ar, ac, av = remap(a, asels, ra_m, ca_m)
+    br, bc, bv = remap(b, bsels, rb_m, cb_m)
+    rows = jnp.concatenate([ar, br])
+    cols = jnp.concatenate([ac, bc])
+    vals = jnp.concatenate([av, bv])
+    r, c, v, nnz = dedup_sorted_coo(rows, cols, vals, sr.add, zero=sr.zero)
+    return AssocTensor(r, c, v, nnz, rs_space, cs_space, a.val_space)
+
+
+def _dist_masked_local(d, sels):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from .assoc_tensor import AssocTensor
+
+    loc = d.local
+    if sels is None:
+        return loc
+    rc = compile_selector(sels[0], loc.row_space)
+    cc = compile_selector(sels[1], loc.col_space)
+    rows_h = np.asarray(loc.rows).astype(np.int64)
+    cols_h = np.asarray(loc.cols).astype(np.int64)
+    keep = _entry_keep(rc, cc, rows_h, cols_h)
+    if keep is None:
+        return loc
+    keep &= rows_h != int(SENT)
+    keep_dev = jax.device_put(jnp.asarray(keep),
+                              NamedSharding(d.mesh, P("data", None)))
+    return AssocTensor(jnp.where(keep_dev, loc.rows, SENT), loc.cols,
+                       loc.vals, loc.nnz, loc.row_space, loc.col_space,
+                       loc.val_space)
+
+
+def _dist_fused_select_add(a, asels, b, bsels, sr):
+    from .assoc_tensor import AssocTensor
+    from .dist_assoc import DistAssoc, _ewise_prog
+
+    la = _dist_masked_local(a, asels)
+    lb = _dist_masked_local(b, bsels)
+    go = _ewise_prog(a.mesh, sr, "add")
+    out = go({"rows": la.rows, "cols": la.cols, "vals": la.vals,
+              "nnz": la.nnz},
+             {"rows": lb.rows, "cols": lb.cols, "vals": lb.vals,
+              "nnz": lb.nnz})
+    new_local = AssocTensor(out["rows"], out["cols"], out["vals"],
+                            out["nnz"], la.row_space, la.col_space,
+                            la.val_space)
+    return DistAssoc(new_local, a.mesh, row_bounds=a.row_bounds)
 
 
 # ---------------------------------------------------------------------------

@@ -65,7 +65,8 @@ from .coo import SENT, dedup_sorted_coo, expand_join_coo
 from .semiring import PLUS_TIMES, Semiring, get_semiring, scatter_combine
 
 __all__ = ["MatmulPlan", "plan_matmul", "matmul", "matmul_reduce",
-           "bsr_matmul_coo", "pack_tiles", "estimate_out_nnz", "TILE"]
+           "bsr_matmul_coo", "pack_tiles", "estimate_out_nnz", "TILE",
+           "DistPlan", "plan_dist_matmul", "suggest_grid"]
 
 TILE = 128  # MXU-aligned block edge: bm = bk = bn = 128
 
@@ -667,3 +668,198 @@ def matmul_reduce(a, b, axis: int, semiring=PLUS_TIMES, *,
     idx = jnp.asarray(o_uniq[:, None] * TILE, jnp.int32) + offs[None, :]
     vec = scatter_combine(vec, idx, blocks, sr)
     return vec[:out_len]
+
+
+# ---------------------------------------------------------------------------
+# Distribution cost model: which communication pattern should a sharded
+# product use?  The planner already computes exact per-entry product counts
+# on host (two searchsorteds over B's contraction ranks); this section turns
+# them into triples-moved estimates for the three DistAssoc strategies and
+# picks the cheapest — the D4M.jl / Graphulo observation that the win at
+# scale comes from moving the *smaller* data (B slices or partial products),
+# not from one hard-coded pattern.
+# ---------------------------------------------------------------------------
+
+def _divisors(n: int):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+# Weight of per-shard sort work (expand-join argsorts + the canonical
+# dedup merge) relative to one moved triple.  The critical-path sort
+# sizes are the SAME padded capacities the movement terms use, so skew
+# prices both: a hub row inflates a bucket, the bucket inflates the
+# exchange AND the merge that consumes it.  Sorting a resident triple
+# costs more than copying one on every backend we run (XLA's CPU sort
+# badly so, TPU less), so the weight leans the chooser toward the
+# strategy with the smallest per-shard merge when movement is close.
+_SORT_WEIGHT = 8.0
+
+# Per-shard expand size above which DistAssoc's replicate path swaps its
+# local compute from the coo expand-join to the tiled pair-list (BSR)
+# program.  That swap re-plans the pair lists on host — a scan of ALL of
+# B per shard — so the distribution cost model charges replicate for it
+# (see plan_dist_matmul); the sharded strategies never pay it because
+# each shard only ever contracts one B block.
+BSR_AUTO_EXPAND = 1 << 14
+
+
+@dataclasses.dataclass
+class DistPlan:
+    """Host-side communication plan for one sharded ``A ⊗.⊕ B``.
+
+    ``costs`` holds the modeled data movement per strategy in **triples**
+    (COO entries: 12 bytes each — the unit every term shares, so bytes
+    cancel).  Replicated/staged movement and collective movement are
+    counted at the same weight, but the collective terms use the *padded*
+    capacities (``bucket_cap`` / ``block_cap``) — the model is honest
+    about skew: a hub row that concentrates partial products into one
+    bucket inflates the all-to-all estimate exactly as it inflates the
+    real exchange.
+    """
+
+    strategy: str                  # "replicate" | "all_to_all" | "2d"
+    grid: Tuple[int, int]          # (pr, pc); (n_shards, 1) off the 2d path
+    bucket_cap: int                # all_to_all per-(src, dest) bucket slots
+    block_cap: int                 # 2d staged B-block capacity (triples)
+    expands: dict                  # strategy → per-shard expand-join slots
+    costs: dict                    # strategy → modeled triples moved
+
+    @property
+    def expand(self) -> int:
+        return self.expands[self.strategy]
+
+
+def suggest_grid(n_shards: int, k: int, a_cols: np.ndarray,
+                 counts: np.ndarray, b_rows: np.ndarray):
+    """Pick the 2D process grid ``(pr, pc)`` from nnz structure.
+
+    Models each divisor split ``pr·pc = n_shards`` (``pc`` = contraction
+    blocks ring-shifted through the shards, ``pr`` = replication factor of
+    each block at staging) and returns the grid minimizing::
+
+        pr·nnz(B)  +  n_shards·(pc−1)·block_cap  +  w·pc·round_expand
+
+    — staged B replication vs ring traffic vs per-shard merge work
+    (``w`` = :data:`_SORT_WEIGHT`; the final dedup consumes all ``pc``
+    round buffers), all in triples.  Also returns
+    the per-round expand size and staged block capacity for the winner, so
+    the caller sizes the program's static buffers from the same exact
+    counts the model used.  ``a_cols``/``counts`` are the ``[P, cap]``
+    host contraction ranks and per-entry product counts (SENT entries
+    carry count 0); ``b_rows`` the sorted valid contraction ranks of B.
+    """
+    nnz_b = len(b_rows)
+    dest = np.broadcast_to(np.arange(counts.shape[0])[:, None],
+                           counts.shape)
+    best = None
+    for pc in _divisors(n_shards):
+        pr = n_shards // pc
+        bnds = np.linspace(0, k, pc + 1).astype(np.int64)
+        kb = np.searchsorted(bnds[1:], a_cols, side="right").clip(0, pc - 1)
+        table = np.zeros((counts.shape[0], pc), np.int64)
+        np.add.at(table, (dest, kb), counts)
+        round_expand = int(max(8, _round_up(int(table.max(initial=0)) or 1, 8)))
+        blk_nnz = np.diff(np.searchsorted(b_rows, bnds))
+        block_cap = int(max(8, _round_up(int(blk_nnz.max(initial=0)) or 1, 8)))
+        cost = (pr * nnz_b + n_shards * (pc - 1) * block_cap
+                + _SORT_WEIGHT * pc * round_expand)
+        if best is None or cost < best[0]:
+            best = (cost, (pr, pc), round_expand, block_cap)
+    return best[1], best[2], best[3], best[0]
+
+
+def plan_dist_matmul(a_rows: np.ndarray, a_cols: np.ndarray,
+                     counts: np.ndarray, b_rows: np.ndarray, k: int,
+                     n_shards: int, *, b_resident: bool = False,
+                     grid: Optional[Tuple[int, int]] = None,
+                     a2a_bounds: Optional[np.ndarray] = None) -> DistPlan:
+    """Choose replicate / all-to-all / 2D for one sharded product.
+
+    Inputs are pure host metadata (the sharded twin of
+    :func:`plan_matmul`'s entry lists): ``a_rows``/``a_cols`` the
+    ``[n_shards, cap]`` SENT-padded rank arrays with cols on the
+    contraction space, ``counts`` the exact per-entry B-run lengths, and
+    ``b_rows`` B's sorted valid contraction ranks.  Modeled cost =
+    movement + ``w``·(per-shard sort work), ``w`` = :data:`_SORT_WEIGHT`::
+
+        replicate:   P·nnz(B)                        + w·expand
+        all_to_all:  P·nnz(A) + stage(B) + P²·bucket_cap
+                                         + w·(expand + P·bucket_cap)
+        2d(pr, pc):  pr·nnz(B) + P·(pc−1)·block_cap + w·pc·round_expand
+
+    The sort terms are what makes the chooser load-balance-aware: A's
+    row skew concentrates ``replicate``'s and ``2d``'s expand on the hub
+    shard (A never moves), while ``all_to_all`` re-buckets products by
+    contraction block — its expand is the *column* max of the product
+    table, not the row max.
+
+    ``stage(B)`` drops to 0 when B is a resident ``DistAssoc`` on the same
+    mesh (its row partition IS a contraction-range partition — the rank
+    maps of :meth:`KeySpace.union` are monotone, so reranking preserves
+    it and the all-to-all path reuses B's shards in place); in that case
+    ``a2a_bounds`` carries B's actual partition boundaries in the merged
+    rank space so the product table matches the blocks the program will
+    really contract.  ``grid`` forces the 2D grid instead of
+    :func:`suggest_grid`.
+    """
+    P = n_shards
+    nnz_a = int((a_rows != int(SENT)).sum())
+    nnz_b = len(b_rows)
+    per_shard = counts.sum(axis=1)
+    expand_rep = int(max(8, _round_up(int(per_shard.max(initial=0)) or 1, 8)))
+
+    # all_to_all: shard t computes every product whose contraction rank
+    # falls in k-block t; the [dest, src] product table sizes both the
+    # compute expansion (column sums) and the exchange buckets (max cell)
+    bnds = (np.asarray(a2a_bounds, np.int64) if a2a_bounds is not None
+            else np.linspace(0, k, P + 1).astype(np.int64))
+    kb = np.searchsorted(bnds[1:], a_cols, side="right").clip(0, max(P - 1, 0))
+    dest = np.broadcast_to(np.arange(counts.shape[0])[:, None], counts.shape)
+    table = np.zeros((P, P), np.int64)
+    np.add.at(table, (dest, kb), counts)
+    bucket_cap = int(max(8, _round_up(int(table.max(initial=0)) or 1, 8)))
+    expand_a2a = int(max(8, _round_up(
+        int(table.sum(axis=0).max(initial=0)) or 1, 8)))
+
+    if grid is not None:
+        pr, pc = grid
+        if pr * pc != P:
+            raise ValueError(f"grid {grid} does not tile {P} shards")
+        # forced grid: size its buffers directly
+        bnds2 = np.linspace(0, k, pc + 1).astype(np.int64)
+        kb2 = np.searchsorted(bnds2[1:], a_cols,
+                              side="right").clip(0, pc - 1)
+        t2 = np.zeros((P, pc), np.int64)
+        np.add.at(t2, (dest, kb2), counts)
+        round_expand = int(max(8, _round_up(int(t2.max(initial=0)) or 1, 8)))
+        blk_nnz = np.diff(np.searchsorted(b_rows, bnds2))
+        block_cap = int(max(8, _round_up(
+            int(blk_nnz.max(initial=0)) or 1, 8)))
+        cost_2d = (pr * nnz_b + P * (pc - 1) * block_cap
+                   + _SORT_WEIGHT * pc * round_expand)
+        grid_2d = (pr, pc)
+    else:
+        grid_2d, round_expand, block_cap, cost_2d = suggest_grid(
+            P, k, a_cols, counts, b_rows)
+
+    cost_rep = float(P * nnz_b + _SORT_WEIGHT * expand_rep)
+    if expand_rep >= BSR_AUTO_EXPAND:
+        # replicate's local compute will switch to the pair-list program,
+        # whose host planning rescans B once per shard
+        cost_rep += float(_SORT_WEIGHT * P * nnz_b)
+    costs = {
+        "replicate": cost_rep,
+        "all_to_all": float(P * nnz_a + (0 if b_resident else nnz_b)
+                            + P * P * bucket_cap
+                            + _SORT_WEIGHT * (expand_a2a
+                                              + P * bucket_cap)),
+        "2d": float(cost_2d),
+    }
+    if P == 1:
+        strategy = "replicate"     # nothing to distribute
+    else:
+        strategy = min(costs, key=costs.get)
+    expands = {"replicate": expand_rep, "all_to_all": expand_a2a,
+               "2d": round_expand}
+    return DistPlan(strategy=strategy, grid=grid_2d, bucket_cap=bucket_cap,
+                    block_cap=block_cap, expands=expands, costs=costs)

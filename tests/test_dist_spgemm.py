@@ -1,0 +1,275 @@
+"""Communication-optimal distributed spgemm: cost model + strategy parity.
+
+Three tiers:
+
+* pure-host unit tests for :func:`plan_dist_matmul` / :func:`suggest_grid`
+  (no devices needed — the cost model is numpy-only metadata);
+* in-process 1-device checks (strategy dispatch degenerates to replicate,
+  PLAN_STATS counters, fused ``(A ⊕ B)[sel]``);
+* an 8-shard subprocess run (device count locks at first jax init) that
+  exercises ragged shard sizes, a non-divisible contraction range, empty
+  shards, resident-``DistAssoc`` and staged-``AssocTensor`` B operands,
+  every ``impl=`` override, 2D grid overrides and the fused reduce
+  epilogues — all against the eager host ``Assoc`` oracle.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import Assoc, AssocTensor, PLAN_STATS, Range, REGISTRY
+from repro.core.coo import SENT
+from repro.core.spgemm import plan_dist_matmul, suggest_grid
+
+rng = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# cost model (host-only)
+# ---------------------------------------------------------------------------
+
+def _synthetic(P=4, cap=8, k=16, nnz_per_shard=3, nnz_b=20, seed=0):
+    r = np.random.default_rng(seed)
+    a_rows = np.full((P, cap), int(SENT), np.int64)
+    a_cols = np.zeros((P, cap), np.int64)
+    counts = np.zeros((P, cap), np.int64)
+    for s in range(P):
+        a_rows[s, :nnz_per_shard] = np.arange(nnz_per_shard)
+        a_cols[s, :nnz_per_shard] = r.integers(0, k, nnz_per_shard)
+        counts[s, :nnz_per_shard] = r.integers(1, 4, nnz_per_shard)
+    b_rows = np.sort(r.integers(0, k, nnz_b))
+    return a_rows, a_cols, counts, b_rows, k
+
+
+def test_plan_single_shard_always_replicates():
+    a_rows, a_cols, counts, b_rows, k = _synthetic(P=1)
+    plan = plan_dist_matmul(a_rows, a_cols, counts, b_rows, k, 1)
+    assert plan.strategy == "replicate"
+    assert set(plan.costs) == {"replicate", "all_to_all", "2d"}
+    assert set(plan.expands) == {"replicate", "all_to_all", "2d"}
+
+
+def test_plan_large_b_prefers_sharded_strategy():
+    # tiny A, huge B: replicating B to every shard is the one strategy
+    # whose cost scales with P·nnz(B) — the model must not pick it.
+    a_rows, a_cols, counts, _, k = _synthetic(P=8, nnz_per_shard=2)
+    b_rows = np.sort(rng.integers(0, k, 100_000))
+    plan = plan_dist_matmul(a_rows, a_cols, counts, b_rows, k, 8,
+                            b_resident=True)
+    assert plan.strategy in ("all_to_all", "2d")
+    assert plan.costs[plan.strategy] < plan.costs["replicate"]
+    # chosen strategy is the argmin of the published cost dict
+    assert plan.costs[plan.strategy] == min(plan.costs.values())
+
+
+def test_plan_resident_b_drops_staging_cost():
+    a_rows, a_cols, counts, b_rows, k = _synthetic(P=4, nnz_b=50)
+    res = plan_dist_matmul(a_rows, a_cols, counts, b_rows, k, 4,
+                           b_resident=True)
+    staged = plan_dist_matmul(a_rows, a_cols, counts, b_rows, k, 4,
+                              b_resident=False)
+    assert staged.costs["all_to_all"] - res.costs["all_to_all"] == len(b_rows)
+    assert res.costs["replicate"] == staged.costs["replicate"]
+
+
+def test_plan_forced_grid():
+    a_rows, a_cols, counts, b_rows, k = _synthetic(P=4)
+    plan = plan_dist_matmul(a_rows, a_cols, counts, b_rows, k, 4,
+                            grid=(2, 2))
+    assert plan.grid == (2, 2)
+    with pytest.raises(ValueError):
+        plan_dist_matmul(a_rows, a_cols, counts, b_rows, k, 4, grid=(3, 2))
+
+
+def test_suggest_grid_tiles_mesh_and_sizes_blocks():
+    a_rows, a_cols, counts, b_rows, k = _synthetic(P=8, nnz_b=64)
+    (pr, pc), round_expand, block_cap, cost = suggest_grid(
+        8, k, a_cols, counts, b_rows)
+    assert pr * pc == 8
+    assert round_expand >= 8 and block_cap >= 8
+    # block_cap covers the fullest contraction block of the winning split
+    bnds = np.linspace(0, k, pc + 1).astype(np.int64)
+    assert block_cap >= int(np.diff(np.searchsorted(b_rows, bnds)).max())
+    from repro.core.spgemm import _SORT_WEIGHT
+    assert cost == (pr * len(b_rows) + 8 * (pc - 1) * block_cap
+                    + _SORT_WEIGHT * pc * round_expand)
+
+
+# ---------------------------------------------------------------------------
+# 1-device dispatch + fused select⊕add (satellite)
+# ---------------------------------------------------------------------------
+
+def _triples(seed, n=60, nr=30, nc=30):
+    r = np.random.default_rng(seed)
+    return (r.integers(0, nr, n).astype(str),
+            r.integers(0, nc, n).astype(str),
+            r.uniform(0.5, 5.0, n))
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    import jax
+    return jax.make_mesh((1,), ("data",))
+
+
+def _close(got, want, tol=1e-3):
+    assert set(got) == set(want), sorted(set(got) ^ set(want))[:8]
+    for k in want:
+        assert abs(got[k] - want[k]) <= tol * (1 + abs(want[k])), \
+            (k, got[k], want[k])
+
+
+def test_single_device_strategies_agree(mesh1):
+    from repro.core.dist_assoc import DistAssoc
+    ar, ac, av = _triples(3)
+    br, bc, bv = _triples(5, nc=20)
+    want = Assoc(ar, ac, av, aggregate="sum").matmul(
+        Assoc(br, bc, bv, aggregate="sum")).to_dict()
+    da = DistAssoc.from_triples(ar, ac, av, mesh1, aggregate="sum")
+    bt = AssocTensor.from_triples(br, bc, bv, aggregate="sum", capacity=128)
+    for impl in ("auto_dist", "replicate", "all_to_all", "2d", "coo", "bsr"):
+        _close(da.matmul(bt, impl=impl).to_assoc().to_dict(), want)
+    # P == 1: auto must degenerate to replicate, and every call is counted
+    assert PLAN_STATS["dist_replicate"] >= 1
+    assert (PLAN_STATS["dist_replicate"] + PLAN_STATS["dist_all_to_all"]
+            + PLAN_STATS["dist_2d"]) == 6
+
+
+def test_matmul_bad_impl_rejected(mesh1):
+    from repro.core.dist_assoc import DistAssoc
+    ar, ac, av = _triples(3)
+    da = DistAssoc.from_triples(ar, ac, av, mesh1, aggregate="sum")
+    bt = AssocTensor.from_triples(*_triples(5), aggregate="sum",
+                                  capacity=128)
+    with pytest.raises(ValueError):
+        da.matmul(bt, impl="telepathy")
+
+
+SEL = Range("1", "2")
+
+
+def test_fused_select_add_parity(mesh1):
+    from repro.core.dist_assoc import DistAssoc
+    ar, ac, av = _triples(7)
+    # DistAssoc ⊕ is alignment-free (shards assume shared keyspaces /
+    # row_bounds, like the eager ``add``): draw B over the same key
+    # population so all three layers compare against one host oracle
+    perm = np.random.default_rng(9).permutation(len(ar))
+    br, bc = ar[perm], ac[perm]
+    bv = np.random.default_rng(13).uniform(0.5, 5.0, len(ar))
+    ha, hb = (Assoc(ar, ac, av, aggregate="sum"),
+              Assoc(br, bc, bv, aggregate="sum"))
+    want = ha.add(hb)._select_eager((SEL, slice(None))).to_dict()
+
+    # host layer: selected ⊕ runs in one canonicalize pass
+    got_h = (ha.lazy().add(hb.lazy()))[SEL, :].collect()
+    _close(got_h.to_dict(), want)
+    assert PLAN_STATS["fused_select_ewise"] >= 1
+
+    ta = AssocTensor.from_triples(ar, ac, av, aggregate="sum", capacity=128)
+    tb = AssocTensor.from_triples(br, bc, bv, aggregate="sum", capacity=128)
+    got_d = (ta.lazy().add(tb.lazy()))[SEL, :].collect()
+    _close(got_d.to_assoc().to_dict(), want)
+
+    Da = DistAssoc.from_triples(ar, ac, av, mesh1, aggregate="sum")
+    Db = DistAssoc.from_triples(br, bc, bv, mesh1, aggregate="sum")
+    got_D = (Da.lazy().add(Db.lazy()))[SEL, :].collect()
+    _close(got_D.to_assoc().to_dict(), want)
+    assert PLAN_STATS["fused_select_ewise"] >= 3
+
+    # explicit pre-sliced form fuses too
+    got_2 = ha.lazy()[SEL, :].add(hb.lazy()[SEL, :]).collect()
+    _close(got_2.to_dict(), want)
+
+
+# ---------------------------------------------------------------------------
+# 8-shard subprocess: ragged shards, non-divisible k, empty shards
+# ---------------------------------------------------------------------------
+
+PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    from repro.core import Assoc, AssocTensor, PLAN_STATS, REGISTRY
+    from repro.core.dist_assoc import DistAssoc
+
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(7)
+
+    def close(got, want, tol=1e-3, tag=""):
+        assert set(got) == set(want), (tag, sorted(set(got) ^ set(want))[:8])
+        for k in want:
+            assert abs(got[k] - want[k]) <= tol * (1 + abs(want[k])), \\
+                (tag, k, got[k], want[k])
+
+    # ragged: 37 row keys over 8 shards, k = 29 (neither divisible by 8)
+    ar = rng.integers(0, 37, 140).astype(str)
+    ac = rng.integers(0, 29, 140).astype(str)
+    av = rng.uniform(0.5, 3.0, 140)
+    br = rng.integers(0, 29, 170).astype(str)
+    bc = rng.integers(0, 23, 170).astype(str)
+    bv = rng.uniform(0.5, 3.0, 170)
+
+    ha = Assoc(ar, ac, av, aggregate="sum")
+    hb = Assoc(br, bc, bv, aggregate="sum")
+    da = DistAssoc.from_triples(ar, ac, av, mesh, aggregate="sum")
+    bt = AssocTensor.from_triples(br, bc, bv, aggregate="sum", capacity=256)
+    db = DistAssoc.from_triples(br, bc, bv, mesh, aggregate="sum")
+
+    want = ha.matmul(hb).to_dict()
+    for impl in ("auto_dist", "replicate", "all_to_all", "2d", "coo", "bsr"):
+        for tag, B in (("resident", db), ("staged", bt)):
+            close(da.matmul(B, impl=impl).to_assoc().to_dict(), want,
+                  tag=f"{impl}/{tag}")
+    assert PLAN_STATS["dist_2d"] >= 2, PLAN_STATS
+    assert PLAN_STATS["dist_all_to_all"] >= 2, PLAN_STATS
+
+    # every legal grid override agrees
+    for grid in ((8, 1), (4, 2), (2, 4), (1, 8)):
+        close(da.matmul(db, impl="2d", grid=grid).to_assoc().to_dict(),
+              want, tag=f"grid{grid}")
+
+    # full-semiring parity on the sharded strategies (resident B)
+    for name in sorted(REGISTRY):
+        sr = REGISTRY[name]
+        w = ha.matmul(hb, sr).to_dict()
+        for impl in ("replicate", "all_to_all", "2d"):
+            close(da.matmul(db, sr, impl=impl).to_assoc().to_dict(), w,
+                  tag=f"{name}/{impl}")
+
+    # fused reduce epilogues: replicate vs all-to-all, both axes
+    for axis in (0, 1):
+        rep = np.asarray(da.matmul_reduce(bt, axis=axis, impl="replicate"))
+        a2a = np.asarray(da.matmul_reduce(bt, axis=axis,
+                                          impl="all_to_all"))
+        auto = np.asarray(da.matmul_reduce(bt, axis=axis))
+        assert np.abs(rep).sum() > 0, axis
+        np.testing.assert_allclose(a2a, rep, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(auto, rep, rtol=1e-4, atol=1e-4)
+
+    # empty shards: 4 distinct row keys cannot populate 8 shards
+    er = np.array([str(i % 4) for i in range(24)])
+    ec = rng.integers(0, 29, 24).astype(str)
+    ev = rng.uniform(0.5, 3.0, 24)
+    de = DistAssoc.from_triples(er, ec, ev, mesh, aggregate="sum")
+    we = Assoc(er, ec, ev, aggregate="sum").matmul(hb).to_dict()
+    for impl in ("auto_dist", "replicate", "all_to_all", "2d"):
+        close(de.matmul(bt, impl=impl).to_assoc().to_dict(), we,
+              tag=f"empty/{impl}")
+
+    print(json.dumps({"ok": True}))
+""")
+
+
+@pytest.mark.slow
+def test_dist_spgemm_8dev():
+    p = subprocess.run([sys.executable, "-c", PROG], capture_output=True,
+                       text=True, timeout=900)
+    assert p.returncode == 0, p.stderr[-4000:]
+    last = [l for l in p.stdout.strip().splitlines() if l.startswith("{")][-1]
+    assert json.loads(last)["ok"], p.stdout
