@@ -60,14 +60,24 @@ def compare(baseline: List[Dict], new: List[Dict],
     }
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--new", required=True)
     ap.add_argument("--threshold", type=float, default=0.25)
-    args = ap.parse_args()
-    with open(args.baseline) as f:
-        baseline = json.load(f)
+    ap.add_argument("--strict", action="store_true",
+                    help="fail (exit 1) when the baseline file is missing "
+                         "instead of warn-and-pass")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        # First run of a new bench has nothing committed yet; the gate
+        # must not block the bootstrap commit that creates the baseline.
+        print(f"WARNING: baseline {args.baseline} not found — nothing to "
+              f"compare against (bootstrap run?)")
+        return 1 if args.strict else 0
     with open(args.new) as f:
         new = json.load(f)
     res = compare(baseline, new, threshold=args.threshold)

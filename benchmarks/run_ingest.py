@@ -1,0 +1,247 @@
+"""Dynamic-ingest benchmark: streaming mutation under concurrent reads.
+
+    PYTHONPATH=src python -m benchmarks.run_ingest [--smoke]
+        [--n 256] [--batch 256] [--batches 40] [--readers 2]
+        [--json BENCH_ingest.json]
+
+Boots an in-process :class:`~repro.serve.server.D4MServer` holding one
+device-layer **ingest** table, then measures the three numbers the LSM
+design trades between:
+
+* ``insert``          — sustained ingest throughput (triples/sec) for a
+  single writer streaming ``--batches`` batches of ``--batch`` triples
+  through ``POST /ingest``;
+* ``query_during``    — closed-loop query p50/p99 measured **while** the
+  writer is streaming (merge-on-read against a live delta, interleaved
+  with background compactions);
+* ``query_quiescent`` — the same query's p50/p99 after ingest stops and
+  the compactor has folded the delta away.  This is the baseline the
+  during-ingest number is judged against: it sees the table at its
+  final (grown) size, so the ratio isolates merge-on-read overhead from
+  the cost of simply having more data (a pre-ingest baseline would
+  conflate the two — the table grows ~3× during the run).
+
+Rows land in ``BENCH_ingest.json`` (``seconds`` = p50 latency for query
+rows, per-batch wall time for the insert row) so ``benchmarks/compare.py``
+gates regressions.  Structural gates: ingest throughput must be nonzero,
+at least one background compaction must have run, and — the ISSUE
+acceptance bar — during-ingest p50 must stay within 2× quiescent p50
+(checked in full runs; smoke runs only check structure, CI boxes jitter
+too much for a timing gate on tiny tables).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+def _query_payload():
+    from repro.serve import TableRef, to_wire
+    return to_wire(TableRef("mut").sum(axis=1))
+
+
+def _drive_readers(url: str, payload, stop: threading.Event,
+                   readers: int, min_each: int) -> List[float]:
+    """Closed-loop query threads; run until `stop` AND >= min_each."""
+    from repro.serve import D4MClient
+
+    lats: List[float] = []
+    lock = threading.Lock()
+    errs: List[Exception] = []
+
+    def loop():
+        c = D4MClient(url, timeout=300)
+        mine = []
+        try:
+            while len(mine) < min_each or not stop.is_set():
+                t0 = time.perf_counter()
+                c.query(payload)
+                mine.append(time.perf_counter() - t0)
+                if stop.is_set() and len(mine) >= min_each:
+                    break
+        except Exception as exc:
+            errs.append(exc)
+        with lock:
+            lats.extend(mine)
+
+    threads = [threading.Thread(target=loop) for _ in range(readers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errs:
+        raise errs[0]
+    return lats
+
+
+def run_ingest(n: int = 256, nnz: int = 4096, batch: int = 256,
+               batches: int = 40, readers: int = 2, workers: int = 4,
+               compact_threshold: int = 4096) -> List[Dict]:
+    from repro.serve import D4MClient, TableRegistry, start_server
+
+    registry = TableRegistry.from_specs([
+        {"name": "mut", "generator": "random", "n": n, "nnz": nnz,
+         "seed": 0, "layer": "device", "ingest": True,
+         "compact_threshold": compact_threshold},
+    ])
+    srv = start_server(registry, workers=workers)
+    admin = D4MClient(srv.url, timeout=300)
+    payload = _query_payload()
+    rows: List[Dict] = []
+    try:
+        # warm every trace the measurement will hit: query, merge-on-read
+        # (via one ingest + query), and a compaction
+        admin.query(payload)
+        admin.ingest("mut", [f"warm{i}" for i in range(batch)],
+                     [f"c{i % 8}" for i in range(batch)], [1.0] * batch)
+        admin.query(payload)
+        while admin.stats()["ingest"]["mut"]["delta_depth"] > 0:
+            time.sleep(0.05)
+        admin.query(payload)
+
+        # -- quiescent baseline ------------------------------------------
+        stop = threading.Event()
+        stop.set()
+        quiescent = _drive_readers(srv.url, payload, stop, readers,
+                                   min_each=max(8, batches // 2))
+        q_p50 = float(np.percentile(quiescent, 50))
+
+        # -- active ingest + concurrent reads ----------------------------
+        admin.reset_stats()
+        stop = threading.Event()
+        ins_lats: List[float] = []
+        werr: List[Exception] = []
+
+        def writer():
+            c = D4MClient(srv.url, timeout=300)
+            try:
+                for b in range(batches):
+                    rws = [f"b{b:04d}k{i:04d}" for i in range(batch)]
+                    cls = [f"c{i % 16}" for i in range(batch)]
+                    t0 = time.perf_counter()
+                    c.ingest("mut", rws, cls, [1.0] * batch)
+                    ins_lats.append(time.perf_counter() - t0)
+            except Exception as exc:
+                werr.append(exc)
+            finally:
+                stop.set()
+
+        wt = threading.Thread(target=writer)
+        t0 = time.perf_counter()
+        wt.start()
+        during = _drive_readers(srv.url, payload, stop, readers,
+                                min_each=max(8, batches // 2))
+        wt.join()
+        ingest_wall = time.perf_counter() - t0
+        if werr:
+            raise werr[0]
+        d_p50 = float(np.percentile(during, 50))
+
+        # -- post-compaction quiescent ------------------------------------
+        deadline = time.time() + 60
+        while admin.stats()["ingest"]["mut"]["delta_depth"] > 0 \
+                and time.time() < deadline:
+            time.sleep(0.05)
+        info = admin.stats()["ingest"]["mut"]
+        stop = threading.Event()
+        stop.set()
+        post = _drive_readers(srv.url, payload, stop, readers,
+                              min_each=max(8, batches // 2))
+        post_p50 = float(np.percentile(post, 50))
+
+        n_triples = batches * batch
+        rows.append({
+            "bench": "ingest", "impl": "insert", "n": n,
+            "seconds": float(np.percentile(ins_lats, 50)),
+            "nnz": n_triples,
+            "throughput_tps": n_triples / ingest_wall,
+            "batch": batch, "batches": batches,
+            "p99_s": float(np.percentile(ins_lats, 99)),
+            "compactions": info["compactions"],
+            "delta_depth_final": info["delta_depth"],
+            "merge_hit_rate": info["merge_hit_rate"],
+        })
+        rows.append({
+            "bench": "ingest", "impl": "query_during", "n": n,
+            "seconds": d_p50, "nnz": len(during),
+            "p50_s": d_p50, "p99_s": float(np.percentile(during, 99)),
+            "vs_quiescent": d_p50 / max(post_p50, 1e-12),
+            "readers": readers,
+        })
+        rows.append({
+            "bench": "ingest", "impl": "query_quiescent", "n": n,
+            "seconds": post_p50, "nnz": len(post),
+            "p50_s": post_p50,
+            "p99_s": float(np.percentile(post, 99)),
+            "pre_ingest_p50_s": q_p50, "readers": readers,
+        })
+    finally:
+        srv.close()
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny table + few batches (CI gate: structure "
+                         "only, no timing assertions)")
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--nnz", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--batches", type=int, default=40)
+    ap.add_argument("--readers", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--compact-threshold", type=int, default=4096)
+    ap.add_argument("--json", default="BENCH_ingest.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.n, args.nnz = min(args.n, 64), min(args.nnz, 512)
+        args.batch = min(args.batch, 64)
+        args.batches = min(args.batches, 8)
+
+    rows = run_ingest(n=args.n, nnz=args.nnz, batch=args.batch,
+                      batches=args.batches, readers=args.readers,
+                      workers=args.workers,
+                      compact_threshold=args.compact_threshold)
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = f"{r['bench']}[{r['impl']},n={r['n']}]"
+        if r["impl"] == "insert":
+            derived = (f"tps={r['throughput_tps']:.0f};"
+                       f"compactions={r['compactions']};"
+                       f"merge_hit_rate={r['merge_hit_rate']:.2f}")
+        else:
+            derived = f"p99_us={r['p99_s'] * 1e6:.0f}"
+            if "vs_quiescent" in r:
+                derived += f";vs_quiescent={r['vs_quiescent']:.2f}x"
+        print(f"{name},{r['seconds'] * 1e6:.1f},{derived}")
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    ins = next(r for r in rows if r["impl"] == "insert")
+    if ins["throughput_tps"] <= 0:
+        print("FAIL: zero ingest throughput")
+        return 1
+    if ins["compactions"] < 1:
+        print("FAIL: background compactor never ran during ingest")
+        return 1
+    if ins["delta_depth_final"] != 0:
+        print(f"FAIL: delta not fully compacted "
+              f"(depth={ins['delta_depth_final']})")
+        return 1
+    during = next(r for r in rows if r["impl"] == "query_during")
+    if not args.smoke and during["vs_quiescent"] > 2.0:
+        print(f"FAIL: during-ingest p50 is {during['vs_quiescent']:.2f}x "
+              f"quiescent (budget: 2x) — merge-on-read is too expensive")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

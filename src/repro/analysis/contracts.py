@@ -135,6 +135,7 @@ def _ensure_registry() -> None:
     import repro.core.assoc_tensor   # noqa: F401
     import repro.core.dist_assoc     # noqa: F401
     import repro.core.spgemm         # noqa: F401
+    import repro.ingest.merge        # noqa: F401
     import repro.serve.engine        # noqa: F401
 
 

@@ -460,6 +460,67 @@ def _probe_dist_matmul_bsr():
                        size=lambda: _matmul_bsr_prog.cache_info().currsize)
 
 
+# --------------------------------------------------------------------------
+# Dynamic ingest (repro.ingest): the LSM write/read path.  The append
+# canonicalize and both merge-on-read programs must be zero-collective
+# (delta batches are pre-routed to their owning row shard on host) and
+# never densify (the overlay output is O(capb + capd), never O(nr·nc));
+# small COO capacities over 4096-rank keyspaces keep the detector sharp.
+# --------------------------------------------------------------------------
+
+@probe_for("ingest.append")
+def _probe_ingest_append():
+    from repro.ingest.merge import _delta_canon_prog
+
+    r, c, v = _b_triples_sds()
+    yield "delta-canon", lower_hlo(_delta_canon_prog("sum"), r, c, v)
+
+    def run():
+        _delta_canon_prog("sum")
+
+    yield RetraceAudit(label="append-prog-cache", first=run, again=run,
+                       size=lambda: _delta_canon_prog.cache_info().currsize)
+
+
+@probe_for("ingest.merge_read")
+def _probe_ingest_merge_read():
+    import jax.numpy as jnp
+    from repro.ingest.merge import _merge_read_prog
+
+    br, bc, bv = _b_triples_sds()
+    dr, dc, dv = _b_triples_sds()
+    prog = _merge_read_prog("sum")
+    yield "overlay-merge", lower_hlo(prog, br, bc, bv, dr, dc, dv,
+                                     _sds((), jnp.int32))
+
+    def run():
+        _merge_read_prog("sum")
+
+    yield RetraceAudit(label="merge-prog-cache", first=run, again=run,
+                       size=lambda: _merge_read_prog.cache_info().currsize)
+
+
+@probe_for("ingest.dist_merge_read")
+def _probe_ingest_dist_merge():
+    import jax.numpy as jnp
+    from repro.ingest.merge import _dist_merge_prog
+
+    mesh = _abstract_mesh()
+    a = _coo_dict_sds()
+    d = _sds((_NSHARDS, _CAP), jnp.int32)
+    dv = _sds((_NSHARDS, _CAP), jnp.float32)
+    kmap = _sds((_NKEYS,), jnp.int32)
+    for label, rerank in [("shard-local", False), ("reranked", True)]:
+        prog = _dist_merge_prog(mesh, "sum", rerank)
+        yield label, lower_hlo(prog, a, d, d, dv, kmap, kmap)
+
+    def run():
+        _dist_merge_prog(mesh, "sum", True)
+
+    yield RetraceAudit(label="dist-merge-prog-cache", first=run, again=run,
+                       size=lambda: _dist_merge_prog.cache_info().currsize)
+
+
 @probe_for("DistAssoc.matmul_dense_vec")
 def _probe_dist_matvec():
     import jax.numpy as jnp

@@ -31,7 +31,7 @@ __all__ = ["KeySpace", "UNION_STATS", "clear_union_cache"]
 _UNION_CACHE: "OrderedDict" = OrderedDict()
 _UNION_CACHE_CAP = 256
 
-UNION_STATS = {"hits": 0, "misses": 0}
+UNION_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 # Guards LRU mutation + counter bumps under concurrent union() calls
 # (serve workers union keyspaces from many threads).
@@ -43,6 +43,7 @@ def clear_union_cache() -> None:
         _UNION_CACHE.clear()
         UNION_STATS["hits"] = 0
         UNION_STATS["misses"] = 0
+        UNION_STATS["evictions"] = 0
 
 
 class KeySpace:
@@ -169,7 +170,11 @@ class KeySpace:
             UNION_STATS["misses"] += 1
             if cache_key not in _UNION_CACHE:
                 while len(_UNION_CACHE) >= _UNION_CACHE_CAP:
+                    # streaming ingest mints fresh keyspaces every append
+                    # batch — count sheds so sustained-mutation workloads
+                    # can see the memo churning instead of helping
                     _UNION_CACHE.popitem(last=False)
+                    UNION_STATS["evictions"] += 1
                 _UNION_CACHE[cache_key] = (merged, self_map, other_map)
         return merged, self_map, other_map
 

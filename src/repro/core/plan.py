@@ -81,6 +81,9 @@ PLAN_STATS = {
     # which communication pattern the cost model — or an explicit impl=
     # override — actually ran
     "dist_replicate": 0, "dist_all_to_all": 0, "dist_2d": 0,
+    # plan-cache entries dropped because a compaction (repro.ingest)
+    # retired the Source arrays they were keyed on
+    "plan_invalidations": 0,
 }
 
 
@@ -124,6 +127,37 @@ def clear_plan_cache() -> None:
     the pinned references to their source arrays/selectors)."""
     with _PLAN_LOCK:
         _PLAN_CACHE.clear()
+
+
+def _key_touches(key, ids: set) -> bool:
+    """Does a structural plan key reference any ``("src", id)`` leaf with
+    an id in ``ids``?  Keys are nested tuples (expr.key())."""
+    if isinstance(key, tuple):
+        if len(key) == 2 and key[0] == "src" and key[1] in ids:
+            return True
+        return any(_key_touches(k, ids) for k in key)
+    return False
+
+
+def invalidate_plan_for(array_ids) -> int:
+    """Targeted invalidation: drop every cached plan whose key references
+    one of ``array_ids`` (``id()`` of retired Source arrays).
+
+    Used by ingest compaction (:mod:`repro.ingest`): the compacted table's
+    old base and merged snapshots are retired, and any plan keyed on them
+    would pin the dead arrays until LRU eviction.  Identity keys cannot
+    serve stale *results* (the new base is a new object ⇒ new key); this
+    hook reclaims the memory and keeps the LRU hot for live tables.
+    """
+    ids = set(array_ids)
+    if not ids:
+        return 0
+    with _PLAN_LOCK:
+        drop = [k for k in _PLAN_CACHE if _key_touches(k, ids)]
+        for k in drop:
+            del _PLAN_CACHE[k]
+        PLAN_STATS["plan_invalidations"] += len(drop)
+    return len(drop)
 
 
 def _layer(x) -> str:

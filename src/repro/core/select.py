@@ -621,6 +621,21 @@ def reset_cache_stats() -> None:
         CACHE_STATS["misses"] = 0
 
 
+def invalidate_compiled_for(digests) -> int:
+    """Drop compiled selectors keyed on any of ``digests`` (KeySpace content
+    hashes).  Ingest compaction retires a table's old keyspaces; their
+    compiled selectors can never be *wrong* (content-keyed), but they pin
+    rank tables for spaces no live table uses, so compaction sheds them."""
+    stale = set(digests)
+    if not stale:
+        return 0
+    with _COMPILE_LOCK:
+        drop = [k for k in _COMPILE_CACHE if k[0] in stale]
+        for k in drop:
+            del _COMPILE_CACHE[k]
+    return len(drop)
+
+
 def compile_selector(sel, space: KeySpace) -> Compiled:
     """Compile a selector (or raw index argument) against a KeySpace."""
     sel = as_selector(sel)

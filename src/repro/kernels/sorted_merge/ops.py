@@ -37,6 +37,25 @@ def rank_count(i, j, *, impl: str = "auto"):
 
 
 @partial(jax.jit, static_argnames=("impl",))
+def overlay_scatter(i, j, *, impl: str = "auto"):
+    """Union destination slots for an LSM overlay merge (base ⊕ delta).
+
+    ``i``/``j`` are sorted, repetition-free, sentinel-padded int32 key
+    arrays (base and delta linearized (row, col) keys).  Returns
+    ``(i_dst, j_dst, j_dup)``: scatter destinations into a
+    ``len(i) + len(j)`` output where a key present in both collapses onto
+    one shared slot (``j_dup`` flags those delta entries so the caller can
+    ⊕-combine instead of overwrite), and sentinel entries are routed to
+    the out-of-bounds slot so ``.at[dst].set(..., mode="drop")`` discards
+    them without a mask pass."""
+    i_pos, j_pos, j_dup = merge_positions(i, j, impl=impl)
+    oob = jnp.int32(i.shape[0] + j.shape[0])
+    i_dst = jnp.where(i != INT_SENTINEL, i_pos, oob)
+    j_dst = jnp.where(j != INT_SENTINEL, j_pos, oob)
+    return i_dst, j_dst, j_dup
+
+
+@partial(jax.jit, static_argnames=("impl",))
 def merge_positions(i, j, *, impl: str = "auto"):
     """UNION positions for two sorted, repetition-free, sentinel-padded
     int32 arrays — duplicates collapse onto one shared slot.

@@ -19,11 +19,18 @@ cross-collect ``_PLAN_CACHE`` across requests and clients.
   a batch so the mesh stays busy; per-request timing; per-worker
   ``MetricsStore`` telemetry ⊕-merged at read time.
 * :mod:`~repro.serve.server`   — stdlib ``ThreadingHTTPServer`` JSON
-  transport (``/query``, ``/tables``, ``/stats``, ``/health``) + CLI.
+  transport (``/query``, ``/ingest``, ``/tables``, ``/stats``,
+  ``/health``) + CLI.
 * :mod:`~repro.serve.client`   — thin stdlib HTTP client.
+
+Dynamic ingest (:mod:`repro.ingest`) plugs in here: a table registered
+as an :class:`~repro.ingest.IngestTable` accepts ``POST /ingest`` triple
+batches, queries against it resolve to its merge-on-read snapshot, and
+the engine runs a background compactor.
 """
 from .wire import (TableRef, WireError, from_wire, to_wire, sel_from_wire,
-                   sel_to_wire, register_predicate)
+                   sel_to_wire, register_predicate, ingest_from_wire,
+                   ingest_to_wire)
 from .registry import TableRegistry
 from .engine import Engine, serve_execute
 from .server import D4MServer, start_server
@@ -31,7 +38,7 @@ from .client import D4MClient, ServerError
 
 __all__ = [
     "TableRef", "WireError", "from_wire", "to_wire", "sel_from_wire",
-    "sel_to_wire", "register_predicate", "TableRegistry", "Engine",
-    "serve_execute", "D4MServer", "start_server", "D4MClient",
-    "ServerError",
+    "sel_to_wire", "register_predicate", "ingest_from_wire",
+    "ingest_to_wire", "TableRegistry", "Engine", "serve_execute",
+    "D4MServer", "start_server", "D4MClient", "ServerError",
 ]

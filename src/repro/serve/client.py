@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional
 
 from repro.core.expr import LazyExpr
 
-from .wire import to_wire
+from .wire import ingest_to_wire, to_wire
 
 __all__ = ["D4MClient", "ServerError"]
 
@@ -68,6 +68,16 @@ class D4MClient:
         if options:
             body["options"] = options
         return self._request("/query", body)
+
+    def ingest(self, table: str, rows, cols, vals,
+               options: Optional[Dict[str, Any]] = None) -> dict:
+        """POST one triple batch against a registered ingest table;
+        returns ``{"result": {"kind": "ingest", "accepted",
+        "delta_depth", "version", ...}, "timing": ...}``."""
+        body: Dict[str, Any] = ingest_to_wire(table, rows, cols, vals)
+        if options:
+            body["options"] = options
+        return self._request("/ingest", body)
 
     def tables(self) -> list:
         return self._request("/tables")["tables"]

@@ -24,6 +24,13 @@ planner:
   cross-thread reduction that a conventional metrics library needs locks
   for.
 
+Ingest batches (``POST /ingest``) flow through the same queue under
+disjoint admission keys — ``("ingest", table)`` vs ``("query", ...)`` —
+so a mutation never batches with reads on the table it mutates; queries
+over ingest tables bind their merge-on-read snapshot at execution time.
+When the registry holds ingest tables the engine also runs a background
+:class:`~repro.ingest.Compactor`.
+
 The execution entry point :func:`serve_execute` carries a ``@contract``:
 shard-local serve queries inherit the zero-collective / never-densify
 budgets of the ops they dispatch, and ``tools/d4mcheck`` sweeps the serve
@@ -42,7 +49,7 @@ from repro.analysis.contracts import contract
 from repro.distributed.metrics import MetricsStore
 
 from .registry import TableRegistry
-from .wire import WireError, from_wire, table_names
+from .wire import WireError, from_wire, ingest_from_wire, table_names
 
 __all__ = ["Engine", "QueryError", "serve_execute", "format_result"]
 
@@ -108,16 +115,23 @@ def format_result(res, limit: Optional[int] = None) -> Dict[str, Any]:
 
 
 class _Request:
-    """One admitted query: decoded expression + its future-ish result."""
+    """One admitted request (query or ingest batch) + its future-ish
+    result.  ``expr`` is ``None`` for ingest requests and for queries
+    over ingest tables (those bind at execution time so the merge-on-read
+    snapshot reflects every mutation admitted ahead of them)."""
 
     __slots__ = ("payload", "expr", "options", "batch_key", "t_enqueue",
-                 "event", "result", "error", "timing", "batch_size")
+                 "event", "result", "error", "timing", "batch_size",
+                 "kind", "data")
 
-    def __init__(self, payload, expr, options, batch_key):
+    def __init__(self, payload, expr, options, batch_key, *,
+                 kind: str = "query", data=None):
         self.payload = payload
         self.expr = expr
         self.options = options
         self.batch_key = batch_key
+        self.kind = kind
+        self.data = data
         self.t_enqueue = time.perf_counter()
         self.event = threading.Event()
         self.result: Optional[dict] = None
@@ -139,12 +153,17 @@ class Engine:
 
     def __init__(self, registry: TableRegistry, *, workers: int = 4,
                  max_batch: int = 8, batch_window_s: float = 0.0,
-                 default_limit: Optional[int] = 100_000):
+                 default_limit: Optional[int] = 100_000,
+                 compact_interval_s: float = 0.05,
+                 compact_idle_s: float = 0.25):
         self.registry = registry
         self.workers = max(1, int(workers))
         self.max_batch = max(1, int(max_batch))
         self.batch_window_s = float(batch_window_s)
         self.default_limit = default_limit
+        self.compact_interval_s = float(compact_interval_s)
+        self.compact_idle_s = float(compact_idle_s)
+        self._compactor = None
         self._queue: deque = deque()
         self._cv = threading.Condition()
         self._threads: List[threading.Thread] = []
@@ -167,9 +186,17 @@ class Engine:
                                  name=f"d4m-serve-worker-{i}", daemon=True)
             t.start()
             self._threads.append(t)
+        if self.registry.ingest_names() and self.compact_interval_s > 0:
+            from repro.ingest import Compactor
+            self._compactor = Compactor(
+                self.registry, interval_s=self.compact_interval_s,
+                idle_s=self.compact_idle_s).start()
         return self
 
     def stop(self) -> None:
+        if self._compactor is not None:
+            self._compactor.stop()
+            self._compactor = None
         with self._cv:
             self._stop = True
             self._cv.notify_all()
@@ -186,24 +213,63 @@ class Engine:
 
     # -- admission ----------------------------------------------------------
     def _admission_key(self, payload) -> tuple:
-        """Compatibility key: (table names, their layers).  Same key ⇒
-        same resident operands and same execution layer ⇒ batchable."""
+        """Compatibility key: ``("query", table names, their layers)``.
+        Same key ⇒ same resident operands and same execution layer ⇒
+        batchable.  The ``"query"`` tag keeps the key space disjoint from
+        ingest admission keys (``("ingest", table)``), so a mutation never
+        batches with reads on the table it mutates."""
         tables = table_names(payload)
         if not tables:
             raise WireError("bad_payload",
                             "query references no tables")
         layers = tuple(self.registry.layer_of(n) for n in tables)
-        return (tables, layers)
+        return ("query", tables, layers)
 
     def submit(self, payload, options: Optional[dict] = None) -> _Request:
         """Validate + enqueue one wire payload; returns the request handle
         (``.wait()`` for the result).  Malformed payloads raise
-        :class:`WireError` synchronously — they never enter the queue."""
+        :class:`WireError` synchronously — they never enter the queue.
+
+        Queries over read-only tables bind their ``Source`` arrays here
+        (plan-cache keys resolve once); queries touching an ingest table
+        only *validate* here and bind at execution time, so the snapshot
+        they read reflects mutations admitted ahead of them."""
         if not self._started:
             raise RuntimeError("engine not started")
-        expr = from_wire(payload, resolve=self.registry.resolve)
-        key = self._admission_key(payload)
+        from_wire(payload, resolve=None)        # structural validation first
+        key = self._admission_key(payload)      # then table-name checks
+        tables = key[1]
+        if any(self.registry.is_ingest(n) for n in tables):
+            expr = None                         # bind at execution time
+        else:
+            expr = from_wire(payload, resolve=self.registry.resolve)
         req = _Request(payload, expr, dict(options or {}), key)
+        with self._cv:
+            self._queue.append(req)
+            self._cv.notify()
+        return req
+
+    def submit_ingest(self, payload,
+                      options: Optional[dict] = None) -> _Request:
+        """Validate + enqueue one ingest batch (the POST /ingest body).
+        Decoding and table checks are synchronous — ``WireError`` codes
+        ``bad_batch`` / ``not_ingestable`` / ``unknown_table`` never enter
+        the queue.  The admission key is ``("ingest", table)``: disjoint
+        from every query key, so a mutation batch is only ever admitted
+        with other mutations of the same table (applied in queue order).
+
+        Ordering: within one synchronous client connection ingest→query
+        is read-your-writes (the client holds the ingest response before
+        it sends the read).  Across connections the only guarantee is
+        queue order of *admission*; concurrent workers may overlap an
+        ingest with an independent query."""
+        if not self._started:
+            raise RuntimeError("engine not started")
+        name, rows, cols, vals = ingest_from_wire(payload)
+        self.registry.ingest_table(name)        # raises if not ingestable
+        req = _Request(payload, None, dict(options or {}),
+                       ("ingest", name), kind="ingest",
+                       data=(name, rows, cols, vals))
         with self._cv:
             self._queue.append(req)
             self._cv.notify()
@@ -213,6 +279,11 @@ class Engine:
               timeout: Optional[float] = 120.0) -> dict:
         """Synchronous submit + wait (the in-process client path)."""
         return self.submit(payload, options).wait(timeout)
+
+    def ingest(self, payload, options: Optional[dict] = None,
+               timeout: Optional[float] = 120.0) -> dict:
+        """Synchronous ingest submit + wait."""
+        return self.submit_ingest(payload, options).wait(timeout)
 
     # -- the worker ---------------------------------------------------------
     def _take_batch(self) -> List[_Request]:
@@ -263,9 +334,22 @@ class Engine:
                 req.batch_size = len(batch)
                 t0 = time.perf_counter()
                 try:
-                    res = serve_execute(req.expr)
-                    limit = req.options.get("limit", self.default_limit)
-                    body = format_result(res, limit=limit)
+                    if req.kind == "ingest":
+                        name, rows, cols, vals = req.data
+                        table = self.registry.ingest_table(name)
+                        out = table.insert(rows, cols, vals)
+                        body = {"kind": "ingest", "table": name,
+                                "version": table.version, **out}
+                        store.log(0, {"ingests": 1.0,
+                                      "ingest_triples":
+                                          float(out["accepted"])})
+                    else:
+                        if req.expr is None:    # ingest-table query: bind now
+                            req.expr = from_wire(
+                                req.payload, resolve=self.registry.resolve)
+                        res = serve_execute(req.expr)
+                        limit = req.options.get("limit", self.default_limit)
+                        body = format_result(res, limit=limit)
                 except (WireError, QueryError) as exc:
                     req.error = exc
                 except Exception as exc:   # execution-time type errors etc.
@@ -318,7 +402,7 @@ class Engine:
         server["uptime_s"] = time.time() - self.t_start
         if n_req and server.get("latency_s") is not None:
             server["latency_mean_s"] = server["latency_s"] / n_req
-        return {
+        out = {
             "server": server,
             "plan": dict(PLAN_STATS),
             "cache": dict(CACHE_STATS),
@@ -327,6 +411,11 @@ class Engine:
             "queue_depth": len(self._queue),
             "workers": self.workers,
         }
+        ingest_names = self.registry.ingest_names()
+        if ingest_names:
+            out["ingest"] = {n: self.registry.ingest_table(n).info()
+                             for n in ingest_names}
+        return out
 
     def reset_stats(self) -> None:
         """Zero core + server telemetry (a fresh measurement window —

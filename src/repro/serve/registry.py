@@ -17,6 +17,11 @@ Spec format (one dict per table, JSON-friendly)::
 
 ``layer`` is ``host`` (default) / ``device`` / ``dist``; ``dist`` shards
 over ``mesh`` (default: a 1-D ``data`` mesh over every visible device).
+``"ingest": true`` wraps the loaded array in an
+:class:`~repro.ingest.IngestTable` so ``POST /ingest`` can mutate it;
+queries against an ingest table resolve to its merge-on-read
+``snapshot()`` (stable object identity between mutations, so the plan
+cache still hits).
 """
 from __future__ import annotations
 
@@ -101,10 +106,14 @@ class TableRegistry:
     # -- registration -------------------------------------------------------
     def register(self, name: str, array) -> Any:
         from repro.core import Assoc, AssocTensor, DistAssoc
-        if not isinstance(array, (Assoc, AssocTensor, DistAssoc)):
+        from repro.ingest import IngestTable
+        if not isinstance(array, (Assoc, AssocTensor, DistAssoc,
+                                  IngestTable)):
             raise TypeError(
-                f"table {name!r}: expected Assoc/AssocTensor/DistAssoc, "
-                f"got {type(array).__name__}")
+                f"table {name!r}: expected Assoc/AssocTensor/DistAssoc/"
+                f"IngestTable, got {type(array).__name__}")
+        if isinstance(array, IngestTable) and not array.name:
+            array.name = str(name)
         with self._lock:
             self._tables[str(name)] = array
         return array
@@ -134,6 +143,12 @@ class TableRegistry:
                                          aggregate=aggregate)
         else:
             raise ValueError(f"table {name!r}: unknown layer {layer!r}")
+        if spec.get("ingest"):
+            from repro.ingest import IngestTable
+            arr = IngestTable(
+                arr, aggregate=aggregate,
+                compact_threshold=int(spec.get("compact_threshold", 4096)),
+                name=name)
         return self.register(name, arr)
 
     @classmethod
@@ -155,8 +170,39 @@ class TableRegistry:
         return arr
 
     def resolve(self, name: str):
-        """The ``from_wire`` resolver (alias of :meth:`get`)."""
-        return self.get(name)
+        """The ``from_wire`` resolver.  Plain tables resolve to the
+        resident array itself; ingest tables resolve to their current
+        merge-on-read :meth:`~repro.ingest.IngestTable.snapshot` (memoized
+        per mutation, so ``id(array)`` — and with it every plan-cache
+        key — is stable between writes)."""
+        from repro.ingest import IngestTable
+        arr = self.get(name)
+        if isinstance(arr, IngestTable):
+            return arr.snapshot()
+        return arr
+
+    # -- ingest accessors ----------------------------------------------------
+    def is_ingest(self, name: str) -> bool:
+        from repro.ingest import IngestTable
+        return isinstance(self.get(name), IngestTable)
+
+    def ingest_table(self, name: str):
+        """The raw :class:`~repro.ingest.IngestTable` (for mutation);
+        raises ``WireError("not_ingestable")`` on a read-only table."""
+        from repro.ingest import IngestTable
+        arr = self.get(name)
+        if not isinstance(arr, IngestTable):
+            raise WireError(
+                "not_ingestable",
+                f"table {name!r} is a read-only {type(arr).__name__}; "
+                f"register it with ingest=true to accept mutations")
+        return arr
+
+    def ingest_names(self) -> List[str]:
+        from repro.ingest import IngestTable
+        with self._lock:
+            return sorted(n for n, a in self._tables.items()
+                          if isinstance(a, IngestTable))
 
     def names(self) -> List[str]:
         with self._lock:
@@ -164,17 +210,35 @@ class TableRegistry:
 
     def wire_names(self) -> Dict[int, str]:
         """``id(array) -> name`` map for serializing server-side graphs."""
+        from repro.ingest import IngestTable
         with self._lock:
-            return {id(a): n for n, a in self._tables.items()}
+            out = {}
+            for n, a in self._tables.items():
+                out[id(a)] = n
+                if isinstance(a, IngestTable):
+                    out[id(a.base)] = n
+            return out
 
     def layer_of(self, name: str) -> str:
         from repro.core.plan import _layer
-        return _layer(self.get(name))
+        from repro.ingest import IngestTable
+        arr = self.get(name)
+        if isinstance(arr, IngestTable):
+            arr = arr.base
+        return _layer(arr)
 
     # -- introspection (the /tables endpoint) -------------------------------
     def info(self, name: str) -> Dict[str, Any]:
-        from repro.core import Assoc, AssocTensor, DistAssoc
+        from repro.ingest import IngestTable
         arr = self.get(name)
+        if isinstance(arr, IngestTable):
+            base_info = self._array_info(name, arr.base)
+            base_info.update(arr.info())
+            return base_info
+        return self._array_info(name, arr)
+
+    def _array_info(self, name: str, arr) -> Dict[str, Any]:
+        from repro.core import Assoc, AssocTensor, DistAssoc
         if isinstance(arr, Assoc):
             return {"name": name, "layer": "host", "shape": list(arr.shape),
                     "nnz": int(arr.nnz()), "numeric": bool(arr.numeric)}

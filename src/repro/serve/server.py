@@ -6,6 +6,11 @@ Endpoints (all JSON):
   200 → ``{"result": ..., "timing": {...}, "batch": k}``; malformed
   payloads → 400 with ``{"error": {"code", "message"}}`` (never a bare
   500 for wire errors).
+* ``POST /ingest`` — body ``{"ingest": {"table", "rows", "cols",
+  "vals"}}`` (see :func:`~repro.serve.wire.ingest_to_wire`); 200 →
+  ``{"result": {"kind": "ingest", "accepted", "delta_depth",
+  "version"}}``; malformed batches → 400 ``bad_batch``, read-only
+  tables → 400 ``not_ingestable``.
 * ``GET /tables``  — registry listing (name/layer/shape/nnz per table).
 * ``GET /stats``   — server request/latency/batch metrics ⊕-merged across
   workers + the core telemetry dicts (``plan``/``cache``/``union``/
@@ -83,7 +88,7 @@ class _Handler(BaseHTTPRequestHandler):
                 self.engine.reset_stats()
                 self._send(200, {"status": "reset"})
                 return
-            if self.path != "/query":
+            if self.path not in ("/query", "/ingest"):
                 self._error(404, "not_found", f"no endpoint {self.path!r}")
                 return
             length = int(self.headers.get("Content-Length", 0))
@@ -96,17 +101,26 @@ class _Handler(BaseHTTPRequestHandler):
             except (ValueError, UnicodeDecodeError) as exc:
                 self._error(400, "bad_payload", f"invalid JSON: {exc}")
                 return
-            if not isinstance(body, dict) or "expr" not in body:
-                self._error(400, "bad_payload",
-                            "body must be {'expr': <wire payload>, "
-                            "'options': {...}?}")
+            if not isinstance(body, dict):
+                self._error(400, "bad_payload", "body must be a JSON dict")
                 return
             options = body.get("options") or {}
             if not isinstance(options, dict):
                 self._error(400, "bad_payload", "'options' must be a dict")
                 return
             try:
-                req = self.engine.submit(body["expr"], options)
+                if self.path == "/ingest":
+                    # accept either a bare wire payload or {"ingest": ...}
+                    # nested like /query's {"expr": ...}
+                    payload = body if "ingest" in body else body.get("expr")
+                    req = self.engine.submit_ingest(payload, options)
+                else:
+                    if "expr" not in body:
+                        self._error(400, "bad_payload",
+                                    "body must be {'expr': <wire payload>, "
+                                    "'options': {...}?}")
+                        return
+                    req = self.engine.submit(body["expr"], options)
                 out = req.wait(timeout=float(options.get("timeout_s", 120)))
             except WireError as exc:
                 self._error(400, exc.code, str(exc))

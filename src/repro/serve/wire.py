@@ -48,7 +48,7 @@ from repro.core.semiring import get_semiring
 
 __all__ = ["WIRE_VERSION", "WireError", "TableRef", "to_wire", "from_wire",
            "sel_to_wire", "sel_from_wire", "register_predicate",
-           "table_names"]
+           "table_names", "ingest_to_wire", "ingest_from_wire"]
 
 WIRE_VERSION = 1
 
@@ -352,6 +352,79 @@ def from_wire(payload: Any,
         raise WireError("bad_payload",
                         f"'root' must be a valid node id, got {root!r}")
     return decoded[root]
+
+
+# ---------------------------------------------------------------------------
+# Ingest batches ⇄ JSON (the POST /ingest payload)
+# ---------------------------------------------------------------------------
+
+def ingest_to_wire(table: str, rows, cols, vals) -> dict:
+    """Serialize one triple batch against a registry ingest table::
+
+        {"version": 1,
+         "ingest": {"table": "edges",
+                    "rows": [...], "cols": [...], "vals": [...]}}
+
+    Keys may be strings or numbers; values must be numbers for device/
+    dist tables (the server enforces the layer rule at insert time).
+    """
+    def _k(x):
+        return str(x) if isinstance(x, str) or (
+            hasattr(x, "dtype") and np.asarray(x).dtype.kind in "USO") \
+            else float(x)
+
+    return {"version": WIRE_VERSION,
+            "ingest": {"table": str(table),
+                       "rows": [_k(x) for x in rows],
+                       "cols": [_k(x) for x in cols],
+                       "vals": [str(v) if isinstance(v, str) else float(v)
+                                for v in vals]}}
+
+
+def _ingest_axis(batch: dict, field: str) -> np.ndarray:
+    xs = batch.get(field)
+    if not isinstance(xs, list) or not xs:
+        raise WireError("bad_batch",
+                        f"ingest batch needs a nonempty {field!r} list")
+    if all(isinstance(x, str) for x in xs):
+        return np.asarray(xs, dtype=str)
+    if all(isinstance(x, (int, float)) and not isinstance(x, bool)
+           for x in xs):
+        return np.asarray(xs, dtype=np.float64)
+    raise WireError("bad_batch",
+                    f"ingest batch {field!r} must be all-string or "
+                    f"all-numeric scalars")
+
+
+def ingest_from_wire(payload: Any):
+    """Decode + validate an ingest payload → ``(table, rows, cols, vals)``
+    numpy arrays.  Raises :class:`WireError` (code ``bad_batch`` for a
+    malformed batch) — invalid batches never reach the engine queue."""
+    if not isinstance(payload, dict):
+        raise WireError("bad_payload",
+                        f"payload must be a dict, got "
+                        f"{type(payload).__name__}")
+    if payload.get("version") != WIRE_VERSION:
+        raise WireError("bad_version",
+                        f"unsupported wire version "
+                        f"{payload.get('version')!r} (expected "
+                        f"{WIRE_VERSION})")
+    batch = payload.get("ingest")
+    if not isinstance(batch, dict):
+        raise WireError("bad_payload",
+                        "ingest payload needs an 'ingest' dict")
+    name = batch.get("table")
+    if not isinstance(name, str) or not name:
+        raise WireError("bad_batch",
+                        "ingest batch needs a string 'table' name")
+    rows = _ingest_axis(batch, "rows")
+    cols = _ingest_axis(batch, "cols")
+    vals = _ingest_axis(batch, "vals")
+    if not (len(rows) == len(cols) == len(vals)):
+        raise WireError("bad_batch",
+                        f"rows/cols/vals must have equal length, got "
+                        f"{len(rows)}/{len(cols)}/{len(vals)}")
+    return name, rows, cols, vals
 
 
 def table_names(payload: Any) -> tuple:

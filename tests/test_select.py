@@ -237,9 +237,11 @@ def test_union_memo():
     x = KeySpace(["a", "b"])
     y = KeySpace(["b", "c"])
     x.union(y)
-    assert keyspace_mod.UNION_STATS == {"hits": 0, "misses": 1}
+    assert keyspace_mod.UNION_STATS == {"hits": 0, "misses": 1,
+                                        "evictions": 0}
     x.union(y)
-    assert keyspace_mod.UNION_STATS == {"hits": 1, "misses": 1}
+    assert keyspace_mod.UNION_STATS == {"hits": 1, "misses": 1,
+                                        "evictions": 0}
     # repeated device adds on the same keyspace pair reuse the merge
     d1 = AssocTensor.from_triples(["a"], ["x"], [1.0], capacity=8)
     d2 = AssocTensor.from_triples(["b"], ["y"], [2.0], capacity=8)

@@ -140,7 +140,8 @@ def test_engine_admission_key_groups_by_tables_and_layer(engine):
     assert k1 == k2                      # same tables, batchable
     k3 = engine._admission_key(to_wire(TableRef("hostt")[:, :]))
     assert k3 != k1                      # different table set / layer
-    assert k3[1] == ("host",)
+    assert k3[0] == "query"              # disjoint from ("ingest", name)
+    assert k3[2] == ("host",)
 
 
 def test_engine_batches_compatible_requests(registry):
